@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py contract: name,us_per_call,derived CSV lines."""
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,84 @@
+"""Roofline table generator: dryrun_results.json -> EXPERIMENTS table.
+
+Reads the dry-run sweep cache (launch/dryrun.py) and renders the
+per-cell three-term roofline with dominant bottleneck, useful-flop
+ratio, and the one-line "what would move the dominant term" note.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from benchmarks.common import emit
+
+DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "dryrun_results.json")
+
+NOTES = {
+    "collective": ("shrink TP/FSDP traffic: fewer per-layer "
+                   "all-gathers/all-reduces (sharding constraints, "
+                   "bf16 grads, overlap)"),
+    "memory": "cut HBM streaming: fuse cache update, smaller remat set",
+    "compute": "raise MXU utilization: bigger tiles, less recompute",
+}
+
+
+def load(path: str = DEFAULT) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(path: str = DEFAULT, mesh: str = "1pod",
+          verbose: bool = True) -> list:
+    res = load(path)
+    rows = []
+    for key, v in sorted(res.items()):
+        if not key.endswith(mesh):
+            continue
+        if v.get("status") == "skipped":
+            rows.append((key, "skipped", v.get("reason", "")))
+            continue
+        if v.get("status") != "ok" or "roofline" not in v:
+            continue
+        rl = v["roofline"]
+        rows.append((
+            key, rl["dominant"],
+            dict(t_compute=rl["t_compute_s"], t_memory=rl["t_memory_s"],
+                 t_collective=rl["t_collective_s"],
+                 useful=rl["useful_flop_fraction"],
+                 frac=rl["roofline_fraction"],
+                 mem_gib=v.get("memory", {}).get("per_device_gib"))))
+    if verbose:
+        print(f"# roofline ({mesh})")
+        print("# %-40s %10s %10s %10s %-10s %7s %7s %7s" % (
+            "cell", "t_comp(s)", "t_mem(s)", "t_coll(s)", "dominant",
+            "useful", "RLfrac", "GiB"))
+        for key, dom, d in rows:
+            if dom == "skipped":
+                print(f"# {key:<40s} SKIPPED: {d}")
+                continue
+            print("# %-40s %10.4f %10.4f %10.4f %-10s %7.3f %7.3f %7.2f"
+                  % (key, d["t_compute"], d["t_memory"],
+                     d["t_collective"], dom, d["useful"], d["frac"],
+                     d["mem_gib"] or 0))
+    ok_rows = [r for r in rows if r[1] != "skipped"]
+    if ok_rows:
+        worst = min(ok_rows, key=lambda r: r[2]["frac"])
+        emit("roofline_cells_ok", float(len(ok_rows)), f"mesh={mesh}")
+        emit("roofline_worst_cell", worst[2]["frac"],
+             worst[0].replace(",", ";"))
+    return rows
+
+
+def run(verbose=True):
+    if not os.path.exists(DEFAULT):
+        print("# roofline: no dryrun_results.json yet — run "
+              "`python -m repro.launch.dryrun --all`")
+        return []
+    return table(verbose=verbose)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus `# ...` context
+lines).  Figures covered: 3 (granularity), 5 (cone), 6 (barrier
+removal), 7 (strong scaling), 8 (wallclock/crossover), 9 (thread
+overhead), and the roofline table from the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3_granularity, fig5_cone, fig6_barrier,
+                            fig7_scaling, fig8_wallclock,
+                            fig9_overhead, roofline)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (fig3_granularity, fig5_cone, fig6_barrier,
+                fig7_scaling, fig8_wallclock, fig9_overhead,
+                roofline):
+        try:
+            mod.run(verbose=True)
+        except Exception:
+            failures += 1
+            print(f"# BENCH FAILED: {mod.__name__}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

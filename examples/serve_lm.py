@@ -1,0 +1,39 @@
+"""Batched serving demo: continuous batching over a slot pool.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = configs.get_reduced("yi-6b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, slots=4, max_len=160,
+                        prefill_buckets=(32, 64))
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for rid in range(10):
+        n = int(rng.integers(8, 60))
+        eng.submit(Request(
+            rid, rng.integers(0, cfg.vocab_size, size=n)
+            .astype(np.int32), max_new_tokens=12))
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    tok = sum(len(c.tokens) for c in eng.completions)
+    print(f"{len(eng.completions)} completions, {tok} tokens, "
+          f"{dt:.2f}s ({tok / dt:.1f} tok/s incl. compile)")
+    for c in eng.completions[:5]:
+        print(f"  rid={c.rid:2d} prefill={c.prefill_s * 1e3:6.0f}ms "
+              f"decode={c.decode_s * 1e3:6.0f}ms tokens={c.tokens[:6]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end LM training driver on the host (CPU) mesh.
+
+Trains a ~10M-parameter llama-style model (the yi-6b family scaled to
+what one CPU core can push through a few hundred steps) on the
+deterministic Markov corpus; loss drops well below the unigram entropy.
+Checkpointing + failure recovery use the same code path as the pod
+driver.  Scale d_model/layers up on real hardware.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import dataclasses
+
+import repro.configs as configs
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    base = configs.get("yi-6b")
+    arch = dataclasses.replace(
+        base, name="yi-host-10m", n_layers=args.layers,
+        d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        d_ff=4 * args.d_model, vocab_size=4096, head_dim=0,
+        dtype="float32", loss_chunk=64, microbatch_per_device=4)
+    print(f"training {arch.name}: "
+          f"{arch.param_count() / 1e6:.1f}M params, "
+          f"{args.steps} steps x {args.batch}x{args.seq} tokens")
+    _, _, losses = train(arch, args.steps, args.batch, args.seq,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                         log_every=20)
+    import numpy as np
+    first = np.mean([l for _, l in losses[:10]])
+    last = np.mean([l for _, l in losses[-10:]])
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({'LEARNING' if last < first - 0.2 else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""repro: A ParalleX/HPX-style execution-model framework in JAX.
+
+Reproduction (and TPU-native extension) of
+"An Application Driven Analysis of the ParalleX Execution Model"
+(Anderson, Brodowicz, Kaiser, Sterling; 2011).
+
+Layers
+------
+core/         ParalleX model: LCOs (futures, dataflow), parcels, AGAS,
+              localities, the dataflow scheduler (DAG -> compiled rounds +
+              work-queue simulator), task-granularity control.
+amr/          The paper's application: 1+1D Berger-Oliger AMR for the
+              semilinear wave equation (p=7), with barrier (CSP/MPI-style)
+              and barrier-free (dataflow) engines.
+models/       Assigned LM-architecture pool (dense/GQA/SWA, MoE, SSM, hybrid,
+              audio/VLM backbones).
+kernels/      Pallas TPU kernels (stencil RK3 update, flash attention,
+              selective scan) with jnp oracles.
+distributed/  Sharding rules, hierarchical collectives, gradient compression.
+optim/ data/ checkpoint/ ft/ serving/   Substrate.
+configs/      Assigned architecture configs + the paper's AMR config.
+launch/       Mesh construction, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""The paper's AMR application: semilinear wave, Berger-Oliger +
+tapering, barrier vs. barrier-free (dataflow) engines."""
+
+from repro.amr.engines import (BarrierEngine, CompiledDataflowEngine,
+                               DataflowEngine, EngineConfig, RunResult,
+                               compare_engines)
+from repro.amr.hierarchy import (TAPER, HierarchyError, LevelSpec,
+                                 LevelState, default_specs,
+                                 enumerate_window_ops, make_hierarchy,
+                                 run_ops_lockstep)
+from repro.amr.taskgraph import (CostModel, WindowGraph, assign_owners,
+                                 build_window_graph, run_window,
+                                 timestep_front)
+from repro.amr.wave import (H, NFIELDS, WaveProblem, energy,
+                            fused_rk3_block, global_step, grid,
+                            initial_data, linf)
+
+__all__ = [
+    "BarrierEngine", "CompiledDataflowEngine", "DataflowEngine",
+    "EngineConfig", "RunResult", "compare_engines", "TAPER",
+    "HierarchyError", "LevelSpec", "LevelState", "default_specs",
+    "enumerate_window_ops", "make_hierarchy", "run_ops_lockstep",
+    "CostModel", "WindowGraph", "assign_owners", "build_window_graph",
+    "run_window", "timestep_front", "H", "NFIELDS", "WaveProblem",
+    "energy", "fused_rk3_block", "global_step", "grid", "initial_data",
+    "linf",
+]

@@ -1,0 +1,337 @@
+"""Berger-Oliger AMR hierarchy with tapered coarse-fine boundaries.
+
+Paper, Sec. III: "The AMR algorithm is Berger-Oliger [30] but uses
+tapering at coarse-fine interfaces [32]" (Lehner-Liebling-Reula 2006).
+
+Tapering: at every coarse-time alignment the fine level's boundary
+bands are filled by *space-only* interpolation from the parent over a
+taper of T = 2 * H = 6 fine cells per interior side.  Each fine substep
+consumes H = 3 cells of taper validity per side, so after the 2 fine
+substeps of one parent step the valid region is exactly the fine region
+proper — no interpolation in time is ever needed, which is what lets a
+fine-block task's domain of dependence be expressed as plain dataflow
+edges (and is why the paper pairs tapering with ParalleX).
+
+Refinement ratio is 2 per level.  Level arrays carry either H physical
+ghost cells (at r=0 / r=rmax) or T taper cells per side:
+
+      [ phys-ghost H | proper n | taper T ]      etc.
+
+`enumerate_window_ops` yields the canonical Berger-Oliger recursion as
+a flat op list — the single source of truth consumed by BOTH the
+barrier engine (executes ops lockstep) and the dataflow task-graph
+builder (expands steps into per-block tasks).  Sharing it guarantees
+the two engines perform identical arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.amr.wave import (H, NFIELDS, WaveProblem, fused_rk3_block,
+                            initial_data)
+
+TAPER = 2 * H  # taper width per interior side (6 cells)
+
+
+class HierarchyError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """Static geometry of one refinement level.
+
+    lo/n are in level-units (dr_l = dr0 / 2**level); level-l index i is
+    at radius r = i * dr_l.  Level 0 must cover the whole domain.
+    """
+
+    level: int
+    lo: int
+    n: int
+    left_phys: bool
+    right_phys: bool
+
+    @property
+    def hi(self) -> int:
+        return self.lo + self.n
+
+    @property
+    def left_pad(self) -> int:
+        return H if self.left_phys else TAPER
+
+    @property
+    def right_pad(self) -> int:
+        return H if self.right_phys else TAPER
+
+    @property
+    def width(self) -> int:
+        return self.left_pad + self.n + self.right_pad
+
+    @property
+    def arr_lo(self) -> int:
+        """Level-index of array cell 0."""
+        return self.lo - self.left_pad
+
+    def a2l(self, a: int) -> int:
+        return self.arr_lo + a
+
+    def l2a(self, l: int) -> int:
+        return l - self.arr_lo
+
+    # Full valid extent right after a taper fill (array coords); physical
+    # ghosts are derived data, never part of the extent.
+    @property
+    def full_extent(self) -> Tuple[int, int]:
+        a = self.left_pad if self.left_phys else 0
+        b = self.width - (self.right_pad if self.right_phys else 0)
+        return (a, b)
+
+    @property
+    def proper_extent(self) -> Tuple[int, int]:
+        return (self.left_pad, self.left_pad + self.n)
+
+
+def validate_specs(specs: Sequence[LevelSpec], n_base: int) -> None:
+    if specs[0].level != 0 or specs[0].lo != 0 or specs[0].n != n_base \
+            or not (specs[0].left_phys and specs[0].right_phys):
+        raise HierarchyError("level 0 must cover the whole domain")
+    for parent, child in zip(specs, specs[1:]):
+        if child.level != parent.level + 1:
+            raise HierarchyError("levels must be consecutive")
+        if child.lo % 2:
+            raise HierarchyError("child lo must be even (ratio 2)")
+        if not child.right_phys and child.hi % 2:
+            raise HierarchyError("interior child hi must be even (ratio 2)")
+        # Proper nesting: child's proper + taper must map inside the
+        # parent's proper region with an H-cell margin so taper fills
+        # never read the parent's own taper or ghosts.
+        c_lo = child.lo - (0 if child.left_phys else TAPER)
+        c_hi = child.hi + (0 if child.right_phys else TAPER)
+        if child.left_phys and child.lo != 0:
+            raise HierarchyError("left_phys child must start at 0")
+        # Node-centred grids: parent point j sits at child point 2j, so a
+        # child ending at the outer boundary has hi = 2*(parent.hi-1)+1.
+        if child.right_phys and child.hi != 2 * parent.hi - 1:
+            raise HierarchyError("right_phys child must end at domain edge")
+        if not child.left_phys and c_lo // 2 - 1 < parent.lo + H:
+            raise HierarchyError(
+                f"level {child.level} breaks proper nesting on the left")
+        if not child.right_phys and (c_hi + 1) // 2 + 1 > parent.hi - H:
+            raise HierarchyError(
+                f"level {child.level} breaks proper nesting on the right")
+
+
+@dataclasses.dataclass
+class LevelState:
+    """Mutable per-level field data + the valid-extent cursor."""
+
+    spec: LevelSpec
+    arr: jnp.ndarray                  # (3, width)
+    r: jnp.ndarray                    # (width,)
+    valid: Tuple[int, int]            # current valid extent (array coords)
+    dr: float
+
+    def copy(self) -> "LevelState":
+        return LevelState(self.spec, self.arr, self.r, self.valid, self.dr)
+
+
+def make_hierarchy(prob: WaveProblem,
+                   specs: Sequence[LevelSpec]) -> List[LevelState]:
+    validate_specs(specs, prob.n_points)
+    states = []
+    for spec in specs:
+        dr_l = prob.dr / (2 ** spec.level)
+        arr = initial_data(prob, level_dr=dr_l, n=spec.width,
+                           offset=spec.arr_lo)
+        r = (spec.arr_lo + jnp.arange(spec.width,
+                                      dtype=prob.jnp_dtype())) * dr_l
+        states.append(LevelState(spec, arr, r, spec.full_extent, dr_l))
+    return states
+
+
+# ---------------------------------------------------------------------------
+# Level operations (shared by both engines)
+# ---------------------------------------------------------------------------
+
+def step_extent_bounds(spec: LevelSpec, valid: Tuple[int, int]
+                       ) -> Tuple[int, int]:
+    """Output extent of one fused step given the current valid extent."""
+    a, b = valid
+    oa = a if spec.left_phys else a + H
+    ob = b if spec.right_phys else b - H
+    if ob - oa < 1:
+        raise HierarchyError("valid extent exhausted (taper underflow)")
+    return oa, ob
+
+
+def step_level(state: LevelState, dt: float, p: int) -> None:
+    """One fused RK3 step over the whole current valid extent."""
+    spec = state.spec
+    a, b = state.valid
+    oa, ob = step_extent_bounds(spec, state.valid)
+    ea, eb = oa - H, ob + H      # ext window; phys sides read ghost cells
+    ue = state.arr[:, ea:eb]
+    re = state.r[ea:eb]
+    out = fused_rk3_block(ue, re, state.dr, dt, p,
+                          left_phys=spec.left_phys and ea == 0,
+                          right_phys=spec.right_phys and eb == spec.width)
+    state.arr = state.arr.at[:, oa:ob].set(out)
+    state.valid = (oa, ob)
+
+
+def taper_source_ranges(child: LevelSpec) -> List[Tuple[int, int, int, int]]:
+    """Per taper side: (child array lo, hi, parent level-lo, level-hi).
+
+    Parent range is the inclusive-exclusive level-(l-1) index range read
+    by linear interpolation onto child cells [lo, hi).
+    """
+    sides = []
+    if not child.left_phys:
+        c_a, c_b = 0, TAPER
+        l_lo = child.a2l(c_a)
+        l_hi = child.a2l(c_b - 1)
+        sides.append((c_a, c_b, l_lo // 2, (l_hi + 1) // 2 + 1))
+    if not child.right_phys:
+        c_a, c_b = child.width - TAPER, child.width
+        l_lo = child.a2l(c_a)
+        l_hi = child.a2l(c_b - 1)
+        sides.append((c_a, c_b, l_lo // 2, (l_hi + 1) // 2 + 1))
+    return sides
+
+
+def prolongate_band(parent: LevelState, child: LevelState,
+                    c_a: int, c_b: int) -> jnp.ndarray:
+    """Linear interpolation of parent data onto child cells [c_a, c_b)."""
+    li = child.spec.a2l(np.arange(c_a, c_b))          # child level idx
+    pa = parent.spec.l2a(li // 2)                     # parent array idx
+    even = (li % 2 == 0)
+    left = parent.arr[:, pa]
+    right = parent.arr[:, np.minimum(pa + 1, parent.spec.width - 1)]
+    vals = jnp.where(jnp.asarray(even)[None, :], left,
+                     0.5 * (left + right))
+    return vals
+
+
+def fill_taper(parent: LevelState, child: LevelState) -> None:
+    """Refill taper bands from the parent; resets valid to full extent."""
+    for (c_a, c_b, _pl, _ph) in taper_source_ranges(child.spec):
+        child.arr = child.arr.at[:, c_a:c_b].set(
+            prolongate_band(parent, child, c_a, c_b))
+    child.valid = child.spec.full_extent
+
+
+def restriction_range(parent: LevelSpec, child: LevelSpec
+                      ) -> Tuple[int, int]:
+    """Parent level-index range [lo, hi) overwritten by injection.
+
+    Child's last cell is child.hi - 1, so the last parent cell with a
+    coincident child point is (child.hi - 1) // 2.
+    """
+    lo = -(-child.lo // 2)
+    hi = (child.hi - 1) // 2 + 1
+    return max(lo, parent.lo), min(hi, parent.hi)
+
+
+def restrict(child: LevelState, parent: LevelState) -> None:
+    """Injection: parent[j] <- child[2j] over the overlap."""
+    lo, hi = restriction_range(parent.spec, child.spec)
+    pj = parent.spec.l2a(np.arange(lo, hi))
+    cj = child.spec.l2a(2 * np.arange(lo, hi))
+    parent.arr = parent.arr.at[:, pj].set(child.arr[:, cj])
+
+
+# ---------------------------------------------------------------------------
+# The canonical op stream (Berger-Oliger recursion, flattened)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One op of the window program.
+
+    kind:  "taper" (fill level `level` from its parent, sync index k)
+           "step"  (advance level `level`, substep index s -> s+1)
+           "restrict" (inject level `level` into its parent at parent
+                       substep k)
+    The `phase` field is the barrier-program phase (one barrier per op
+    group in the MPI baseline).
+    """
+
+    kind: str
+    level: int
+    index: int      # k for taper/restrict, s (0-based pre-step) for step
+    phase: int
+
+
+def enumerate_window_ops(n_levels: int, n_coarse: int) -> List[Op]:
+    """Flatten the BO recursion for a window of n_coarse coarse steps."""
+    ops: List[Op] = []
+    substep = [0] * n_levels   # completed substeps per level
+    phase = 0
+
+    def cycle(l: int) -> None:
+        nonlocal phase
+        if l + 1 < n_levels:
+            ops.append(Op("taper", l + 1, substep[l], phase))
+            phase += 1
+        ops.append(Op("step", l, substep[l], phase))
+        phase += 1
+        substep[l] += 1
+        if l + 1 < n_levels:
+            cycle(l + 1)
+            cycle(l + 1)
+            ops.append(Op("restrict", l + 1, substep[l], phase))
+            phase += 1
+
+    for _ in range(n_coarse):
+        cycle(0)
+    return ops
+
+
+def run_ops_lockstep(states: List[LevelState], ops: Sequence[Op],
+                     prob: WaveProblem) -> List[LevelState]:
+    """Execute the op stream in order on whole-level arrays.
+
+    This IS the barrier (CSP/MPI-style) engine's numerics: one global
+    barrier between consecutive ops.  Returns the mutated states.
+    """
+    for op in ops:
+        if op.kind == "taper":
+            fill_taper(states[op.level - 1], states[op.level])
+        elif op.kind == "step":
+            dt_l = prob.dt / (2 ** op.level)
+            step_level(states[op.level], dt_l, prob.p)
+        elif op.kind == "restrict":
+            restrict(states[op.level], states[op.level - 1])
+        else:
+            raise HierarchyError(f"unknown op {op.kind}")
+    return states
+
+
+def default_specs(prob: WaveProblem, n_levels: int,
+                  center_frac: float = 0.4,
+                  width_frac: float = 0.3) -> List[LevelSpec]:
+    """A pulse-centred static hierarchy (paper Fig 2 shape).
+
+    Each finer level covers `width_frac` of its parent's proper region,
+    centred on `center_frac` of the domain (the pulse at R0).
+    """
+    specs = [LevelSpec(0, 0, prob.n_points, True, True)]
+    for l in range(1, n_levels):
+        parent = specs[-1]
+        center = int(2 * (parent.lo + center_frac * parent.n))
+        half = int(parent.n * width_frac)
+        half -= half % 2
+        lo = max(center - half, 2 * parent.lo + 2 * (TAPER // 2 + H + 2))
+        hi = min(center + half, 2 * parent.hi - 2 * (TAPER // 2 + H + 2))
+        lo -= lo % 2
+        hi -= hi % 2
+        if hi - lo < 4 * TAPER:
+            raise HierarchyError(f"level {l} region too small")
+        specs.append(LevelSpec(l, lo, hi - lo, False, False))
+    validate_specs(specs, prob.n_points)
+    return specs

@@ -1,0 +1,119 @@
+"""Dynamic regridding: error flagging, region proposal, state transfer.
+
+Paper, Sec. III: finer meshes are placed "where truncation error is
+highest" and "the higher resolution meshes adjust accordingly" as the
+pulse moves.  We flag on a shadow-truncation estimate (the standard
+self-shadow proxy: second differences, scaled) plus a gradient
+criterion, buffer the flags, and rebuild a single properly-nested
+region per level — the shape of the paper's Fig 2 hierarchy.
+
+Regridding happens BETWEEN dataflow windows: the task graph of a window
+assumes static specs, and the regrid itself is an AGAS event (blocks
+are allocated/freed/migrated in the directory).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.amr import hierarchy as hi
+from repro.amr.wave import H, WaveProblem, initial_data
+
+
+def flag_cells(u: np.ndarray, dr: float, grad_threshold: float
+               ) -> np.ndarray:
+    """Truncation-error proxy flags on one level's proper data.
+
+    chi's scaled second difference (the local truncation error of the
+    second-order scheme scales with dr^2 * u'') plus first-difference
+    magnitude; either crossing `grad_threshold` flags the cell.
+    """
+    chi = u[0]
+    d1 = np.abs(np.gradient(chi, dr))
+    d2 = np.abs(np.gradient(np.gradient(chi, dr), dr)) * dr
+    return (d1 + d2) > grad_threshold
+
+
+def propose_specs(states: Sequence[hi.LevelState], prob: WaveProblem,
+                  grad_threshold: float, max_levels: int,
+                  buffer_cells: int = 8) -> List[hi.LevelSpec]:
+    """Rebuild the spec list from current data (single region per level)."""
+    specs: List[hi.LevelSpec] = [
+        hi.LevelSpec(0, 0, prob.n_points, True, True)]
+    for l in range(1, max_levels):
+        src = states[min(l - 1, len(states) - 1)]
+        if src.spec.level != l - 1:
+            break
+        a, b = src.spec.proper_extent
+        u = np.asarray(src.arr[:, a:b])
+        flags = flag_cells(u, src.dr, grad_threshold * (2.0 ** (l - 1)))
+        if not flags.any():
+            break
+        idx = np.nonzero(flags)[0]
+        parent = specs[l - 1]
+        lo_l = max(int(idx.min()) - buffer_cells, 0) + parent.lo
+        hi_l = min(int(idx.max()) + buffer_cells + 1,
+                   parent.n) + parent.lo
+        # child coordinates (x2), alignment, nesting margins
+        margin = hi.TAPER // 2 + H + 2
+        c_lo = max(2 * lo_l, 2 * (parent.lo + margin))
+        c_hi = min(2 * hi_l, 2 * (parent.hi - margin))
+        left_phys = False
+        right_phys = False
+        if 2 * lo_l <= 2 * margin:          # touches the origin
+            c_lo, left_phys = 0, True
+        if 2 * hi_l >= 2 * parent.hi - 2 * margin:  # touches outer edge
+            c_hi, right_phys = 2 * parent.hi - 1, True
+        c_lo -= c_lo % 2
+        if not right_phys:
+            c_hi -= c_hi % 2
+        if c_hi - c_lo < 4 * hi.TAPER:
+            break
+        specs.append(hi.LevelSpec(l, c_lo, c_hi - c_lo,
+                                  left_phys, right_phys))
+    hi.validate_specs(specs, prob.n_points)
+    return specs
+
+
+def transfer(states: Sequence[hi.LevelState],
+             new_specs: Sequence[hi.LevelSpec],
+             prob: WaveProblem) -> List[hi.LevelState]:
+    """Build states on new specs: copy overlaps, prolongate the rest.
+
+    Processes coarsest-to-finest so each child can prolongate from its
+    already-transferred parent.
+    """
+    old_by_level = {s.spec.level: s for s in states}
+    out: List[hi.LevelState] = []
+    for spec in new_specs:
+        dr_l = prob.dr / (2 ** spec.level)
+        r = (spec.arr_lo + jnp.arange(spec.width,
+                                      dtype=prob.jnp_dtype())) * dr_l
+        if spec.level == 0:
+            st0 = old_by_level[0]
+            out.append(hi.LevelState(spec, st0.arr, r,
+                                     spec.full_extent, dr_l))
+            continue
+        parent = out[spec.level - 1]
+        # Start from parent prolongation everywhere...
+        tmp_child = hi.LevelState(
+            spec, jnp.zeros((3, spec.width), prob.jnp_dtype()), r,
+            spec.full_extent, dr_l)
+        vals = hi.prolongate_band(parent, tmp_child, 0, spec.width)
+        arr = vals
+        # ...then overwrite with old same-level data where it overlaps.
+        old = old_by_level.get(spec.level)
+        if old is not None:
+            ol, oh = old.spec.proper_extent
+            old_lo_l = old.spec.a2l(ol)
+            old_hi_l = old.spec.a2l(oh)
+            lo_l = max(old_lo_l, spec.a2l(0))
+            hi_l = min(old_hi_l, spec.a2l(spec.width))
+            if hi_l > lo_l:
+                src = old.arr[:, old.spec.l2a(lo_l):old.spec.l2a(hi_l)]
+                arr = arr.at[:, spec.l2a(lo_l):spec.l2a(hi_l)].set(src)
+        out.append(hi.LevelState(spec, arr, r, spec.full_extent, dr_l))
+    return out

@@ -1,0 +1,429 @@
+"""Dataflow task graph for barrier-free AMR (the paper's Sec. III-IV).
+
+Expands the canonical Berger-Oliger op stream (hierarchy.py) into a
+per-block task DAG whose edges are exactly the domain-of-dependence
+relations: "points in the computational domain are updated when those
+points in their domain of dependence have been updated".
+
+Task kinds
+  ("step", level, block, s)   one fused RK3 step of one block
+  ("taper", level, k)         prolongation refill of taper bands
+  ("restrict", level, k)      fine->parent injection
+
+Hazard edges are derived mechanically by a `FrameIndex` that records,
+per (level, frame) array, every write range and read range: a reader
+depends on all intersecting earlier writers (RAW = the dataflow LCO), a
+writer depends on intersecting earlier writers (WAW) and readers (WAR).
+The construction order is the lockstep program order, so the index is
+always complete when queried, and the resulting graph executes
+identically under ANY topological order — the property the paper's
+barrier removal rests on, and one we test with randomized orders.
+
+The same graph feeds:
+  * value execution  (`run_window`) — real numbers, frame buffers;
+  * `core.list_schedule` — the work-queue execution model (cone, Figs 5/6);
+  * `core.barrier_schedule` — the MPI baseline (one barrier per op);
+  * `core.pack_rounds` — the compiled wavefront (amr/compiled.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.amr import hierarchy as hi
+from repro.amr.wave import (H, NFIELDS, WaveProblem, fused_rk3_block,
+                            fused_rk3_block_np)
+from repro.core.scheduler import TaskGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-task cost accounting for the execution model (seconds).
+
+    c_point — useful work per point update (measure with
+    benchmarks/fig9_overhead.py or pass the paper's implied values);
+    sigma is applied by the *scheduler*, not stored in task costs.
+    """
+
+    c_point: float = 1.0e-6
+    c_copy: float = 1.0e-7
+
+
+@dataclasses.dataclass
+class TaskMeta:
+    kind: str
+    level: int
+    index: int                      # substep s (step) or sync k
+    block: int = -1
+    out_range: Tuple[int, int] = (0, 0)   # array coords, this level
+    in_range: Tuple[int, int] = (0, 0)
+    left_phys: bool = False
+    right_phys: bool = False
+
+
+class FrameIndex:
+    """Write/read range index per (level, frame) for hazard edges."""
+
+    def __init__(self):
+        self._writes: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = \
+            defaultdict(list)
+        self._reads: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = \
+            defaultdict(list)
+
+    @staticmethod
+    def _hits(entries, lo, hi):
+        return [t for (a, b, t) in entries if a < hi and lo < b]
+
+    def read(self, level: int, frame: int, lo: int, hi: int,
+             tid: int) -> List[int]:
+        """Record a read; return RAW deps (intersecting writers)."""
+        deps = self._hits(self._writes[(level, frame)], lo, hi)
+        self._reads[(level, frame)].append((lo, hi, tid))
+        return deps
+
+    def write(self, level: int, frame: int, lo: int, hi: int,
+              tid: int) -> List[int]:
+        """Record a write; return WAW + WAR deps."""
+        deps = self._hits(self._writes[(level, frame)], lo, hi)
+        deps += self._hits(self._reads[(level, frame)], lo, hi)
+        self._writes[(level, frame)].append((lo, hi, tid))
+        return deps
+
+    def written_ranges(self, level: int, frame: int):
+        return [(a, b) for (a, b, _t) in self._writes[(level, frame)]]
+
+
+@dataclasses.dataclass
+class WindowGraph:
+    graph: TaskGraph
+    meta: List[TaskMeta]
+    specs: List[hi.LevelSpec]
+    n_coarse: int
+    grain: int
+    blocks: List[List[Tuple[int, int]]]   # per level: block out base ranges
+    cost: CostModel
+
+
+def _level_blocks(spec: hi.LevelSpec, grain: int) -> List[Tuple[int, int]]:
+    """Partition the proper region into blocks of `grain` points."""
+    lp, hp = spec.proper_extent
+    out = []
+    a = lp
+    while a < hp:
+        out.append((a, min(a + grain, hp)))
+        a += grain
+    return out
+
+
+def build_window_graph(specs: Sequence[hi.LevelSpec], n_coarse: int,
+                       grain: int, cost: CostModel = CostModel()
+                       ) -> WindowGraph:
+    specs = list(specs)
+    n_levels = len(specs)
+    ops = hi.enumerate_window_ops(n_levels, n_coarse)
+    g = TaskGraph()
+    meta: List[TaskMeta] = []
+    fidx = FrameIndex()
+    blocks = [_level_blocks(s, grain) for s in specs]
+
+    def add(cost_s, key, phase, deps, m: TaskMeta) -> int:
+        tid = g.add(cost_s, key=key, phase=phase, deps=sorted(set(deps)))
+        meta.append(m)
+        return tid
+
+    # Track, per level, the taper-extension remaining at each substep:
+    # right after a taper fill (sync) the extension is TAPER; each step
+    # consumes H per interior side.
+    ext_left = [0] * n_levels   # current valid extension beyond proper
+    ext_right = [0] * n_levels
+
+    for op in ops:
+        spec = specs[op.level]
+        lp, hp = spec.proper_extent
+        if op.kind == "taper":
+            parent = specs[op.level - 1]
+            deps: List[int] = []
+            tid_placeholder = len(g)
+            for (c_a, c_b, p_lo, p_hi) in hi.taper_source_ranges(spec):
+                pa = parent.l2a(p_lo)
+                pb = parent.l2a(p_hi)
+                deps += fidx.read(op.level - 1, op.index, pa, pb,
+                                  tid_placeholder)
+            # writes both taper bands into child frame 2*k
+            child_frame = 2 * op.index
+            w_deps: List[int] = []
+            width = 0
+            for (c_a, c_b, _pl, _ph) in hi.taper_source_ranges(spec):
+                w_deps += fidx.write(op.level, child_frame, c_a, c_b,
+                                     tid_placeholder)
+                width += c_b - c_a
+            tid = add(width * cost.c_copy,
+                      ("taper", op.level, op.index), op.phase,
+                      deps + w_deps,
+                      TaskMeta("taper", op.level, op.index))
+            assert tid == tid_placeholder
+            ext_left[op.level] = 0 if spec.left_phys else hi.TAPER
+            ext_right[op.level] = 0 if spec.right_phys else hi.TAPER
+
+        elif op.kind == "step":
+            s = op.index
+            # Output extension into taper shrinks by H per step.
+            new_el = max(ext_left[op.level] - H, 0) \
+                if not spec.left_phys else 0
+            new_er = max(ext_right[op.level] - H, 0) \
+                if not spec.right_phys else 0
+            lvl_blocks = blocks[op.level]
+            nb = len(lvl_blocks)
+            for b, (oa0, ob0) in enumerate(lvl_blocks):
+                oa, ob = oa0, ob0
+                left_phys = spec.left_phys and b == 0
+                right_phys = spec.right_phys and b == nb - 1
+                if b == 0 and not spec.left_phys:
+                    oa = lp - new_el
+                if b == nb - 1 and not spec.right_phys:
+                    ob = hp + new_er
+                ia = oa if left_phys else oa - H
+                ib = ob if right_phys else ob + H
+                tid_placeholder = len(g)
+                deps = fidx.read(op.level, s, ia, ib, tid_placeholder)
+                deps += fidx.write(op.level, s + 1, oa, ob,
+                                   tid_placeholder)
+                tid = add((ob - oa) * cost.c_point,
+                          ("step", op.level, b, s), op.phase, deps,
+                          TaskMeta("step", op.level, s, b, (oa, ob),
+                                   (ia, ib), left_phys, right_phys))
+                assert tid == tid_placeholder
+            ext_left[op.level], ext_right[op.level] = new_el, new_er
+
+        elif op.kind == "restrict":
+            parent = specs[op.level - 1]
+            lo, hi_ = hi.restriction_range(parent, spec)
+            # read child frame 2*k over [2*lo, 2*(hi-1)+1]
+            ca = spec.l2a(2 * lo)
+            cb = spec.l2a(2 * (hi_ - 1)) + 1
+            pa = parent.l2a(lo)
+            pb = parent.l2a(hi_)
+            child_frame = 2 * op.index
+            tid_placeholder = len(g)
+            deps = fidx.read(op.level, child_frame, ca, cb,
+                             tid_placeholder)
+            deps += fidx.write(op.level - 1, op.index, pa, pb,
+                               tid_placeholder)
+            add((hi_ - lo) * cost.c_copy,
+                ("restrict", op.level, op.index), op.phase, deps,
+                TaskMeta("restrict", op.level, op.index, -1,
+                         (pa, pb), (ca, cb)))
+        else:
+            raise hi.HierarchyError(f"unknown op {op.kind}")
+
+    return WindowGraph(g, meta, specs, n_coarse, grain, blocks, cost)
+
+
+def assign_owners(wg: WindowGraph, n_workers: int,
+                  scheme: str = "contiguous") -> None:
+    """Static placement of blocks on localities.
+
+    "contiguous" — each level's blocks split into contiguous chunks
+    (the MPI decomposition); "balanced" — LPT on per-block cost;
+    "round_robin" — cyclic.  taper/restrict tasks follow the nearest
+    child edge block.
+    """
+    from repro.core.agas import balanced_placement, contiguous_placement
+
+    place: Dict[Tuple[int, int], int] = {}
+    for l, lvl_blocks in enumerate(wg.blocks):
+        nb = len(lvl_blocks)
+        if scheme == "contiguous":
+            pl = contiguous_placement(nb, n_workers)
+        elif scheme == "balanced":
+            costs = [(b_hi - b_lo) for (b_lo, b_hi) in lvl_blocks]
+            pl = balanced_placement(costs, n_workers)
+        elif scheme == "round_robin":
+            pl = [b % n_workers for b in range(nb)]
+        else:
+            raise ValueError(scheme)
+        for b in range(nb):
+            place[(l, b)] = pl[b]
+    for tid, m in enumerate(wg.meta):
+        if m.kind == "step":
+            wg.graph.tasks[tid].owner = place[(m.level, m.block)]
+        elif m.kind in ("taper", "restrict"):
+            wg.graph.tasks[tid].owner = place[(m.level, 0)]
+
+
+# ---------------------------------------------------------------------------
+# Value execution over frame buffers
+# ---------------------------------------------------------------------------
+
+class FrameStore:
+    """Dense per-(level, frame) buffers, NaN-poisoned until written.
+
+    Reading a NaN cell means a missing dependence edge — it fails loudly
+    instead of silently reading stale data.
+    """
+
+    def __init__(self, states: Sequence[hi.LevelState]):
+        self.states = list(states)
+        self._frames: Dict[Tuple[int, int], np.ndarray] = {}
+        for l, st in enumerate(states):
+            buf = np.full((NFIELDS, st.spec.width), np.nan,
+                          dtype=np.asarray(st.arr).dtype)
+            a, b = st.valid
+            buf[:, a:b] = np.asarray(st.arr)[:, a:b]
+            self._frames[(l, 0)] = buf
+
+    def frame(self, level: int, f: int) -> np.ndarray:
+        key = (level, f)
+        if key not in self._frames:
+            st = self.states[level]
+            self._frames[key] = np.full(
+                (NFIELDS, st.spec.width), np.nan,
+                dtype=np.asarray(st.arr).dtype)
+        return self._frames[key]
+
+    def read(self, level: int, f: int, lo: int, hi_: int) -> np.ndarray:
+        out = self.frame(level, f)[:, lo:hi_]
+        if np.any(np.isnan(out)):
+            raise hi.HierarchyError(
+                f"read of unwritten cells: level {level} frame {f} "
+                f"[{lo},{hi_}) — missing dependence edge")
+        return out
+
+    def write(self, level: int, f: int, lo: int, hi_: int,
+              vals: np.ndarray) -> None:
+        self.frame(level, f)[:, lo:hi_] = vals
+
+    def last_frames(self, substeps: Sequence[int]) -> List[np.ndarray]:
+        return [self.frame(l, s) for l, s in enumerate(substeps)]
+
+
+def make_task_runner(wg: WindowGraph, store: FrameStore,
+                     prob: WaveProblem):
+    """Returns run(task) for core.execute_topologically."""
+    specs = wg.specs
+
+    def run(task) -> None:
+        m = wg.meta[task.tid]
+        spec = specs[m.level]
+        if m.kind == "step":
+            st = store.states[m.level]
+            dt_l = prob.dt / (2 ** m.level)
+            ia, ib = m.in_range
+            oa, ob = m.out_range
+            # The kernel always takes out_width + 2H cells; at physical
+            # sides the extra H cells are the (derived) ghost slots.
+            ea, eb = oa - H, ob + H
+            frame = store.frame(m.level, m.index)
+            ue = frame[:, ea:eb].copy()
+            # Validate only the dependence window; zero the ghost slots
+            # (the kernel refreshes them before any use).
+            if np.any(np.isnan(ue[:, ia - ea:ib - ea])):
+                raise hi.HierarchyError(f"step reads unwritten data: {m}")
+            if m.left_phys:
+                ue[:, :H] = 0.0
+            if m.right_phys:
+                ue[:, -H:] = 0.0
+            out = fused_rk3_block_np(
+                ue, np.asarray(st.r[ea:eb]), st.dr, dt_l, prob.p,
+                left_phys=m.left_phys, right_phys=m.right_phys)
+            store.write(m.level, m.index + 1, oa, ob, out)
+        elif m.kind == "taper":
+            pspec = specs[m.level - 1]
+            pframe = store.frame(m.level - 1, m.index)
+            for (c_a, c_b, p_lo, p_hi) in hi.taper_source_ranges(spec):
+                store.read(m.level - 1, m.index, pspec.l2a(p_lo),
+                           pspec.l2a(p_hi))        # NaN validation
+                li = spec.a2l(np.arange(c_a, c_b))
+                pa = pspec.l2a(li // 2)
+                even = (li % 2 == 0)
+                left = pframe[:, pa]
+                right = pframe[:, np.minimum(pa + 1, pspec.width - 1)]
+                vals = np.where(even[None, :], left,
+                                left.dtype.type(0.5) * (left + right))
+                store.write(m.level, 2 * m.index, c_a, c_b, vals)
+        elif m.kind == "restrict":
+            ca, cb = m.in_range
+            pa, pb = m.out_range
+            src = store.read(m.level, 2 * m.index, ca, cb)
+            store.write(m.level - 1, m.index, pa, pb, src[:, ::2])
+        else:
+            raise hi.HierarchyError(f"unknown task kind {m.kind}")
+
+    return run
+
+
+def run_window(wg: WindowGraph, states: Sequence[hi.LevelState],
+               prob: WaveProblem,
+               order: Optional[Sequence[int]] = None
+               ) -> List[hi.LevelState]:
+    """Execute the window's tasks; returns final LevelStates.
+
+    `order=None` uses the LCO-driven executor; otherwise the given
+    topological order is used (randomized orders in property tests).
+    """
+    store = FrameStore(states)
+    run = make_task_runner(wg, store, prob)
+    if order is None:
+        from repro.core.scheduler import execute_topologically
+        execute_topologically(wg.graph, run)
+    else:
+        for tid in order:
+            run(wg.graph.tasks[tid])
+    out = []
+    for l, st in enumerate(states):
+        s_final = wg.n_coarse * (2 ** l)
+        buf = store.frame(l, s_final)
+        lp, hp = st.spec.proper_extent
+        if np.any(np.isnan(buf[:, lp:hp])):
+            raise hi.HierarchyError(f"final frame incomplete at level {l}")
+        # Restriction wrote corrected coarse values into the final frame.
+        arr = jnp.asarray(np.nan_to_num(buf))
+        out.append(hi.LevelState(st.spec, arr, st.r,
+                                 st.spec.proper_extent, st.dr))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cone extraction (paper Figs 5, 6)
+# ---------------------------------------------------------------------------
+
+def timestep_front(wg: WindowGraph, finish: np.ndarray, tau: float,
+                   n_base: int) -> np.ndarray:
+    """Timestep (coarse units, fractional) each base point reached by tau.
+
+    For every base-grid point, uses the finest level covering it and the
+    latest substep whose covering block task finished by wall-clock tau.
+    Reproduces the paper's Fig 5/6 "upward facing cone".
+    """
+    front = np.zeros(n_base)
+    best_level = np.full(n_base, -1)
+    cover = np.zeros(n_base, dtype=bool)
+    for l, spec in enumerate(wg.specs):
+        scale = 2 ** l
+        lo_b = -(-spec.lo // scale)
+        hi_b = (spec.hi - 1) // scale       # last base point COVERED
+        cover[:] = False
+        cover[lo_b:min(hi_b + 1, n_base)] = True
+        best_level[cover] = l
+    # Dependence edges force substep monotonicity per block, so the max
+    # finished substep per point is well-defined.
+    for tid, m in enumerate(wg.meta):
+        if m.kind != "step" or finish[tid] > tau:
+            continue
+        scale = 2 ** m.level
+        spec = wg.specs[m.level]
+        oa, ob = m.out_range
+        b_lo = max(-(-spec.a2l(oa) // scale), 0)
+        b_hi = min(spec.a2l(ob - 1) // scale, n_base - 1)
+        t_reached = (m.index + 1) / scale
+        sel = slice(b_lo, b_hi + 1)
+        mask = best_level[sel] == m.level
+        seg = front[sel]
+        seg[mask] = np.maximum(seg[mask], t_reached)
+        front[sel] = seg
+    return front

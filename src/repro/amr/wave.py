@@ -1,0 +1,258 @@
+"""The paper's application physics: semilinear wave equation in
+spherical symmetry (paper Sec. III, Eqns. 1-3; Liebling PRD 71 044019).
+
+    chi_t = Pi                                   (1)
+    Phi_t = d_r Pi                               (2)
+    Pi_t  = (1/r^2) d_r (r^2 Phi) + chi^p        (3)    p = 7
+
+Second-order centered finite differences in space, third-order SSP
+Runge-Kutta (Shu-Osher) in time, initial data a Gaussian pulse
+
+    chi0 = A exp[-(r - R0)^2 / delta^2],  Phi0 = d_r chi0,  Pi0 = 0,
+
+R0 = 8, delta = 1, amplitude A tuned to explore criticality.
+
+The *fused block step* is the unit of work of a ParalleX task: one RK3
+step on a block carrying a halo of H = 3 ghost cells per side (one
+stencil radius per RK stage), so a task needs neighbor data only once
+per step — the communication-avoiding form that makes the task's domain
+of dependence explicit (paper Sec. III: "the domain of dependence of
+each point is much smaller than the global computational domain").
+
+Physical boundaries are local: the origin uses even/odd/even mirror
+symmetry for (chi, Phi, Pi) plus the l'Hopital regularization
+(1/r^2) d_r(r^2 Phi)|_{r=0} = 3 Phi'(0); the outer boundary uses linear
+extrapolation ghosts (adequate for domains with the outer edge far from
+the pulse; a simplification vs. full Sommerfeld, noted in DESIGN.md).
+Because both are local functions of the block's own data they are
+refreshed after every RK stage, so a boundary block loses no halo width
+at its physical side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+H = 3          # halo width: 1 stencil radius x 3 RK stages
+NFIELDS = 3    # chi, Phi, Pi
+SIGNS = np.array([1.0, -1.0, 1.0])  # mirror parity of (chi, Phi, Pi) at r=0
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveProblem:
+    """Static problem definition (paper Sec. III parameters)."""
+
+    p: int = 7
+    amplitude: float = 0.01
+    r0: float = 8.0
+    delta: float = 1.0
+    rmax: float = 20.0
+    n_points: int = 512          # base (level-0) grid points
+    cfl: float = 0.25
+    dtype: str = "float32"
+
+    @property
+    def dr(self) -> float:
+        # r_i = i * dr, i = 0 .. n_points-1; r=0 is on the grid.
+        return self.rmax / (self.n_points - 1)
+
+    @property
+    def dt(self) -> float:
+        return self.cfl * self.dr
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def initial_data(prob: WaveProblem, level_dr: float | None = None,
+                 n: int | None = None, offset: int = 0) -> jnp.ndarray:
+    """(3, n) initial state on a grid r_i = (offset + i) * level_dr."""
+    dr = prob.dr if level_dr is None else level_dr
+    n = prob.n_points if n is None else n
+    r = (offset + jnp.arange(n, dtype=prob.jnp_dtype())) * dr
+    chi = prob.amplitude * jnp.exp(-((r - prob.r0) ** 2) / prob.delta**2)
+    phi = chi * (-2.0 * (r - prob.r0) / prob.delta**2)  # analytic d_r chi
+    pi = jnp.zeros_like(chi)
+    return jnp.stack([chi, phi, pi])
+
+
+def rhs(u: jnp.ndarray, r: jnp.ndarray, dr: float, p: int) -> jnp.ndarray:
+    """RHS of Eqns. (1)-(3) on the interior [1, W-1) of a width-W array.
+
+    Edge cells of the result are zero-filled garbage; callers slice.
+    """
+    chi, phi, pi = u[0], u[1], u[2]
+    inner = slice(1, u.shape[-1] - 1)
+    dpi = (pi[2:] - pi[:-2]) / (2.0 * dr)
+    r2phi = r * r * phi
+    dmono = (r2phi[2:] - r2phi[:-2]) / (2.0 * dr)
+    rc = r[inner]
+    # l'Hopital at r=0: (1/r^2) d_r(r^2 Phi) -> 3 Phi'(0).
+    near_zero = jnp.abs(rc) < 0.5 * dr
+    safe_r2 = jnp.where(near_zero, 1.0, rc * rc)
+    dphi3 = 3.0 * (phi[2:] - phi[:-2]) / (2.0 * dr)
+    mono = jnp.where(near_zero, dphi3, dmono / safe_r2)
+    dchi = pi[inner]
+    dphi = dpi
+    dpi_t = mono + chi[inner] ** p
+    out = jnp.zeros_like(u)
+    out = out.at[0, inner].set(dchi)
+    out = out.at[1, inner].set(dphi)
+    out = out.at[2, inner].set(dpi_t)
+    return out
+
+
+def refresh_physical_ghosts(u: jnp.ndarray, left_phys, right_phys
+                            ) -> jnp.ndarray:
+    """Refill the H ghost cells at physical sides from interior data.
+
+    `left_phys`/`right_phys` may be Python bools or traced booleans
+    (scalar jnp arrays) — the masked form keeps the compiled engine's
+    block batch uniform.  Left: mirror symmetry about r=0 (interior
+    index H is the r=0 point).  Right: linear extrapolation.
+    """
+    w = u.shape[-1]
+    signs = jnp.asarray(SIGNS, u.dtype)[:, None]
+    # ghosts 0,1,2 mirror interior 6,5,4 (about index H=3).
+    left_vals = signs * u[:, [2 * H, 2 * H - 1, 2 * H - 2]]
+    u = u.at[:, 0:H].set(
+        jnp.where(left_phys, left_vals, u[:, 0:H]))
+    last = u[:, w - H - 1]
+    prev = u[:, w - H - 2]
+    slope = last - prev
+    right_vals = jnp.stack(
+        [last + (k + 1) * slope for k in range(H)], axis=-1)
+    u = u.at[:, w - H:].set(
+        jnp.where(right_phys, right_vals, u[:, w - H:]))
+    return u
+
+
+def fused_rk3_block(u_ext: jnp.ndarray, r_ext: jnp.ndarray, dr: float,
+                    dt: float, p: int, left_phys=False, right_phys=False
+                    ) -> jnp.ndarray:
+    """One fused SSP-RK3 step on a block with H-cell halos.
+
+    u_ext: (3, g + 2H) state at time t, halos filled with neighbor data
+    at time t (or physical ghosts).  Returns (3, g): interior at t + dt,
+    bit-identical to the global reference step restricted to the block.
+
+    Stage validity shrinks by one cell per side and stage at interior
+    sides; physical sides are refreshed after every stage, so they do
+    not shrink.  The discarded edge bands absorb the invalid cells.
+    """
+    def L(u):
+        return rhs(u, r_ext, dr, p)
+
+    u0 = refresh_physical_ghosts(u_ext, left_phys, right_phys)
+    u1 = u0 + dt * L(u0)
+    u1 = refresh_physical_ghosts(u1, left_phys, right_phys)
+    u2 = 0.75 * u0 + 0.25 * (u1 + dt * L(u1))
+    u2 = refresh_physical_ghosts(u2, left_phys, right_phys)
+    u3 = u0 / 3.0 + (2.0 / 3.0) * (u2 + dt * L(u2))
+    u3 = refresh_physical_ghosts(u3, left_phys, right_phys)
+    return u3[:, H:-H]
+
+
+def _rhs_np(u: np.ndarray, r: np.ndarray, dr: float, p: int) -> np.ndarray:
+    """NumPy twin of `rhs` (host-engine fast path; same arithmetic)."""
+    phi, pi = u[1], u[2]
+    w = u.shape[-1]
+    inner = slice(1, w - 1)
+    dpi = (pi[2:] - pi[:-2]) / (2.0 * dr)
+    r2phi = r * r * phi
+    dmono = (r2phi[2:] - r2phi[:-2]) / (2.0 * dr)
+    rc = r[inner]
+    near_zero = np.abs(rc) < 0.5 * dr
+    safe_r2 = np.where(near_zero, 1.0, rc * rc)
+    dphi3 = 3.0 * (phi[2:] - phi[:-2]) / (2.0 * dr)
+    mono = np.where(near_zero, dphi3, dmono / safe_r2)
+    out = np.zeros_like(u)
+    out[0, inner] = pi[inner]
+    out[1, inner] = dpi
+    out[2, inner] = mono + u[0, inner] ** p
+    return out
+
+
+def _refresh_np(u: np.ndarray, left_phys: bool, right_phys: bool
+                ) -> np.ndarray:
+    w = u.shape[-1]
+    if left_phys:
+        u[:, 0:H] = SIGNS[:, None].astype(u.dtype) * \
+            u[:, [2 * H, 2 * H - 1, 2 * H - 2]]
+    if right_phys:
+        last = u[:, w - H - 1]
+        slope = last - u[:, w - H - 2]
+        for k in range(H):
+            u[:, w - H + k] = last + (k + 1) * slope
+    return u
+
+
+def fused_rk3_block_np(u_ext: np.ndarray, r_ext: np.ndarray, dr: float,
+                       dt: float, p: int, left_phys: bool = False,
+                       right_phys: bool = False) -> np.ndarray:
+    """NumPy twin of `fused_rk3_block` for the host dataflow engine.
+
+    Static bool boundary flags only (host tasks know their sides).
+    Kept in lockstep with the jnp version; tests/test_amr_equivalence
+    asserts they agree to float roundoff.
+    """
+    dr = u_ext.dtype.type(dr)
+    dt = u_ext.dtype.type(dt)
+    u0 = _refresh_np(u_ext.copy(), left_phys, right_phys)
+    u1 = u0 + dt * _rhs_np(u0, r_ext, dr, p)
+    u1 = _refresh_np(u1, left_phys, right_phys)
+    u2 = u0.dtype.type(0.75) * u0 + u0.dtype.type(0.25) * \
+        (u1 + dt * _rhs_np(u1, r_ext, dr, p))
+    u2 = _refresh_np(u2, left_phys, right_phys)
+    u3 = u0 / u0.dtype.type(3.0) + u0.dtype.type(2.0 / 3.0) * \
+        (u2 + dt * _rhs_np(u2, r_ext, dr, p))
+    u3 = _refresh_np(u3, left_phys, right_phys)
+    return u3[:, H:-H]
+
+
+@partial(jax.jit, static_argnames=("dr", "dt", "p"))
+def global_step(u: jnp.ndarray, r: jnp.ndarray, dr: float, dt: float,
+                p: int) -> jnp.ndarray:
+    """Reference RK3 step on the whole level array (the jnp oracle).
+
+    Pads with physical ghosts on both sides and runs the identical fused
+    kernel, so block-decomposed execution at ANY granularity must agree
+    bitwise (tests/test_amr_equivalence.py).
+    """
+    dtype = u.dtype
+    pad = jnp.zeros((NFIELDS, H), dtype)
+    u_ext = jnp.concatenate([pad, u, pad], axis=-1)
+    r_ext = jnp.concatenate([
+        r[0] + (jnp.arange(-H, 0, dtype=dtype)) * dr,
+        r,
+        r[-1] + (jnp.arange(1, H + 1, dtype=dtype)) * dr,
+    ])
+    return fused_rk3_block(u_ext, r_ext, dr, dt, p,
+                           left_phys=True, right_phys=True)
+
+
+def grid(prob: WaveProblem, level_dr: float | None = None,
+         n: int | None = None, offset: int = 0) -> jnp.ndarray:
+    dr = prob.dr if level_dr is None else level_dr
+    n = prob.n_points if n is None else n
+    return (offset + jnp.arange(n, dtype=prob.jnp_dtype())) * dr
+
+
+def energy(u: jnp.ndarray, r: jnp.ndarray, dr: float) -> jnp.ndarray:
+    """Diagnostic energy integral E = int (Pi^2 + Phi^2) r^2 dr.
+
+    Not conserved for p=7 (the nonlinearity pumps energy) but smooth in
+    time; used by tests as a NaN/blow-up sentinel and by the criticality
+    driver as the collapse indicator.
+    """
+    dens = (u[2] ** 2 + u[1] ** 2) * r * r
+    return jnp.sum(dens) * dr
+
+
+def linf(u: jnp.ndarray) -> jnp.ndarray:
+    return jnp.max(jnp.abs(u))

@@ -1,0 +1,48 @@
+"""Assigned-architecture registry.
+
+10 LM archs (task statement, public literature) + the paper's AMR
+problem.  `get(name)` returns the full ArchConfig; `get_reduced(name)`
+the CPU smoke variant; `ARCHS` lists all ids.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+
+from repro.configs.h2o_danube_3_4b import CONFIG as _danube
+from repro.configs.chatglm3_6b import CONFIG as _chatglm
+from repro.configs.command_r_plus_104b import CONFIG as _commandr
+from repro.configs.yi_6b import CONFIG as _yi
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon
+from repro.configs.zamba2_7b import CONFIG as _zamba
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.phi35_moe_42b import CONFIG as _phi
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.llama32_vision_90b import CONFIG as _llamav
+
+_REGISTRY: Dict[str, ArchConfig] = {
+    c.name: c for c in [
+        _danube, _chatglm, _commandr, _yi, _falcon, _zamba, _mixtral,
+        _phi, _musicgen, _llamav,
+    ]
+}
+
+ARCHS = sorted(_REGISTRY)
+
+
+def get(name: str) -> ArchConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {ARCHS}") from None
+
+
+def get_reduced(name: str) -> ArchConfig:
+    return get(name).reduced()
+
+
+__all__ = ["ARCHS", "get", "get_reduced", "SHAPES", "ArchConfig",
+           "ShapeConfig"]

@@ -1,0 +1,29 @@
+"""ParalleX execution-model core: LCOs, parcels, AGAS, localities,
+the dataflow scheduler, and task-granularity control."""
+
+from repro.core.agas import (AGAS, AGASError, GlobalAddress,
+                             balanced_placement, contiguous_placement)
+from repro.core.granularity import (GrainModel, auto_tune, n_tasks,
+                                    optimal_grain_analytic, sweep)
+from repro.core.lco import (CountingSemaphore, Dataflow, DependencyCounter,
+                            FullEmptyBit, Future, LCOError)
+from repro.core.localities import Locality, LocalityDomain
+from repro.core.parcels import (ActionRegistry, HaloLowering, MigrationPlan,
+                                Parcel, ParcelPort, lower_halo_parcels,
+                                migration_plan, parcel_traffic_bytes)
+from repro.core.scheduler import (RoundSchedule, ScheduleError,
+                                  ScheduleResult, Task, TaskGraph,
+                                  barrier_schedule, execute_topologically,
+                                  list_schedule, pack_rounds)
+
+__all__ = [
+    "AGAS", "AGASError", "GlobalAddress", "balanced_placement",
+    "contiguous_placement", "GrainModel", "auto_tune", "n_tasks",
+    "optimal_grain_analytic", "sweep", "CountingSemaphore", "Dataflow",
+    "DependencyCounter", "FullEmptyBit", "Future", "LCOError", "Locality",
+    "LocalityDomain", "ActionRegistry", "HaloLowering", "MigrationPlan",
+    "Parcel", "ParcelPort", "lower_halo_parcels", "migration_plan",
+    "parcel_traffic_bytes", "RoundSchedule", "ScheduleError",
+    "ScheduleResult", "Task", "TaskGraph", "barrier_schedule",
+    "execute_topologically", "list_schedule", "pack_rounds",
+]

@@ -1,0 +1,195 @@
+"""AGAS: the Active Global Address Space.
+
+The paper (Sec. II) motivates AGAS by dynamic AMR: "the requirements for
+dynamic load-balancing ... define the necessity for a single global
+address space"; unlike PGAS systems (UPC/X10/Chapel) the *active* part
+means objects can move without their global name changing.
+
+Here AGAS is a directory mapping immutable global ids (gids) to
+(locality, slot) pairs, where a slot indexes a fixed-capacity local
+object pool on each locality.  On device, the pools are the leading axis
+of block-batched arrays, so an AGAS "lookup" compiles to a gather index
+and a "migration" compiles to a permutation (gather/scatter or
+ppermute) — nothing dynamic survives to run time, which is this
+framework's analogue of the paper's Sec. V proposal to accelerate AGAS
+lookups in hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.localities import LocalityDomain
+
+
+class AGASError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAddress:
+    """Immutable first-class name of an object (block, LCO, thread...)."""
+
+    gid: int
+    space: str = "default"
+
+    def __index__(self) -> int:
+        return self.gid
+
+
+class AGAS:
+    """Directory of global names -> (locality, slot) with migration.
+
+    The directory also keeps per-locality free lists so allocation is
+    O(1); `checkpoint_state`/`restore_state` make the directory itself a
+    first-class checkpointable object (needed for elastic restart).
+    """
+
+    def __init__(self, domain: LocalityDomain, pool_capacity: int,
+                 space: str = "default"):
+        self.domain = domain
+        self.capacity = int(pool_capacity)
+        self.space = space
+        self._gids = itertools.count()
+        self._where: Dict[int, Tuple[int, int]] = {}
+        self._free: List[List[int]] = [
+            list(range(self.capacity)) for _ in range(len(domain))
+        ]
+        self._residents: List[set] = [set() for _ in range(len(domain))]
+        self.migrations = 0  # counter surfaced as a performance counter
+
+    # -- allocation --------------------------------------------------------
+    def allocate(self, locality: int) -> GlobalAddress:
+        if not self._free[locality]:
+            raise AGASError(
+                f"locality {locality} pool exhausted "
+                f"(capacity {self.capacity})"
+            )
+        slot = self._free[locality].pop()
+        gid = next(self._gids)
+        self._where[gid] = (locality, slot)
+        self._residents[locality].add(gid)
+        return GlobalAddress(gid, self.space)
+
+    def allocate_many(self, locality: int, n: int) -> List[GlobalAddress]:
+        return [self.allocate(locality) for _ in range(n)]
+
+    def free(self, addr: GlobalAddress) -> None:
+        loc, slot = self._where.pop(addr.gid)
+        self._residents[loc].discard(addr.gid)
+        self._free[loc].append(slot)
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(self, addr: GlobalAddress) -> Tuple[int, int]:
+        """gid -> (locality, slot).  Raises on dangling references."""
+        try:
+            return self._where[addr.gid]
+        except KeyError:
+            raise AGASError(f"dangling global address {addr.gid}") from None
+
+    def locality_of(self, addr: GlobalAddress) -> int:
+        return self.lookup(addr)[0]
+
+    def slot_of(self, addr: GlobalAddress) -> int:
+        return self.lookup(addr)[1]
+
+    def is_local(self, addr: GlobalAddress, locality: int) -> bool:
+        """The action-manager query: local action or parcel? (paper Fig 1)."""
+        return self.locality_of(addr) == locality
+
+    def residents(self, locality: int) -> set:
+        return set(self._residents[locality])
+
+    # -- migration -----------------------------------------------------------
+    def migrate(self, addr: GlobalAddress, new_locality: int) -> Tuple[int, int]:
+        """Move an object; its global name is unchanged (the AGAS promise).
+
+        Returns (old_locality, new_slot).  The caller is responsible for
+        moving the payload (see core/parcels.migration_plan).
+        """
+        old_loc, old_slot = self.lookup(addr)
+        if old_loc == new_locality:
+            return old_loc, old_slot
+        if not self._free[new_locality]:
+            raise AGASError(f"migration target {new_locality} pool full")
+        new_slot = self._free[new_locality].pop()
+        self._free[old_loc].append(old_slot)
+        self._residents[old_loc].discard(addr.gid)
+        self._residents[new_locality].add(addr.gid)
+        self._where[addr.gid] = (new_locality, new_slot)
+        self.migrations += 1
+        return old_loc, new_slot
+
+    # -- bulk views (compiled into gather indices) ----------------------------
+    def placement_arrays(self, addrs: Sequence[GlobalAddress]
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """(localities, slots) int32 arrays for a list of gids, in order."""
+        locs = np.empty(len(addrs), np.int32)
+        slots = np.empty(len(addrs), np.int32)
+        for i, a in enumerate(addrs):
+            locs[i], slots[i] = self.lookup(a)
+        return locs, slots
+
+    def load(self) -> np.ndarray:
+        """Objects resident per locality (the load-balance signal)."""
+        return np.array([len(r) for r in self._residents], np.int64)
+
+    # -- checkpoint / elastic restore ----------------------------------------
+    def checkpoint_state(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "space": self.space,
+            "n_localities": len(self.domain),
+            "where": dict(self._where),
+            "next_gid": next(self._gids),  # consumes one id; fine for ckpt
+        }
+
+    @staticmethod
+    def restore_state(state: dict, domain: LocalityDomain,
+                      remap: Optional[Dict[int, int]] = None) -> "AGAS":
+        """Rebuild a directory, optionally remapping localities.
+
+        `remap` supports elastic restore: a checkpoint taken on P
+        localities can be restored onto P' by providing old->new ids
+        (defaults to `old % P'`, the round-robin fold).
+        """
+        agas = AGAS(domain, state["capacity"], state["space"])
+        n_new = len(domain)
+        for gid, (loc, _slot) in sorted(state["where"].items()):
+            new_loc = remap[loc] if remap else loc % n_new
+            if not agas._free[new_loc]:
+                raise AGASError(f"restore overflows locality {new_loc}")
+            slot = agas._free[new_loc].pop()
+            agas._where[gid] = (new_loc, slot)
+            agas._residents[new_loc].add(gid)
+        agas._gids = itertools.count(state["next_gid"])
+        return agas
+
+
+def balanced_placement(costs: Sequence[float], n_localities: int
+                       ) -> List[int]:
+    """LPT (longest-processing-time) static placement of objects.
+
+    This is the *static* load balancer the compiled engine uses; the
+    paper's emergent work-queue balancing is the dynamic complement
+    (core/scheduler.py) and ft/straggler.py re-invokes this between
+    compiled steps when measured load drifts.
+    """
+    order = sorted(range(len(costs)), key=lambda i: -costs[i])
+    loads = np.zeros(n_localities)
+    out = [0] * len(costs)
+    for i in order:
+        tgt = int(np.argmin(loads))
+        out[i] = tgt
+        loads[tgt] += costs[i]
+    return out
+
+
+def contiguous_placement(n_objects: int, n_localities: int) -> List[int]:
+    """Block-contiguous placement (the MPI-style static decomposition)."""
+    per = -(-n_objects // n_localities)
+    return [min(i // per, n_localities - 1) for i in range(n_objects)]

@@ -1,0 +1,115 @@
+"""Task granularity control (paper Figs 3 and 4(b)).
+
+"In the ParalleX based AMR code explored here the user selects the task
+granularity. The task granularity can even be as small as a single
+point. ... In a work queue based execution model, the optimal task
+granularity may be much smaller than that suggested by a clustering
+algorithm." (paper, Sec. III)
+
+The grain g (points per task) trades per-task overhead sigma against
+available parallelism and load-balance slack:
+
+  n_tasks(g)      = ceil(N / g)
+  t_task(g)       = c_point * g + sigma        (+ halo cost 2*r*c_halo)
+  lower bound     = max(work/P, span)          (Brent)
+
+`sweep` evaluates real schedules across grains; `auto_tune` returns the
+argmin.  amr/* uses g to build blocks, models/* reuses the same knob as
+the microbatch size for LM pipelines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GrainModel:
+    """Analytic cost model for one task at grain g."""
+
+    c_point: float          # seconds of useful work per point update
+    sigma: float            # per-task management overhead (Fig 9: 3-5e-6)
+    halo_points: int = 2    # ghost points exchanged per task side
+    c_halo: float = 0.0     # per-halo-point pack/unpack/parcel cost
+
+    def task_cost(self, g: int) -> float:
+        return self.c_point * g + 2 * self.halo_points * self.c_halo
+
+    def total_overhead(self, n_points: int, g: int) -> float:
+        return self.sigma * n_tasks(n_points, g)
+
+
+def n_tasks(n_points: int, g: int) -> int:
+    return -(-n_points // g)
+
+
+def efficiency(model: GrainModel, g: int) -> float:
+    """Useful-work fraction of one task: cost / (cost + sigma)."""
+    c = model.task_cost(g)
+    return c / (c + model.sigma) if c + model.sigma > 0 else 0.0
+
+
+@dataclasses.dataclass
+class GrainSweepPoint:
+    grain: int
+    n_tasks: int
+    makespan: float
+    idle_fraction: float
+    overhead_fraction: float
+
+
+def sweep(
+    grains: Sequence[int],
+    build_and_schedule: Callable[[int], "object"],
+    graph_work: Optional[Callable[[int], float]] = None,
+) -> List[GrainSweepPoint]:
+    """Evaluate schedules across grain sizes.
+
+    `build_and_schedule(g)` must return a ScheduleResult-like object with
+    .makespan/.idle_fraction/.busy/.overhead/.n_workers; `graph_work(g)`
+    optionally returns the useful work at that grain for the overhead
+    fraction (defaults to busy-sum minus overhead estimate).
+    """
+    out = []
+    for g in grains:
+        res = build_and_schedule(int(g))
+        busy = float(np.sum(res.busy))
+        ntask = int(np.sum(res.worker >= 0))
+        ovh = res.overhead * ntask
+        work = graph_work(int(g)) if graph_work else busy - ovh
+        denom = work + ovh
+        out.append(GrainSweepPoint(
+            grain=int(g),
+            n_tasks=ntask,
+            makespan=res.makespan,
+            idle_fraction=res.idle_fraction,
+            overhead_fraction=(ovh / denom if denom > 0 else 0.0),
+        ))
+    return out
+
+
+def auto_tune(
+    grains: Sequence[int],
+    build_and_schedule: Callable[[int], "object"],
+) -> int:
+    """Paper Fig 3's experiment as a tuner: argmin-makespan grain."""
+    pts = sweep(grains, build_and_schedule)
+    best = min(pts, key=lambda p: p.makespan)
+    return best.grain
+
+
+def optimal_grain_analytic(n_points: int, n_workers: int,
+                           model: GrainModel) -> int:
+    """Closed-form estimate, used as the tuner's starting bracket.
+
+    Balance overhead (sigma*N/g) against load-balance slack (one task of
+    size g per worker): d/dg [sigma*N/(g*P) + c_point*g] = 0
+      =>  g* = sqrt(sigma * N / (P * c_point)).
+    """
+    if model.c_point <= 0:
+        return max(1, n_points // max(1, n_workers))
+    g = np.sqrt(model.sigma * n_points / (n_workers * model.c_point))
+    return int(max(1.0, g))

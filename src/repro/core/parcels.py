@@ -1,0 +1,247 @@
+"""Parcels: message-driven work transport, lowered to TPU collectives.
+
+Paper, Sec. II: "Parcels are the remote semantic equivalent to creating
+a local HPX-thread. ... Parcels are either used to move the work to the
+data ... or to gather small pieces of data back to the caller."
+
+A `Parcel` here is a *descriptor*: (destination object, action id,
+continuation, payload refs).  The host dataflow engine executes parcels
+directly (action-manager semantics: local -> run, remote -> enqueue at
+destination locality).  The compiled engine *lowers batches of parcels*
+into jax collectives:
+
+* same-pattern point-to-point parcels (halo exchange) -> `lax.ppermute`
+* all-pairs redistribution (MoE dispatch, AGAS migration) -> `all_to_all`
+  or gather/scatter permutations
+* reductions back to a caller -> `psum` / `psum_scatter`
+
+`lower_halo_parcels` and `migration_plan` are the two lowering entry
+points used by amr/compiled.py and ft/straggler.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.agas import AGAS, GlobalAddress
+
+
+@dataclasses.dataclass(frozen=True)
+class Parcel:
+    """An active message.
+
+    Attributes:
+      target:  global address of the object the action is applied to.
+      action:  action id (a registered callable name or opaque tag).
+      args:    payload (small data moved with the parcel).
+      continuation: optional global address of an LCO to set with the
+        action's result ("gather small pieces of data back").
+    """
+
+    target: GlobalAddress
+    action: str
+    args: tuple = ()
+    continuation: Optional[GlobalAddress] = None
+
+
+class ActionRegistry:
+    """Named remotable actions (the paper's component actions)."""
+
+    def __init__(self):
+        self._actions: Dict[str, Callable] = {}
+
+    def register(self, name: str) -> Callable[[Callable], Callable]:
+        def deco(fn: Callable) -> Callable:
+            if name in self._actions:
+                raise ValueError(f"action {name!r} already registered")
+            self._actions[name] = fn
+            return fn
+        return deco
+
+    def __getitem__(self, name: str) -> Callable:
+        return self._actions[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._actions
+
+
+class ParcelPort:
+    """Host-engine parcel port: per-locality inbound queues (paper Fig 1).
+
+    The action manager (`drain`) decodes parcels and runs the action
+    where the target lives — exactly the local/remote decision path of
+    the HPX architecture walkthrough.
+    """
+
+    def __init__(self, agas: AGAS, registry: ActionRegistry):
+        self.agas = agas
+        self.registry = registry
+        self.queues: List[List[Parcel]] = [[] for _ in range(len(agas.domain))]
+        self.sent = 0          # performance counters
+        self.local_applied = 0
+
+    def apply(self, parcel: Parcel, from_locality: int, state: Any) -> None:
+        """Action-manager entry: run locally or send a parcel."""
+        if self.agas.is_local(parcel.target, from_locality):
+            self.local_applied += 1
+            self._run(parcel, state)
+        else:
+            self.sent += 1
+            self.queues[self.agas.locality_of(parcel.target)].append(parcel)
+
+    def drain(self, locality: int, state: Any) -> int:
+        """Process the inbound queue of one locality; returns #parcels."""
+        q, self.queues[locality] = self.queues[locality], []
+        for p in q:
+            self._run(p, state)
+        return len(q)
+
+    def _run(self, parcel: Parcel, state: Any) -> None:
+        fn = self.registry[parcel.action]
+        result = fn(state, parcel.target, *parcel.args)
+        if parcel.continuation is not None:
+            state.lcos[parcel.continuation.gid].set(result)
+
+
+# ---------------------------------------------------------------------------
+# Compiled lowerings
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HaloLowering:
+    """A batch of same-shaped p2p parcels lowered to ppermute legs.
+
+    Each leg is one `lax.ppermute` call: `perm[i]` is the list of
+    (src_locality, dst_locality) pairs, and `slot_src[i]` / `slot_dst[i]`
+    give, per destination locality, which local pool slot the payload is
+    read from / written to.  Legs partition the parcels so that within a
+    leg every locality sends to at most one peer (ppermute's contract).
+    """
+
+    perms: tuple            # tuple of tuple[(src, dst), ...]
+    gather_slots: tuple     # per leg: np.ndarray [n_localities] src slot
+    scatter_slots: tuple    # per leg: np.ndarray [n_localities] dst slot
+    n_parcels: int
+
+
+def lower_halo_parcels(
+    edges: Sequence[Tuple[GlobalAddress, GlobalAddress]],
+    agas: AGAS,
+) -> HaloLowering:
+    """Lower (src_block -> dst_block) payload parcels to ppermute legs.
+
+    Greedy edge-colouring: repeatedly take a maximal set of edges whose
+    (src locality, dst locality) are each used at most once; every colour
+    class becomes one ppermute leg.  Local edges (src and dst on the same
+    locality) are returned in leg form too (ppermute with i->i pairs),
+    because on-device they compile to a copy, keeping the lowering
+    uniform.
+    """
+    n_loc = len(agas.domain)
+    remaining = [
+        (agas.lookup(s), agas.lookup(d)) for s, d in edges
+    ]  # [((sloc, sslot), (dloc, dslot))]
+    perms, gathers, scatters = [], [], []
+    while remaining:
+        used_src, used_dst = set(), set()
+        leg, rest = [], []
+        for (sloc, sslot), (dloc, dslot) in remaining:
+            if sloc in used_src or dloc in used_dst:
+                rest.append(((sloc, sslot), (dloc, dslot)))
+            else:
+                used_src.add(sloc)
+                used_dst.add(dloc)
+                leg.append(((sloc, sslot), (dloc, dslot)))
+        remaining = rest
+        perm = tuple((sloc, dloc) for (sloc, _), (dloc, _) in leg)
+        gs = np.zeros(n_loc, np.int32)
+        ss = np.zeros(n_loc, np.int32)
+        for (sloc, sslot), (dloc, dslot) in leg:
+            gs[sloc] = sslot
+            ss[dloc] = dslot
+        perms.append(perm)
+        gathers.append(gs)
+        scatters.append(ss)
+    return HaloLowering(tuple(perms), tuple(gathers), tuple(scatters),
+                        n_parcels=len(edges))
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """AGAS migration lowered to a permutation of the block pool.
+
+    `src_locality/src_slot -> dst_locality/dst_slot` for each moved gid,
+    grouped into ppermute legs like halo parcels.  Applied between
+    compiled steps by ft/straggler.py.
+    """
+
+    moves: tuple  # ((gid, src_loc, src_slot, dst_loc, dst_slot), ...)
+    lowering: HaloLowering
+
+
+def migration_plan(agas: AGAS, moves: Dict[GlobalAddress, int]) -> MigrationPlan:
+    """Plan (and commit to the directory) a set of migrations.
+
+    Commits directory updates eagerly — the payload permutation encoded
+    in `lowering` must then be applied to the data arrays to restore
+    consistency (tested by tests/test_agas.py round-trips).
+    """
+    recs = []
+    edges = []
+    # Snapshot sources before committing, then migrate one by one.
+    for addr, new_loc in sorted(moves.items(), key=lambda kv: kv[0].gid):
+        src_loc, src_slot = agas.lookup(addr)
+        if src_loc == new_loc:
+            continue
+        agas.migrate(addr, new_loc)
+        dst_loc, dst_slot = agas.lookup(addr)
+        recs.append((addr.gid, src_loc, src_slot, dst_loc, dst_slot))
+    lowered = _lower_moves(recs, len(agas.domain))
+    return MigrationPlan(tuple(recs), lowered)
+
+
+def _lower_moves(recs, n_loc) -> HaloLowering:
+    remaining = [((r[1], r[2]), (r[3], r[4])) for r in recs]
+    perms, gathers, scatters = [], [], []
+    while remaining:
+        used_src, used_dst = set(), set()
+        leg, rest = [], []
+        for e in remaining:
+            (sloc, _), (dloc, _) = e
+            if sloc in used_src or dloc in used_dst:
+                rest.append(e)
+            else:
+                used_src.add(sloc)
+                used_dst.add(dloc)
+                leg.append(e)
+        remaining = rest
+        perm = tuple((s[0], d[0]) for s, d in leg)
+        gs = np.zeros(n_loc, np.int32)
+        ss = np.zeros(n_loc, np.int32)
+        for (sloc, sslot), (dloc, dslot) in leg:
+            gs[sloc] = sslot
+            ss[dloc] = dslot
+        perms.append(perm)
+        gathers.append(gs)
+        scatters.append(ss)
+    return HaloLowering(tuple(perms), tuple(gathers), tuple(scatters),
+                        n_parcels=len(recs))
+
+
+def parcel_traffic_bytes(lowering: HaloLowering, payload_bytes: int) -> dict:
+    """Traffic accounting for the roofline collective term."""
+    inter = sum(
+        1 for perm in lowering.perms for (s, d) in perm if s != d
+    )
+    intra = lowering.n_parcels - inter
+    return {
+        "parcels": lowering.n_parcels,
+        "inter_locality": inter,
+        "intra_locality": intra,
+        "bytes_on_wire": inter * payload_bytes,
+        "legs": len(lowering.perms),
+    }

@@ -1,0 +1,31 @@
+"""Failure injection for fault-tolerance tests and drills.
+
+`FailurePlan` deterministically raises `InjectedFailure` at configured
+steps — the supervisor (ft/supervisor.py) must recover from every one
+of them by restarting from the last checkpoint (tests/test_ft.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Iterable
+
+
+class InjectedFailure(RuntimeError):
+    """Stands in for a lost node / preemption / hardware fault."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    fail_at_steps: FrozenSet[int] = frozenset()
+    kind: str = "node_loss"
+
+    @staticmethod
+    def at(*steps: int) -> "FailurePlan":
+        return FailurePlan(frozenset(steps))
+
+    def check(self, step: int, already_failed: set) -> None:
+        if step in self.fail_at_steps and step not in already_failed:
+            already_failed.add(step)
+            raise InjectedFailure(
+                f"injected {self.kind} at step {step}")

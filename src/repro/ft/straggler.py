@@ -1,0 +1,75 @@
+"""Straggler mitigation: AGAS migration driven by measured load.
+
+The paper's work-queue balances load *within* a step; across steps the
+compiled engine is static, so persistent stragglers (a slow host, a
+hot AMR region) need explicit rebalancing: measure per-locality cost,
+re-place blocks (LPT), commit the move as an AGAS migration plan whose
+payload permutation runs between compiled steps (core/parcels.py).
+
+`StragglerMonitor` implements the standard detection rule (cost >
+median * threshold) and `rebalance` produces the migration plan.  For
+DP training the same monitor drives the decision to drop a slow rank's
+microbatch (redundant-batch policy) — see ft/supervisor.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.agas import AGAS, GlobalAddress, balanced_placement
+from repro.core.parcels import MigrationPlan, migration_plan
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    per_locality_cost: np.ndarray
+    stragglers: List[int]
+    imbalance: float                 # max/mean
+
+
+class StragglerMonitor:
+    def __init__(self, n_localities: int, threshold: float = 1.5,
+                 ema: float = 0.5):
+        self.n = n_localities
+        self.threshold = threshold
+        self.ema = ema
+        self._cost = np.zeros(n_localities)
+
+    def observe(self, per_locality_cost: Sequence[float]
+                ) -> StragglerReport:
+        c = np.asarray(per_locality_cost, float)
+        self._cost = self.ema * c + (1 - self.ema) * self._cost \
+            if self._cost.any() else c
+        med = np.median(self._cost)
+        stragglers = [int(i) for i in range(self.n)
+                      if med > 0 and self._cost[i] > self.threshold * med]
+        imb = float(self._cost.max() / max(self._cost.mean(), 1e-12))
+        return StragglerReport(self._cost.copy(), stragglers, imb)
+
+
+def rebalance(agas: AGAS, block_costs: Dict[GlobalAddress, float],
+              speed: Optional[Sequence[float]] = None
+              ) -> Tuple[MigrationPlan, np.ndarray]:
+    """Re-place all blocks by LPT weighted by locality speed.
+
+    `speed[i]` scales locality i's capacity (a persistent straggler has
+    speed < 1, so it receives proportionally less work).  Returns the
+    committed MigrationPlan and the predicted per-locality load.
+    """
+    n = len(agas.domain)
+    speed = np.asarray(speed if speed is not None else np.ones(n),
+                       float)
+    addrs = sorted(block_costs, key=lambda a: -block_costs[a])
+    load = np.zeros(n)
+    target: Dict[GlobalAddress, int] = {}
+    for a in addrs:
+        i = int(np.argmin((load + block_costs[a]) / speed))
+        target[a] = i
+        load[i] += block_costs[a]
+    moves = {a: t for a, t in target.items()
+             if agas.locality_of(a) != t}
+    plan = migration_plan(agas, moves)
+    return plan, load / speed

@@ -1,0 +1,42 @@
+"""Jitted public wrapper: (B, S, H, D) layout -> kernel layout."""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.flash import flash_attention_bhsd
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit,
+         static_argnames=("causal", "window", "q_offset", "bq", "bk"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, bq: int = 128,
+                    bk: int = 128) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) (GQA without repetition).
+
+    models/attention.attention() repeats kv before calling (it serves
+    the jnp path too); the kernel undoes nothing — if KV == H the
+    index map is identity, so both call patterns are valid.
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    n_rep = h // kvh
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], d)
+    out = flash_attention_bhsd(
+        qf, kf, vf, causal=causal, window=window, q_offset=q_offset,
+        n_rep=n_rep, bq=bq, bk=bk, interpret=_interpret_default())
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

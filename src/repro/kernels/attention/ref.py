@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash kernel (chunked online softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import flash_jnp, repeat_kv
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
+                        v: jnp.ndarray, *, causal: bool = True,
+                        window: int = 0,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D).  Returns (B, Sq, H, D)."""
+    n_rep = q.shape[2] // k.shape[2]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    return flash_jnp(q, k, v, causal=causal, window=window,
+                     q_offset=q_offset,
+                     chunk_q=min(128, q.shape[1]),
+                     chunk_k=min(128, k.shape[1]))

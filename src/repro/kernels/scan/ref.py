@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(da: jnp.ndarray, dbx: jnp.ndarray,
+                       c: jnp.ndarray) -> jnp.ndarray:
+    """The sequential recurrence (same math as mamba1_scan_ref's core).
+
+    da/dbx: (B, S, D, N); c: (B, S, N) -> y: (B, S, D) f32.
+    """
+    b, s, d, n = da.shape
+    h0 = jnp.zeros((b, d, n), jnp.float32)
+
+    def step(h, t):
+        da_t, dbx_t, c_t = t
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    _, ys = jax.lax.scan(
+        step, h0, (da.swapaxes(0, 1), dbx.swapaxes(0, 1),
+                   c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

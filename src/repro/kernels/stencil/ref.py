@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the stencil kernel: vmapped fused_rk3_block."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.amr.wave import fused_rk3_block
+
+
+def stencil_rk3_ref(u_ext: jnp.ndarray, r_ext: jnp.ndarray,
+                    flags: jnp.ndarray, *, dr: float, dt: float,
+                    p: int) -> jnp.ndarray:
+    """Same signature as stencil.stencil_rk3 (minus interpret)."""
+    fn = lambda u, r, f: fused_rk3_block(
+        u, r, dr, dt, p,
+        left_phys=f[0] > 0, right_phys=f[1] > 0)
+    return jax.vmap(fn)(u_ext, r_ext, flags)

@@ -1,0 +1,190 @@
+"""Analytic FLOP / HBM-traffic model per (arch x shape x mesh).
+
+Why analytic: XLA's `cost_analysis()` counts while-loop bodies once, so
+scan-built programs (all of ours) under-report by the trip factors
+(measured: yi-6b train_4k reports 8e11 flops vs the true ~5e16).  The
+collective term IS taken from the compiled HLO exactly (trip-weighted
+parse, launch/hlo_parse.py); compute and memory come from the formulas
+below, which are exact for the matmul-dominated terms and carry stated
+approximations for activation traffic.  EXPERIMENTS.md §Roofline
+documents this methodology.
+
+Conventions:
+  train   full remat: fwd(2) + recompute(2) + bwd(4) = 8 flops per
+          matmul param per token; attention/scan factor 4x forward.
+  prefill forward only: 2 flops/param/token; attention 1x forward.
+  decode  2 flops/param/new-token + cache streaming.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.models.config import ArchConfig, ShapeConfig
+
+TRAIN_MM = 8.0        # fwd + remat-recompute + bwd
+FWD_MM = 2.0
+ATTN_TRAIN = 4.0      # x forward attention flops
+ACT_ALPHA = 12.0      # residual-stream HBM touches per layer (approx)
+
+
+def _embed_params(arch: ArchConfig) -> int:
+    return arch.vocab_size * arch.d_model * \
+        (1 if arch.tie_embeddings else 2)
+
+
+def _matmul_params(arch: ArchConfig) -> int:
+    """Active matmul params per token (excludes embeddings/norms)."""
+    return arch.active_param_count() - _embed_params(arch)
+
+
+def _attn_flops_fwd_per_token(arch: ArchConfig, s: int) -> float:
+    """Score+PV flops per token per attention layer (forward)."""
+    if arch.n_heads == 0:
+        return 0.0
+    s_eff = min(s, arch.sliding_window) if arch.sliding_window else s
+    if not arch.sliding_window:
+        s_eff = s / 2.0           # causal
+    hd = arch.head_dim
+    if arch.family == "hybrid":
+        hd = 2 * arch.d_model // arch.n_heads
+    return 4.0 * s_eff * arch.n_heads * hd
+
+
+def _n_attn_layers(arch: ArchConfig) -> float:
+    if arch.family == "ssm":
+        return 0
+    if arch.family == "hybrid":
+        return arch.n_layers // arch.shared_attn_every
+    return arch.n_layers
+
+
+def _scan_flops_fwd_per_token(arch: ArchConfig) -> float:
+    if arch.family not in ("ssm", "hybrid"):
+        return 0.0
+    return 10.0 * arch.d_inner * arch.ssm_state * arch.n_layers
+
+
+def _moe_dispatch_flops_fwd(arch: ArchConfig, tokens: float,
+                            tp: int) -> float:
+    if arch.family != "moe":
+        return 0.0
+    gs = arch.moe_group_size
+    per_tok = 2 * (tp * arch.top_k * arch.capacity_factor * gs) * \
+        arch.d_model
+    return 2.0 * per_tok * tokens        # dispatch + combine einsums
+
+
+@dataclasses.dataclass
+class AnalyticCosts:
+    flops_total: float          # whole step, all chips
+    hbm_bytes_per_chip: float
+    model_flops: float          # useful 6ND / 2ND
+    breakdown: Dict[str, float]
+
+    def to_dict(self) -> dict:
+        return {"flops_total": self.flops_total,
+                "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+                "model_flops": self.model_flops,
+                "breakdown": self.breakdown}
+
+
+def analytic_costs(arch: ArchConfig, shape: ShapeConfig, n_chips: int,
+                   dp: int, tp_moe: int = 1,
+                   n_accum: int = 1) -> AnalyticCosts:
+    T = float(shape.tokens())
+    B, S = shape.global_batch, shape.seq_len
+    P_mm = float(_matmul_params(arch))
+    P_all = float(arch.param_count())
+    E_p = float(_embed_params(arch))
+    V, D = arch.vocab_size, arch.d_model
+    bk: Dict[str, float] = {}
+
+    if shape.kind == "train":
+        bk["matmul"] = TRAIN_MM * P_mm * T
+        bk["head"] = TRAIN_MM * V * D * T
+        bk["attention"] = ATTN_TRAIN * _attn_flops_fwd_per_token(
+            arch, S) * _n_attn_layers(arch) * T
+        bk["ssm_scan"] = ATTN_TRAIN * _scan_flops_fwd_per_token(arch) * T
+        bk["moe_dispatch"] = ATTN_TRAIN / 2 * _moe_dispatch_flops_fwd(
+            arch, T, tp_moe)
+        model_flops = 6.0 * arch.active_param_count() * T
+
+        p_bytes = 2.0 * P_all / n_chips
+        bk_mem = {
+            # weights: fwd + bwd + remat-recompute reads per microbatch
+            "weights": 3.0 * p_bytes * n_accum,
+            # f32 grad accumulation read+write per microbatch + opt read
+            "grad_accum": (2.0 * 4.0 * P_all / n_chips) * n_accum,
+            # optimizer: read p,m,v + write p,m,v (m,v f32)
+            "optimizer": (2 + 4 + 4 + 2 + 4 + 4) * P_all / n_chips,
+            # activations: residual stream traffic, ACT_ALPHA touches
+            "activations": ACT_ALPHA * (T / n_chips) * D * 2.0 *
+                           arch.n_layers / max(n_accum, 1) * n_accum,
+            # attention KV streaming (flash passes over K,V)
+            "attn_kv": 3.0 * _n_attn_layers(arch) * (T / n_chips) *
+                       2 * arch.n_kv_heads * arch.head_dim * 2.0,
+        }
+    elif shape.kind == "prefill":
+        bk["matmul"] = FWD_MM * P_mm * T
+        bk["head"] = FWD_MM * V * D * B      # last position only
+        bk["attention"] = _attn_flops_fwd_per_token(arch, S) * \
+            _n_attn_layers(arch) * T
+        bk["ssm_scan"] = _scan_flops_fwd_per_token(arch) * T
+        bk["moe_dispatch"] = _moe_dispatch_flops_fwd(arch, T, tp_moe) / 2
+        model_flops = 2.0 * arch.active_param_count() * T
+        bk_mem = {
+            "weights": 2.0 * P_all / n_chips,
+            "activations": ACT_ALPHA * (T / n_chips) * D * 2.0 *
+                           arch.n_layers,
+            "cache_write": _cache_bytes(arch, shape) / n_chips,
+        }
+    else:  # decode
+        bk["matmul"] = FWD_MM * P_mm * B
+        bk["head"] = FWD_MM * V * D * B
+        # attention over the whole cache, once per new token
+        bk["attention"] = _attn_flops_fwd_per_token(arch, S) * 2 * \
+            _n_attn_layers(arch) * B
+        bk["ssm_scan"] = _scan_flops_fwd_per_token(arch) * B
+        bk["moe_dispatch"] = 0.0
+        model_flops = 2.0 * arch.active_param_count() * B
+        bk_mem = {
+            "weights": 2.0 * P_all / n_chips,
+            # read the whole cache once; write one new token's worth
+            "cache_read": _cache_bytes(arch, shape) / n_chips,
+            "activations": 4.0 * (B / n_chips) * D * 2.0 *
+                           arch.n_layers,
+        }
+
+    flops = float(sum(bk.values()))
+    hbm = float(sum(bk_mem.values()))
+    bk.update({f"mem_{k}": v for k, v in bk_mem.items()})
+    return AnalyticCosts(flops, hbm, model_flops, bk)
+
+
+def _cache_bytes(arch: ArchConfig, shape: ShapeConfig) -> float:
+    """Total decode-state bytes across the batch."""
+    B, S = shape.global_batch, shape.seq_len
+    eff = min(S, arch.sliding_window) if arch.sliding_window else S
+    total = 0.0
+    if arch.family in ("dense", "audio", "moe", "vlm"):
+        n_attn = arch.n_layers
+        if arch.family == "vlm":
+            n_attn -= arch.n_layers // arch.cross_attn_every
+        total += 2.0 * n_attn * B * eff * arch.n_kv_heads * \
+            arch.head_dim * 2.0
+    if arch.family == "hybrid":
+        n_sh = arch.n_layers // arch.shared_attn_every
+        wide_hd = 2 * arch.d_model // arch.n_heads
+        total += 2.0 * n_sh * B * eff * arch.n_kv_heads * wide_hd * 2.0
+        nh = arch.d_inner // arch.ssm_head_dim
+        total += arch.n_layers * B * nh * arch.ssm_head_dim * \
+            arch.ssm_state * 4.0
+    if arch.family == "ssm":
+        total += arch.n_layers * B * arch.d_inner * arch.ssm_state * 4.0
+        total += arch.n_layers * B * (arch.ssm_conv - 1) * \
+            arch.d_inner * 2.0
+    return total

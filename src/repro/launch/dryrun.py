@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax-touching import):
+jax locks the device count at first init, and the dry-run needs 512
+placeholder host devices to build the production meshes.
+
+Per cell this script:
+  1. builds the 16x16 ("data","model") or 2x16x16 ("pod","data",
+     "model") mesh;
+  2. constructs abstract params / opt-state / cache / batch
+     (ShapeDtypeStruct only — no allocation);
+  3. jit-lowers the right step (train_step / prefill_step /
+     decode_step), compiles it, and records memory_analysis(),
+     cost_analysis(), and the collective-byte parse of the HLO;
+  4. appends the record to the results JSON (resumable cache).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--amr]
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             use_pallas: bool = False, fsdp=None,
+             options=None) -> dict:
+    import jax
+    import repro.configs as configs
+    from repro.launch import steps as S
+    from repro.launch.cost_model import analytic_costs
+    from repro.launch.hlo_analysis import Roofline, model_flops_for
+    from repro.launch.hlo_parse import collective_totals
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES, shape_applicable
+
+    arch = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, shape)
+    rec = {"arch": arch_name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "multi_pod": multi_pod}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    params_abs = S.abstract_params(arch, mesh)
+    batch_abs = S.input_specs(arch, shape, mesh)
+
+    options = options or S.StepOptions()
+    shardings_of = lambda t: jax.tree.map(lambda a: a.sharding, t)
+    if shape.kind == "train":
+        step, n_accum = S.make_train_step(arch, shape, mesh,
+                                          use_pallas=use_pallas,
+                                          options=options)
+        opt_abs = S.abstract_opt_state(arch, mesh, params_abs)
+        jfn = jax.jit(
+            step, donate_argnums=(0, 1),
+            out_shardings=(shardings_of(params_abs),
+                           shardings_of(opt_abs), None))
+        args = (params_abs, opt_abs, batch_abs)
+        rec["n_accum"] = n_accum
+    elif shape.kind == "prefill":
+        step = S.make_prefill_step(arch, shape, mesh,
+                                   use_pallas=use_pallas)
+        # The produced cache must come out in its serving sharding —
+        # without this the partitioner materializes a poorly-sharded
+        # (up to 24 GiB/device) output (§Perf log, baseline bug).
+        # prefill's cache tree matches init_cache's, so the decode
+        # cache shardings apply directly.
+        cache_abs = S.abstract_cache(arch, shape, mesh)
+        jfn = jax.jit(step,
+                      out_shardings=(None, shardings_of(cache_abs)))
+        args = (params_abs, batch_abs)
+    else:
+        step = S.make_decode_step(arch, shape, mesh)
+        cache_abs = S.abstract_cache(arch, shape, mesh)
+        jfn = jax.jit(step, donate_argnums=(1,),
+                      out_shardings=(None, shardings_of(cache_abs)))
+        args = (params_abs, cache_abs, batch_abs)
+
+    from repro.models.layers import constraint_mesh
+    with mesh, constraint_mesh(mesh):
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    cs = collective_totals(hlo)           # trip-weighted (exact)
+    ac = analytic_costs(
+        arch, shape, n_chips,
+        dp=n_chips // mesh.shape["model"],
+        tp_moe=S.model_tp(arch, mesh),
+        n_accum=rec.get("n_accum", 1))
+    # wire_bytes_tpu corrects for the CPU backend's bf16->f32
+    # legalization (activation collectives carry 2x bytes in this
+    # artifact vs a TPU compilation); raw bytes stay in `collectives`.
+    rl = Roofline(flops=ac.flops_total, hbm_bytes=ac.hbm_bytes_per_chip
+                  * n_chips, wire_bytes=cs.wire_bytes_tpu,
+                  n_chips=n_chips,
+                  model_flops=model_flops_for(arch, shape),
+                  kind=shape.kind)
+    dev_bytes = getattr(mem, "temp_size_in_bytes", 0) + \
+        getattr(mem, "argument_size_in_bytes", 0) + \
+        getattr(mem, "output_size_in_bytes", 0) - \
+        getattr(mem, "alias_size_in_bytes", 0)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "per_device_total": dev_bytes,
+            "per_device_gib": round(dev_bytes / 2**30, 3),
+        },
+        collectives=cs.to_dict(),
+        hlo_cost_analysis={"flops_body_once": float(cost.get("flops",
+                                                             0.0)),
+                           "bytes_body_once": float(
+                               cost.get("bytes accessed", 0.0))},
+        analytic=ac.to_dict(),
+        roofline=rl.to_dict(),
+        hlo_bytes=len(hlo),
+    )
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--amr", action="store_true",
+                    help="also dry-run the compiled AMR engine")
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    from repro.models.config import SHAPES
+
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    def key(a, s, mp):
+        return f"{a}|{s}|{'2pod' if mp else '1pod'}"
+
+    cells = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        for a in configs.ARCHS:
+            for s in SHAPES:
+                for mp in meshes:
+                    cells.append((a, s, mp))
+    elif args.arch and args.shape:
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+    if args.amr:
+        for mp in meshes:
+            cells.append(("AMR-wave-uniform", "amr", mp))
+
+    failures = 0
+    for a, s, mp in cells:
+        k = key(a, s, mp)
+        if k in results and results[k].get("status") in ("ok",
+                                                         "skipped") \
+                and not args.force:
+            print(f"[cached] {k}", flush=True)
+            continue
+        print(f"[dryrun] {k} ...", flush=True)
+        try:
+            if a == "AMR-wave-uniform":
+                rec = run_amr_cell(mp)
+            else:
+                rec = run_cell(a, s, mp, use_pallas=args.use_pallas)
+            print(f"  -> {rec['status']} "
+                  f"mem={rec.get('memory', {}).get('per_device_gib', '-')}GiB "
+                  f"compile={rec.get('compile_s', '-')}s", flush=True)
+        except Exception as e:
+            rec = {"arch": a, "shape": s, "multi_pod": mp,
+                   "status": "failed", "error": repr(e),
+                   "trace": traceback.format_exc()[-2000:]}
+            failures += 1
+            print(f"  -> FAILED: {e!r}", flush=True)
+        results[k] = rec
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"done: {len(cells)} cells, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+def run_amr_cell(multi_pod: bool, steps_per_exchange: int = 1) -> dict:
+    """Dry-run the paper's compiled AMR engine on the production mesh."""
+    import jax
+    from repro.amr import compiled as cp
+    from repro.amr.wave import H, WaveProblem
+    from repro.launch.hlo_analysis import Roofline
+    from repro.launch.hlo_parse import collective_totals
+    from repro.launch.mesh import make_production_mesh
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names
+    prob = WaveProblem(rmax=100.0, amplitude=0.004)
+    cfg = cp.CompiledAMRConfig(grain=2048, slots=16, n_steps=16,
+                               steps_per_exchange=steps_per_exchange)
+    step, mk, _init, _to_g, shard, info = cp.make_uniform_step(
+        prob, cfg, mesh, axes)
+    with mesh:
+        lowered = jax.jit(step).lower(mk())
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cs = collective_totals(compiled.as_text())
+    n_chips = mesh.devices.size
+    n_pts = info["n_points"]
+    K = cfg.steps_per_exchange
+    # Analytic terms (the fused-step flop count is ~60/point incl. the
+    # shrinking-halo overlap; HBM = one pool read+write per K steps).
+    halo_overhead = 1.0 + 3.0 * K * (K + 1) / cfg.grain
+    flops = 60.0 * n_pts * cfg.n_steps * halo_overhead
+    model_flops = 60.0 * n_pts * cfg.n_steps
+    pool_bytes = n_pts * 3 * 4.0
+    hbm = 2.0 * pool_bytes * (cfg.n_steps / K)
+    rl = Roofline(flops, hbm, cs.wire_bytes_tpu, n_chips, model_flops,
+                  kind="train")
+    return {
+        "arch": "AMR-wave-uniform",
+        "shape": f"amr_k{K}" if K > 1 else "amr",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "n_points": n_pts, "steps_per_exchange": K,
+        "memory": {"per_device_gib": round(
+            (getattr(mem, "temp_size_in_bytes", 0) +
+             getattr(mem, "argument_size_in_bytes", 0)) / 2**30, 4)},
+        "collectives": cs.to_dict(),
+        "roofline": rl.to_dict(),
+    }
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,175 @@
+"""HLO-text analysis: collective bytes + roofline terms.
+
+cost_analysis() gives FLOPs and bytes-accessed; collective traffic is
+not in there, so we parse the optimized HLO (`compiled.as_text()`) and
+sum operand bytes of every communication op, weighted by the algorithm
+factor of each collective (ring all-reduce moves ~2x the shard bytes,
+all-gather/reduce-scatter ~1x, etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+    "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# Bytes moved on the wire per shard-byte of output/input, ring algos.
+_ALGO_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]          # raw operand bytes per shard
+    wire_bytes: float                      # algo-weighted on-the-wire
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = defaultdict(int)
+    byts: Dict[str, int] = defaultdict(int)
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+"
+                     r"([\w\-]+)\(", ls)
+        if not m:
+            continue
+        out_shape, opname = m.group(1), m.group(2)
+        kind = None
+        for k in _COLLECTIVE_KINDS:
+            if opname == k or opname.startswith(k + "-"):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if opname.endswith("-done"):        # async pair: count at start
+            continue
+        b = _shape_bytes(out_shape)
+        counts[kind] += 1
+        byts[kind] += b
+        wire += b * _ALGO_FACTOR[kind]
+    return CollectiveStats(dict(counts), dict(byts), wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total HLO flops (whole program)
+    hbm_bytes: float             # bytes accessed (whole program)
+    wire_bytes: float            # algo-weighted collective bytes/shard
+    n_chips: int
+    model_flops: float           # 6*N*D useful flops
+    kind: str = "train"          # train|prefill|decode|amr
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # wire_bytes is per-shard traffic; each chip drives ~3 usable
+        # ICI links on a v5e 2D torus in practice -> 3x link bw.
+        return self.wire_bytes / (3 * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def ideal_time(self) -> float:
+        """The unavoidable lower bound for this step kind.
+
+        train/prefill: useful flops at peak MXU.  decode: the analytic
+        HBM floor (weights + cache must stream once per token) — a
+        decode step is memory-bound by construction, so grading it
+        against the compute roof would be meaningless.
+        """
+        if self.kind == "decode":
+            return self.hbm_bytes / (self.n_chips * HBM_BW)
+        return self.model_flops / (self.n_chips * PEAK_FLOPS_BF16)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """(ideal lower bound) / (bound time): the §Perf score."""
+        return self.ideal_time / self.bound_time if self.bound_time \
+            else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes, "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(arch, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode counts 1 token/seq,
+    prefill counts forward only (2*N*D)."""
+    n = arch.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens()
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens()
+    # decode: one new token per sequence (+ attention over the cache,
+    # excluded from the useful-flops definition by convention)
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,203 @@
+"""Trip-count-aware HLO traversal for exact collective accounting.
+
+`compiled.cost_analysis()` counts every while-loop body ONCE, so any
+program built from lax.scan (all of ours: microbatch accumulation,
+scan-over-layers, flash-attention chunks) under-reports totals by the
+trip factors.  Collectives, however, are sparse and parseable: this
+module walks the HLO text's computation call graph, extracts each while
+loop's trip count from its condition computation (the `s32[]
+constant(N)` bound), multiplies nested trips, and weights every
+collective op by its enclosing computation's execution count.
+
+This gives the EXACT per-shard collective bytes of one step — the
+roofline's collective term.  The compute/memory terms come from the
+analytic model (launch/cost_model.py); see EXPERIMENTS.md §Roofline
+for the methodology note.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.hlo_analysis import (_ALGO_FACTOR, _COLLECTIVE_KINDS,
+                                       _shape_bytes)
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*?\))?\s*->"
+                       r".*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w.\-]+)[^\n]*?body=%?([\w.\-]+)")
+_WHILE_RE2 = re.compile(
+    r"while\(.*?\)[^\n]*?body=%?([\w.\-]+)[^\n]*?condition=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                    r"(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                    r"([\w\-]+)\(")
+
+
+@dataclasses.dataclass
+class HloGraph:
+    computations: Dict[str, List[str]]      # name -> op lines
+    entry: str
+    while_edges: Dict[str, List[Tuple[str, int]]]  # comp -> [(body, trip)]
+    call_edges: Dict[str, List[str]]
+
+
+def parse_hlo(txt: str) -> HloGraph:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for line in txt.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    def trip_of(cond: str) -> int:
+        for ln in comps.get(cond, []):
+            c = _CONST_RE.search(ln)
+            if c:
+                return int(c.group(1))
+        return 1
+
+    wes: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    ces: Dict[str, List[str]] = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            mw = _WHILE_RE.search(ln) or None
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                wes[name].append((body, trip_of(cond)))
+                wes[name].append((cond, trip_of(cond)))
+                continue
+            mw2 = _WHILE_RE2.search(ln)
+            if mw2:
+                body, cond = mw2.group(1), mw2.group(2)
+                wes[name].append((body, trip_of(cond)))
+                wes[name].append((cond, trip_of(cond)))
+                continue
+            for mc in _CALL_RE.finditer(ln):
+                ces[name].append(mc.group(1))
+    return HloGraph(comps, entry, dict(wes), dict(ces))
+
+
+def execution_counts(g: HloGraph) -> Dict[str, float]:
+    """Times each computation executes per program run."""
+    mult: Dict[str, float] = defaultdict(float)
+    mult[g.entry] = 1.0
+    # The computation reference graph is acyclic; process in topological
+    # order via repeated relaxation (small graphs: fine).
+    order = list(g.computations)
+    for _ in range(len(order)):
+        changed = False
+        new = defaultdict(float)
+        new[g.entry] = 1.0
+        for name, m in list(mult.items()):
+            for body, trip in g.while_edges.get(name, []):
+                new[body] += m * trip
+            for callee in g.call_edges.get(name, []):
+                new[callee] += m
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult)
+
+
+@dataclasses.dataclass
+class CollectiveTotals:
+    counts: Dict[str, float]          # executions (trip-weighted)
+    bytes_by_kind: Dict[str, float]   # per-shard operand bytes
+    wire_bytes: float                 # algo-weighted
+    static_counts: Dict[str, int]     # ops in text (structure)
+    # XLA's CPU backend float-normalizes bf16 compute to f32, so
+    # activation collectives in this artifact carry 2x the bytes a TPU
+    # compilation would.  `wire_bytes_tpu` halves f32-dtyped collective
+    # traffic (bf16-model assumption) — the roofline's corrected term.
+    wire_bytes_tpu: float = 0.0
+
+    def to_dict(self) -> dict:
+        return {"counts": self.counts,
+                "bytes_by_kind": self.bytes_by_kind,
+                "wire_bytes": self.wire_bytes,
+                "wire_bytes_tpu": self.wire_bytes_tpu,
+                "static_counts": self.static_counts}
+
+
+def top_collectives(txt: str, n: int = 12) -> List[dict]:
+    """The n largest collectives by trip-weighted bytes, with source
+    metadata (op_name=...) for attribution — the §Perf microscope."""
+    g = parse_hlo(txt)
+    mult = execution_counts(g)
+    rows = []
+    meta_re = re.compile(r'op_name="([^"]+)"')
+    for name, lines in g.computations.items():
+        m = mult.get(name, 0.0)
+        for ln in lines:
+            mo = _OP_RE.match(ln)
+            if not mo:
+                continue
+            shape_str, opname = mo.group(1), mo.group(2)
+            kind = None
+            for k in _COLLECTIVE_KINDS:
+                if opname == k or opname.startswith(k + "-"):
+                    kind = k
+                    break
+            if kind is None or opname.endswith("-done"):
+                continue
+            b = _shape_bytes(shape_str)
+            src = meta_re.search(ln)
+            rows.append({
+                "kind": kind, "shape": shape_str[:60],
+                "bytes_each": b, "execs": m, "total_bytes": b * m,
+                "source": (src.group(1)[-110:] if src else "?"),
+            })
+    rows.sort(key=lambda r: -r["total_bytes"])
+    return rows[:n]
+
+
+def collective_totals(txt: str) -> CollectiveTotals:
+    g = parse_hlo(txt)
+    mult = execution_counts(g)
+    counts: Dict[str, float] = defaultdict(float)
+    byts: Dict[str, float] = defaultdict(float)
+    static: Dict[str, int] = defaultdict(int)
+    wire = 0.0
+    wire_tpu = 0.0
+    for name, lines in g.computations.items():
+        m = mult.get(name, 0.0)
+        for ln in lines:
+            mo = _OP_RE.match(ln)
+            if not mo:
+                continue
+            shape_str, opname = mo.group(1), mo.group(2)
+            kind = None
+            for k in _COLLECTIVE_KINDS:
+                if opname == k or opname.startswith(k + "-"):
+                    kind = k
+                    break
+            if kind is None or opname.endswith("-done"):
+                continue
+            b = _shape_bytes(shape_str)
+            static[kind] += 1
+            counts[kind] += m
+            byts[kind] += b * m
+            wire += b * m * _ALGO_FACTOR[kind]
+            # f32 traffic would be bf16 on TPU (see class docstring)
+            b_tpu = b / 2.0 if "f32[" in shape_str else b
+            wire_tpu += b_tpu * m * _ALGO_FACTOR[kind]
+    return CollectiveTotals(dict(counts), dict(byts), wire,
+                            dict(static), wire_tpu)

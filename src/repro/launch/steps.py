@@ -1,0 +1,230 @@
+"""Step builders: train_step / prefill_step / decode_step + input specs.
+
+These are what the dry-run lowers and the drivers execute.  Everything
+here is mesh-agnostic: shardings come from distributed/sharding.py and
+are attached via jit in_shardings (params/opt/cache) and the batch
+specs returned by `input_specs`.
+
+train_step uses gradient accumulation over microbatches via lax.scan
+(n_accum = global_batch / (microbatch_per_device * |dp|)) so the
+activation working set is one microbatch regardless of global batch —
+the knob that keeps command-r-plus-104b train_4k inside 16 GB/chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import transformer as T
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+                               init_opt_state)
+
+
+def model_tp(arch: ArchConfig, mesh: Mesh) -> int:
+    """Virtual-expert split factor for MoE archs on this mesh."""
+    if arch.family != "moe":
+        return 1
+    m = mesh.shape["model"]
+    return max(m // arch.n_experts, 1)
+
+
+def frontend_dim(arch: ArchConfig) -> int:
+    from repro.models.transformer import _frontend_dim
+    return _frontend_dim(arch)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct; no allocation) — the dry-run diet
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch stand-ins for one (arch x shape) cell."""
+    bs = shd.batch_shardings(arch, shape, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "decode":
+        out["tokens"] = sds((b, 1), jnp.int32, sharding=bs["tokens"])
+    else:
+        out["tokens"] = sds((b, s), jnp.int32, sharding=bs["tokens"])
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), jnp.int32, sharding=bs["labels"])
+    if arch.family == "vlm":
+        out["patch_embeds"] = sds(
+            (b, arch.n_frontend_tokens, frontend_dim(arch)),
+            jnp.dtype(arch.dtype), sharding=bs["patch_embeds"])
+    if arch.family == "audio" and shape.kind != "decode":
+        out["frame_embeds"] = sds((b, s, arch.d_model),
+                                  jnp.dtype(arch.dtype),
+                                  sharding=bs["frame_embeds"])
+    return out
+
+
+def abstract_params(arch: ArchConfig, mesh: Mesh) -> Any:
+    tp = model_tp(arch, mesh)
+    shapes = jax.eval_shape(
+        lambda k: T.init_params(k, arch, tp), jax.random.PRNGKey(0))
+    fsdp = True if arch.force_fsdp else None
+    shards = shd.param_shardings(shapes, arch, mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=sh),
+        shapes, shards)
+
+
+def abstract_opt_state(arch: ArchConfig, mesh: Mesh, params_abs) -> Any:
+    shapes = jax.eval_shape(init_opt_state, params_abs)
+    def shard_like(s, path_sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=path_sh)
+    mu = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=p.sharding),
+        shapes.mu, params_abs)
+    nu = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=p.sharding),
+        shapes.nu, params_abs)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return OptState(step, mu, nu)
+
+
+def abstract_cache(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                   ) -> Any:
+    shapes = jax.eval_shape(
+        lambda: T.init_cache(arch, shape.global_batch, shape.seq_len))
+    shards = shd.cache_shardings(arch, shape, mesh, shapes)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=sh),
+        shapes, shards)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    """Perf-hillclimb levers (EXPERIMENTS.md §Perf records each flip).
+
+    grad_accum_dtype: f32 (baseline, exact) or bf16 (halves the
+        accumulation buffer + its HBM/wire traffic; stochastic-rounding
+        caveat documented).
+    constrain_acts: with_sharding_constraint on the residual stream
+        after every microbatch fold (stops the partitioner from
+        speculatively resharding activations onto "model").
+    accum_in_opt_dtype: fold the 1/n_accum scale into the loss
+        (one fewer pass over the gradient tree).
+    """
+
+    grad_accum_dtype: str = ""     # "" -> the arch's configured dtype
+    constrain_acts: bool = True
+    scale_in_loss: bool = True
+
+
+def make_train_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    use_pallas: bool = False,
+                    donate: bool = True,
+                    options: StepOptions = StepOptions()) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    tp = model_tp(arch, mesh)
+    dp = shd.axis_size(mesh, *shd.dp_axes(mesh))
+    gb = shape.global_batch
+    mb = arch.microbatch_per_device * dp
+    n_accum = max(gb // max(mb, 1), 1)
+    mb = gb // n_accum
+    acc_dt = jnp.dtype(options.grad_accum_dtype or
+                       arch.grad_accum_dtype)
+    scale = 1.0 / n_accum if options.scale_in_loss else 1.0
+
+    def loss_of(p, batch):
+        return T.loss_fn(p, batch, arch, use_pallas, tp) * scale
+
+    def train_step(params, opt_state, batch):
+        def fold(i, b):
+            return jax.tree.map(
+                lambda x: x.reshape((n_accum, mb) + x.shape[1:])[i], b)
+
+        def acc_step(carry, i):
+            loss_acc, grads_acc = carry
+            mb_batch = fold(i, batch)
+            if options.constrain_acts:
+                mb_batch = {k: shd.constrain(v, mesh,
+                                             shd.dp_axes(mesh))
+                            for k, v in mb_batch.items()}
+            loss, grads = jax.value_and_grad(loss_of)(params, mb_batch)
+            grads = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dt), grads_acc, grads)
+            return (loss_acc + loss, grads), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            acc_step, (jnp.float32(0.0), zeros), jnp.arange(n_accum))
+        if not options.scale_in_loss:
+            grads = jax.tree.map(lambda g: g / n_accum, grads)
+        new_params, new_opt, metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss_sum / (n_accum * scale)
+        return new_params, new_opt, metrics
+
+    return train_step, n_accum
+
+
+def make_prefill_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                      use_pallas: bool = False) -> Callable:
+    tp = model_tp(arch, mesh)
+
+    def prefill_step(params, batch):
+        hidden, cache = T.prefill(params, batch, arch, use_pallas, tp)
+        logits = T.logits_fn(params, hidden)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                     ) -> Callable:
+    tp = model_tp(arch, mesh)
+
+    def dstep(params, cache, batch):
+        return T.decode_step(params, cache, batch, arch, tp)
+
+    return dstep
+
+
+def make_concrete_batch(arch: ArchConfig, shape: ShapeConfig,
+                        key, batch_override: Optional[int] = None,
+                        seq_override: Optional[int] = None
+                        ) -> Dict[str, jnp.ndarray]:
+    """Small concrete batch for host runs (examples/tests)."""
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    ks = jax.random.split(key, 4)
+    out = {"tokens": jax.random.randint(ks[0], (b, s if shape.kind !=
+                                                 "decode" else 1), 0,
+                                        arch.vocab_size)}
+    if shape.kind == "train":
+        out["labels"] = jax.random.randint(ks[1], (b, s), 0,
+                                           arch.vocab_size)
+    if arch.family == "vlm":
+        out["patch_embeds"] = jax.random.normal(
+            ks[2], (b, arch.n_frontend_tokens, frontend_dim(arch)),
+            jnp.dtype(arch.dtype))
+    if arch.family == "audio" and shape.kind != "decode":
+        out["frame_embeds"] = 0.1 * jax.random.normal(
+            ks[3], (b, s, arch.d_model), jnp.dtype(arch.dtype))
+    return out

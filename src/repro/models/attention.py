@@ -1,0 +1,221 @@
+"""Attention: GQA, RoPE (full / partial-2d), sliding window, cross-attn,
+chunked-flash prefill, and sequence-sharded decode.
+
+Design notes (DESIGN.md §6):
+* Prefill/train uses a chunked online-softmax attention (`flash_jnp`)
+  whose memory is O(S * chunk) rather than O(S^2) — the pure-jnp twin
+  of kernels/attention (the Pallas TPU kernel), selected by
+  `use_pallas`.
+* Decode attends one query against a KV cache laid out (B, S, KV, D).
+  Under the production sharding the cache's S axis is sharded over the
+  "model" mesh axis (context parallelism): the partial-softmax combine
+  (m, l, o) is an associative reduction the SPMD partitioner lowers to
+  one small all-reduce — this works for any kv-head count, which is why
+  it is the default decode plan (chatglm has kv=2 < 16-way TP).
+* Sliding-window archs (danube, mixtral) cap their decode cache at the
+  window size — the sub-quadratic property that qualifies them for the
+  long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, _init_dense
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, rot_dim: int, theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(positions...) -> cos/sin of shape (..., rot_dim/2)."""
+    freqs = 1.0 / (theta ** (
+        jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """Rotary embedding on the first `fraction` of head dims.
+
+    x: (..., S, H, D); cos/sin: (S, rot/2).  chatglm3's "2d RoPE"
+    rotates only the first half of each head (fraction=0.5), leaving
+    the rest as pass-through channels.
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    xr = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr, xp], axis=-1) if rot < d else xr
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, d_in: Optional[int] = None) -> Params:
+    d = d_in or cfg.d_model
+    hd, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": _init_dense(ks[0], d, h * hd, dt),
+        "wk": _init_dense(ks[1], d, kv * hd, dt),
+        "wv": _init_dense(ks[2], d, kv * hd, dt),
+        "wo": _init_dense(ks[3], h * hd, cfg.d_model, dt),
+    }
+
+
+def qkv(params: Params, x: jnp.ndarray, cfg: ArchConfig
+        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kv, n_rep, d)
+    ).reshape(b, s, kv * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (jnp oracle of kernels/attention)
+# ---------------------------------------------------------------------------
+
+def flash_jnp(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: int = 0,
+              q_offset: int = 0, chunk_q: int = 512,
+              chunk_k: int = 512) -> jnp.ndarray:
+    """Online-softmax attention, O(S*chunk) memory.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, H, D) (kv already head-repeated).
+    window > 0 restricts to keys within `window` positions before the
+    query (sliding-window attention).  q_offset is the absolute
+    position of q[0] relative to k[0] (for decode/continuation).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nq = max(sq // chunk_q, 1)
+    cq = sq // nq
+    nk = max(sk // chunk_k, 1)
+    ck = sk // nk
+    scale = d ** -0.5
+    qs = q.reshape(b, nq, cq, h, d).transpose(1, 0, 3, 2, 4)  # nq,b,h,cq,d
+    ks_ = k.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, ck, h, d).transpose(1, 0, 3, 2, 4)
+
+    def q_block(qi_q):
+        qi, qb = qi_q
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        def k_step(carry, ki_kb):
+            m, l, acc = carry
+            ki, kb, vb = ki_kb
+            k_pos = ki * ck + jnp.arange(ck)
+            s_ = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window > 0:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+            # guard fully-masked rows (all -inf)
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s_ - m_safe[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.exp(
+                jnp.where(jnp.isinf(m), 0.0, m) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0),
+            (jnp.arange(nk), ks_, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), qs))     # nq,b,h,cq,d
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              cfg: ArchConfig, causal: bool = True,
+              q_offset: int = 0, use_pallas: bool = False,
+              chunk_q: int = 512, chunk_k: int = 512) -> jnp.ndarray:
+    """Full prefill/train attention with GQA repeat + window."""
+    n_rep = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    if use_pallas:
+        from repro.kernels.attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal,
+                               window=cfg.sliding_window,
+                               q_offset=q_offset)
+    return flash_jnp(q, k, v, causal=causal, window=cfg.sliding_window,
+                     q_offset=q_offset, chunk_q=chunk_q, chunk_k=chunk_k)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray,
+                     cfg: ArchConfig) -> jnp.ndarray:
+    """q: (B, 1, H, D); caches: (B, S, KV, D); cache_len: () valid len.
+
+    Computed as masked full attention over the cache: with the cache's
+    S axis sharded over "model", XLA's partitioner reduces the softmax
+    stats across shards (the log-sum-exp combine) — flash-decoding's
+    parallelism for free.
+    """
+    from repro.models.layers import constrain_spec
+    n_rep = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    k = repeat_kv(k_cache, n_rep)
+    v = repeat_kv(v_cache, n_rep)
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    # Split-K (flash-decoding): keep the score/softmax S axis sharded
+    # over "model" so the partitioner reduces softmax statistics and
+    # the PV product across shards (two tiny all-reduces) instead of
+    # ALL-GATHERING the sequence-sharded KV cache (which cost ~34 GB
+    # per decode step at 32k context — §Perf fix F3).
+    s = constrain_spec(s, "U", "U", "U", "model")
+    # SWA caches are already window-sized ring buffers, so validity is
+    # purely a slot count (softmax is permutation-invariant over keys
+    # whose RoPE phases were baked at write time).
+    pos = jnp.arange(k.shape[1])
+    mask = pos[None, None, None, :] < cache_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    p = constrain_spec(p, "U", "U", "U", "model")
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)

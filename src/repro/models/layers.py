@@ -1,0 +1,179 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Conventions
+-----------
+* Every module is an (init, apply) pair of plain functions; params are
+  nested dicts of jnp arrays.  No framework dependency.
+* Weight layouts are chosen so the sharding rules in
+  distributed/sharding.py apply by path name:
+    wq,wk,wv : (d_model, heads*head_dim)   last dim -> "model"
+    wo       : (heads*head_dim, d_model)   first dim -> "model"
+    wi,wg    : (d_model, d_ff)             last dim -> "model"
+    wdown    : (d_ff, d_model)             first dim -> "model"
+    embed    : (vocab, d_model)            first dim -> "model"
+* Computation dtype follows the input; params are stored in the config
+  dtype (bf16 for the full archs, f32 for smoke tests); norms and
+  softmax accumulate in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+import contextlib
+
+_CONSTRAINT_MESH = [None]
+
+
+@contextlib.contextmanager
+def constraint_mesh(mesh):
+    """Registers the mesh used by `constrain_spec` during tracing.
+
+    The launch layer wraps .lower() in this; model code can then place
+    sharding constraints without threading mesh objects through every
+    call.  Host/CPU tests never enter it, so constraints are no-ops
+    there.
+    """
+    _CONSTRAINT_MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _CONSTRAINT_MESH.pop()
+
+
+def constrain_spec(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint against the registered mesh, if any.
+
+    `spec` entries: "U" = unconstrained, None = replicated, or a mesh
+    axis name (skipped when the mesh lacks it).  No-op without a
+    registered mesh.
+    """
+    mesh = _CONSTRAINT_MESH[-1]
+    if mesh is None:
+        return x
+    P = jax.sharding.PartitionSpec
+
+    def size_of(axes) -> int:
+        axes = (axes,) if isinstance(axes, str) else axes
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    fixed = []
+    for dim, s in zip(x.shape, spec):
+        if s == "U":
+            fixed.append(P.UNCONSTRAINED)
+            continue
+        if s == "DP":   # the data-parallel axes present in the mesh
+            s = tuple(a for a in ("pod", "data")
+                      if a in mesh.axis_names) or None
+        elif isinstance(s, str) and s not in mesh.axis_names:
+            fixed.append(P.UNCONSTRAINED)
+            continue
+        # indivisible dims cannot take the axis: leave unconstrained
+        if s is not None and dim % size_of(s) != 0:
+            fixed.append(P.UNCONSTRAINED)
+        else:
+            fixed.append(s)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*fixed)))
+
+
+def _init_dense(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Params:
+    return {"w": _init_dense(key, d_in, d_out, dtype)}
+
+
+def dense(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"]
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5
+            ) -> jnp.ndarray:
+    """RMSNorm with f32 statistics but an input-dtype data path.
+
+    The variance is an einsum contraction with f32 ACCUMULATION — no
+    f32 (B, S, D) copy of the residual stream ever materializes (the
+    baseline `x.astype(f32); mean(x*x)` version produced f32
+    activation-sized tensors whose gradients the partitioner then
+    all-gathered/all-reduced at 2x bf16 bytes in every layer —
+    EXPERIMENTS.md §Perf fix F1).
+    """
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None]
+    var = var / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Params:
+    emb = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"embedding": emb.astype(dtype)}
+
+
+def embed_lookup(params: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["embedding"], ids, axis=0)
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": _init_dense(k1, d, d_ff, dtype),
+        "wg": _init_dense(k2, d, d_ff, dtype),
+        "wdown": _init_dense(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    return h @ params["wdown"]
+
+
+def cross_entropy_chunked(x: jnp.ndarray, out_embed: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int
+                          ) -> jnp.ndarray:
+    """Mean next-token CE with a chunked vocab projection.
+
+    x: (B, S, D) final hidden states; out_embed: (V, D); labels: (B, S).
+    The (B, chunk, V) logits tensor is the only vocab-sized buffer ever
+    materialized — with V up to 256k this is what keeps the train step
+    inside HBM (DESIGN.md §6).  Chunks are rematerialized on backward.
+    """
+    b, s, d = x.shape
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    xs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xc_lc):
+        xc, lc = xc_lc
+        logits = (xc @ out_embed.T.astype(xc.dtype)).astype(jnp.float32)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(
+            jnp.sum(jnp.exp(logits - m), axis=-1))
+        # one-hot-free target logit extraction (keeps vocab sharded)
+        v = logits.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        tgt = jnp.sum(jnp.where(iota == lc[..., None], logits, 0.0),
+                      axis=-1)
+        return carry + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (xs, ls))
+    return total / (b * n_chunks * chunk)

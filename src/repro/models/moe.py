@@ -1,0 +1,143 @@
+"""Mixture-of-Experts: top-k routing with GShard grouped dense dispatch.
+
+The dispatch/combine path is the LM-side incarnation of ParalleX
+*parcels*: a token routed to a remote expert is exactly "move the work
+to the data" — under the production sharding (groups over "data",
+experts over "model") the dispatch einsums lower to the all-to-all /
+slice collectives the roofline's collective term measures.
+
+EP x TP composition (DESIGN.md §6): when n_experts < the model-axis
+size M, each expert is split into tp = M / n_experts *virtual experts*
+along d_ff (mixtral: 8 experts x 2 TP -> 16 virtual).  The dispatch
+mask is kron-expanded so a token visits both halves of its expert; the
+combine sum over virtual experts IS the tensor-parallel psum.  Gate
+probabilities are applied once per real expert because the halves'
+partial outputs add to the full output.
+
+Capacity: per group of `group_size` tokens, each (virtual) expert owns
+C = ceil(top_k * group_size * capacity_factor / n_virtual) slots;
+overflow tokens are dropped (standard GShard top-2 behaviour).  Groups
+keep the dispatch tensor at O(group_size * C) per device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, _init_dense
+
+
+def moe_init(key, cfg: ArchConfig, tp: int = 1) -> Params:
+    """tp = virtual-expert split factor (model_axis / n_experts at the
+    production mesh; 1 on CPU smoke tests)."""
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    ev, ffv = e * tp, ff // tp
+    return {
+        "router": _init_dense(ks[0], d, e, jnp.float32),
+        # virtual-expert stacked weights: (EV, d, ff/tp) / (EV, ff/tp, d)
+        "wi": _init_dense(ks[1], d, ffv * ev, dt).reshape(d, ev, ffv)
+              .swapaxes(0, 1),
+        "wg": _init_dense(ks[2], d, ffv * ev, dt).reshape(d, ev, ffv)
+              .swapaxes(0, 1),
+        "wdown": _init_dense(ks[3], ffv * ev, d, dt).reshape(ev, ffv, d),
+    }
+
+
+def top2_dispatch(logits: jnp.ndarray, capacity: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """GShard top-2 routing for one token group.
+
+    logits: (G, T, E) f32.  Returns (dispatch (G,T,E,C) bool-ish,
+    combine (G,T,E,C) f32, aux_loss ()).
+    """
+    g, t, e = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    # top-1
+    idx1 = jnp.argmax(probs, axis=-1)
+    mask1 = jax.nn.one_hot(idx1, e, dtype=jnp.float32)
+    p1 = jnp.sum(probs * mask1, axis=-1)
+    # top-2 (mask out the winner)
+    probs2 = probs * (1.0 - mask1)
+    idx2 = jnp.argmax(probs2, axis=-1)
+    mask2 = jax.nn.one_hot(idx2, e, dtype=jnp.float32)
+    p2 = jnp.sum(probs * mask2, axis=-1)
+    # renormalize the pair
+    denom = jnp.maximum(p1 + p2, 1e-9)
+    p1, p2 = p1 / denom, p2 / denom
+    # positions within expert buffers (top-1 claims slots first)
+    pos1 = jnp.cumsum(mask1, axis=1) * mask1 - mask1      # 0-based
+    count1 = jnp.sum(mask1, axis=1, keepdims=True)        # (G,1,E)
+    pos2 = (jnp.cumsum(mask2, axis=1) - mask2 + count1) * mask2
+    keep1 = mask1 * (pos1 < capacity)
+    keep2 = mask2 * (pos2 < capacity)
+    oh1 = jax.nn.one_hot(pos1, capacity, dtype=jnp.float32) * \
+        keep1[..., None]
+    oh2 = jax.nn.one_hot(pos2, capacity, dtype=jnp.float32) * \
+        keep2[..., None]
+    dispatch = oh1 + oh2                                  # (G,T,E,C)
+    combine = oh1 * p1[..., None, None] + oh2 * p2[..., None, None]
+    # load-balancing aux loss (Switch/GShard form)
+    me = jnp.mean(probs, axis=1)                          # (G,E)
+    ce = jnp.mean(mask1, axis=1)
+    aux = jnp.mean(me * ce) * (e * e)
+    return dispatch, combine, aux
+
+
+def moe_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+              tp: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Tokens are folded into groups of cfg.moe_group_size; each group
+    routes and disperses independently (GShard).  With groups sharded
+    over "data" and (virtual) experts over "model", all einsums below
+    are local except the final combine's psum over the expert axis.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    assert k == 2, "top-2 routing (mixtral/phi3.5)"
+    tokens = x.reshape(b * s, d)
+    gs = min(cfg.moe_group_size, tokens.shape[0])
+    n_groups = tokens.shape[0] // gs
+    xt = tokens[:n_groups * gs].reshape(n_groups, gs, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (G,T,E)
+    cap = max(int(k * gs * cfg.capacity_factor / e), 4)
+    dispatch, combine, aux = top2_dispatch(logits, cap)
+    if tp > 1:
+        # Each real expert's token set goes to ALL of its tp virtual
+        # splits (same slot); the combine-sum over virtual experts adds
+        # the partial wdown outputs — i.e. the TP psum.
+        dispatch = jnp.repeat(dispatch, tp, axis=2)
+        combine = jnp.repeat(combine, tp, axis=2)
+
+    # dispatch is a 0/1 routing tensor: its cotangent is useless (the
+    # router learns through `combine`), and killing it removes one
+    # activation-sized all-reduce per layer per microbatch (§Perf F2a).
+    dsp = jax.lax.stop_gradient(dispatch).astype(x.dtype)
+    # combine in param dtype: its (G,T,E,C) cotangent is psum'd across
+    # the expert shards every layer; f32 doubles those bytes (F2c).
+    combine = combine.astype(x.dtype)
+    from repro.models.layers import constrain_spec
+    expert_in = jnp.einsum("gtec,gtd->gecd", dsp, xt)     # (G,EV,C,D)
+    # Pin expert buffers to EP sharding (e -> "model"); without this
+    # the partitioner contracted over a model-sharded d and emitted
+    # f32 all-reduces of the (G,EV,C,F) hidden per layer (§Perf F2b).
+    expert_in = constrain_spec(expert_in, "DP", "model", "U", "U")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in,
+                               params["wg"])) * \
+        jnp.einsum("gecd,edf->gecf", expert_in, params["wi"])
+    h = constrain_spec(h, "DP", "model", "U", "U")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wdown"])
+    y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    y = y.reshape(n_groups * gs, d)
+    if n_groups * gs < tokens.shape[0]:
+        y = jnp.concatenate(
+            [y, jnp.zeros((tokens.shape[0] - n_groups * gs, d),
+                          y.dtype)], axis=0)
+    return y.reshape(b, s, d), aux

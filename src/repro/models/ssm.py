@@ -1,0 +1,346 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+Three execution paths per version, all agreeing numerically (tested):
+
+* `*_scan_ref`   — sequential `lax.scan` over time: the oracle, and the
+  decode path (one step == one scan iteration with carried state).
+* `*_chunked`    — the production train/prefill path: sequential scan
+  over chunks with parallel work inside a chunk.  Mamba-1 (per-channel
+  diagonal decay) uses an associative scan within the chunk; Mamba-2
+  (scalar decay per head) uses the SSD quadratic-within-chunk form.
+  Peak memory is O(chunk) not O(seq), which is what makes the
+  `long_500k` cell feasible.  kernels/scan is the Pallas twin of the
+  Mamba-1 chunk body.
+* decode steps carry (ssm_state, conv_state) explicitly.
+
+An SSM layer's sequential dependence is the purest dataflow chain in
+the framework — the chunk carry is literally a future passed between
+chunk tasks (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, _init_dense
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B, S, D), w: (D, K).
+
+    Returns (y, new_state) where state is the trailing K-1 inputs.
+    """
+    b, s, d = x.shape
+    k = w.shape[1]
+    if state is None:
+        state = jnp.zeros((b, k - 1, d), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i:i + s, :] * w[:, i]
+    new_state = xp[:, s:, :] if k > 1 else state
+    return y, new_state
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (diagonal per-channel decay; falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+def mamba1_init(key, cfg: ArchConfig) -> Params:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    return {
+        "in_proj": _init_dense(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (di, cfg.ssm_conv),
+                                     jnp.float32) * 0.2).astype(dt),
+        "x_proj": _init_dense(ks[2], di, dt_rank + 2 * st, dt),
+        "dt_proj": _init_dense(ks[3], dt_rank, di, dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(a),                       # f32 always
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _init_dense(ks[5], di, d, dt),
+    }
+
+
+def _mamba1_inputs(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                   conv_state: Optional[jnp.ndarray]):
+    """Shared pre-scan computation: projections + conv + discretization."""
+    di, st = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(cfg.d_model // 16, 1)
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = causal_conv1d(xin, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = xc @ params["x_proj"]
+    dt_in = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank:dt_rank + st].astype(jnp.float32)
+    c_in = proj[..., dt_rank + st:].astype(jnp.float32)
+    dt = _softplus((dt_in @ params["dt_proj"]).astype(jnp.float32)
+                   + params["dt_bias"])            # (B,S,di)
+    a = -jnp.exp(params["a_log"])                  # (di, st)
+    da = jnp.exp(dt[..., None] * a)                # (B,S,di,st)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * b_in[..., None, :]
+    return xc, z, da, dbx, c_in, new_conv
+
+
+def mamba1_scan_ref(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                    ssm_state: Optional[jnp.ndarray] = None,
+                    conv_state: Optional[jnp.ndarray] = None):
+    """Sequential oracle / decode path.  x: (B, S, d_model)."""
+    di, st = cfg.d_inner, cfg.ssm_state
+    b = x.shape[0]
+    xc, z, da, dbx, c_in, new_conv = _mamba1_inputs(
+        params, x, cfg, conv_state)
+    h0 = ssm_state if ssm_state is not None else \
+        jnp.zeros((b, di, st), jnp.float32)
+
+    def step(h, t):
+        da_t, dbx_t, c_t = t
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (da.swapaxes(0, 1), dbx.swapaxes(0, 1), c_in.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + params["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], hT, new_conv
+
+
+def mamba1_chunked(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                   chunk: int = 256,
+                   ssm_state: Optional[jnp.ndarray] = None,
+                   conv_state: Optional[jnp.ndarray] = None):
+    """Chunked scan: associative scan inside chunks, carry across.
+
+    Peak intermediate: (B, chunk, d_inner, state) — O(chunk), not O(S):
+    the discretization (da = exp(dt*A), dbx = dt*x*B) is computed
+    INSIDE the chunk step from (B, chunk, ...) slices.  Materializing
+    it full-sequence costs (B, S, d_inner, state) f32 — 16.5 GiB/device
+    for falcon-mamba train_4k (§Perf fix F8).
+    """
+    di, st = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(cfg.d_model // 16, 1)
+    b, s, _ = x.shape
+    # conv + projections (O(S*d) tensors only)
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = causal_conv1d(xin, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = xc @ params["x_proj"]
+    dt_in = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank:dt_rank + st].astype(jnp.float32)
+    c_in = proj[..., dt_rank + st:].astype(jnp.float32)
+    dt = _softplus((dt_in @ params["dt_proj"]).astype(jnp.float32)
+                   + params["dt_bias"])            # (B,S,di)
+    a = -jnp.exp(params["a_log"])                  # (di, st)
+
+    nch = max(s // chunk, 1)
+    ch = s // nch
+
+    def r(t, tail):
+        return t.reshape((b, nch, ch) + tail).swapaxes(0, 1)
+
+    dt_c = r(dt, (di,))
+    xc_c = r(xc.astype(jnp.float32), (di,))
+    b_c = r(b_in, (st,))
+    c_c = r(c_in, (st,))
+    h0 = ssm_state if ssm_state is not None else \
+        jnp.zeros((b, di, st), jnp.float32)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    @jax.checkpoint
+    def chunk_step(h, t):
+        # checkpointed: the scan backward otherwise SAVES the four
+        # (B, chunk, d_inner, state) intermediates of every chunk —
+        # re-materializing the full-sequence tensor F8 just removed
+        dt_t, xc_t, b_t, c_t = t                 # (b,ch,di)/(b,ch,st)
+        da_t = jnp.exp(dt_t[..., None] * a)      # (b,ch,di,st)
+        dbx_t = (dt_t * xc_t)[..., None] * b_t[..., None, :]
+        pa, pb = jax.lax.associative_scan(assoc, (da_t, dbx_t), axis=1)
+        h_all = pa * h[:, None] + pb             # (b,ch,di,st)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, c_t)
+        return h_all[:, -1], y
+
+    hT, ys = jax.lax.scan(chunk_step, h0, (dt_c, xc_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, di) \
+        + params["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], hT, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (scalar decay per head; zamba2)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg: ArchConfig) -> Params:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": _init_dense(ks[0], d, 2 * di + 2 * st + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (di + 2 * st, cfg.ssm_conv),
+                                     jnp.float32) * 0.2).astype(dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_proj": _init_dense(ks[4], di, d, dt),
+    }
+
+
+def _mamba2_inputs(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                   conv_state):
+    di, st = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    b, s, _ = x.shape
+    proj = x @ params["in_proj"]
+    z = proj[..., :di]
+    xbc = proj[..., di:2 * di + 2 * st]
+    dt = proj[..., 2 * di + 2 * st:]
+    xbc, new_conv = causal_conv1d(xbc, params["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :di].reshape(b, s, nh, hd)
+    b_in = xbc[..., di:di + st].astype(jnp.float32)     # (b,s,st)
+    c_in = xbc[..., di + st:].astype(jnp.float32)
+    dt = _softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,s,nh)
+    a = -jnp.exp(params["a_log"])                        # (nh,)
+    la = dt * a                                          # log-decay
+    return xin, z, b_in, c_in, dt, la, new_conv
+
+
+def mamba2_scan_ref(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                    ssm_state: Optional[jnp.ndarray] = None,
+                    conv_state: Optional[jnp.ndarray] = None):
+    """Sequential oracle / decode.  State: (B, nh, hd, st)."""
+    di, st, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    b, s, _ = x.shape
+    xin, z, b_in, c_in, dt, la, new_conv = _mamba2_inputs(
+        params, x, cfg, conv_state)
+    h0 = ssm_state if ssm_state is not None else \
+        jnp.zeros((b, nh, hd, st), jnp.float32)
+
+    def step(h, t):
+        x_t, b_t, c_t, dt_t, la_t = t
+        h = jnp.exp(la_t)[:, :, None, None] * h + \
+            (dt_t[:, :, None] * x_t.astype(jnp.float32))[..., None] * \
+            b_t[:, None, None, :]
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (xin.swapaxes(0, 1), b_in.swapaxes(0, 1), c_in.swapaxes(0, 1),
+         dt.swapaxes(0, 1), la.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1)                                # (b,s,nh,hd)
+    y = y + params["d_skip"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], hT, new_conv
+
+
+def _segsum(la: jnp.ndarray) -> jnp.ndarray:
+    """(..., c) log-decays -> (..., c, c) pairwise sums, causal-masked."""
+    c = la.shape[-1]
+    cs = jnp.cumsum(la, axis=-1)
+    # decay from tau (exclusive) to t (inclusive): cs[t] - cs[tau]
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_chunked(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                   chunk: int = 256,
+                   ssm_state: Optional[jnp.ndarray] = None,
+                   conv_state: Optional[jnp.ndarray] = None):
+    """SSD: quadratic within chunks, linear across (Mamba-2 paper)."""
+    di, st, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    b, s, _ = x.shape
+    xin, z, b_in, c_in, dt, la, new_conv = _mamba2_inputs(
+        params, x, cfg, conv_state)
+    nch = max(s // chunk, 1)
+    ch = s // nch
+
+    def r(t, tail):  # (b, s, ...) -> (nch, b, ch, ...)
+        return t.reshape((b, nch, ch) + tail).swapaxes(0, 1)
+
+    xin_c = r(xin, (nh, hd))
+    b_c = r(b_in, (st,))
+    c_c = r(c_in, (st,))
+    dt_c = r(dt, (nh,))
+    la_c = r(la, (nh,))
+    h0 = ssm_state if ssm_state is not None else \
+        jnp.zeros((b, nh, hd, st), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_step(h, t):
+        x_t, b_t, c_t, dt_t, la_t = t
+        xw = x_t.astype(jnp.float32) * dt_t[..., None]   # (b,ch,nh,hd)
+        lah = la_t.swapaxes(1, 2)                        # (b,nh,ch)
+        seg = _segsum(lah)                               # (b,nh,ch,ch)
+        gcb = jnp.einsum("bqn,bkn->bqk", c_t, b_t)       # (b,ch,ch)
+        w = gcb[:, None] * jnp.exp(seg)                  # (b,nh,q,k)
+        y_intra = jnp.einsum("bhqk,bkhd->bqhd", w, xw)
+        # inter-chunk: contribution of incoming state
+        cs = jnp.cumsum(lah, axis=-1)                    # log-decays
+        dec_to_t = jnp.exp(cs)                           # (b,nh,ch)
+        y_inter = jnp.einsum("bqn,bhdn,bhq->bqhd", c_t, h, dec_to_t)
+        # state update: h' = decay_all * h + sum_k decay_from_k Bk xk
+        dec_all = dec_to_t[..., -1]                      # (b,nh)
+        dec_from = jnp.exp(cs[..., -1:] - cs)            # (b,nh,ch)
+        h_new = dec_all[..., None, None] * h + jnp.einsum(
+            "bkhd,bkn,bhk->bhdn", xw, b_t, dec_from)
+        return h_new, y_intra + y_inter
+
+    hT, ys = jax.lax.scan(chunk_step, h0,
+                          (xin_c, b_c, c_c, dt_c, la_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hd)
+    y = y + params["d_skip"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], hT, new_conv
+
+
+def ssm_block_apply(params: Params, x: jnp.ndarray, cfg: ArchConfig,
+                    mode: str = "chunked", chunk: int = 256,
+                    state: Optional[Dict] = None):
+    """Uniform entry: returns (y, new_state dict)."""
+    ver = cfg.mamba_version
+    ssm_s = state["ssm"] if state else None
+    conv_s = state["conv"] if state else None
+    if ver == 1:
+        fn = mamba1_scan_ref if mode == "ref" else mamba1_chunked
+        if mode == "ref" or mode == "decode":
+            y, h, c = mamba1_scan_ref(params, x, cfg, ssm_s, conv_s)
+        else:
+            y, h, c = mamba1_chunked(params, x, cfg, chunk, ssm_s, conv_s)
+    else:
+        if mode == "ref" or mode == "decode":
+            y, h, c = mamba2_scan_ref(params, x, cfg, ssm_s, conv_s)
+        else:
+            y, h, c = mamba2_chunked(params, x, cfg, chunk, ssm_s, conv_s)
+    return y, {"ssm": h, "conv": c}

@@ -1,0 +1,190 @@
+"""Batched serving engine: prefill/decode split with continuous
+batching over a fixed slot pool.
+
+The ParalleX reading of serving (DESIGN.md §4): each request is a
+first-class object in a slot pool (an AGAS allocation); arriving
+requests are parcels that trigger a prefill task; decode is a dataflow
+chain per slot, and the engine's scheduler packs ready slots into
+batched decode steps (the work-queue at token granularity).
+
+Design points that matter at scale and are implemented here:
+* fixed-shape decode batch (slot pool) -> one compiled decode_step;
+* prefill runs per request at bucketed lengths (pad-to-bucket) to
+  bound compilation count;
+* slots free on EOS/length and refill from the queue (continuous
+  batching);
+* per-slot sampling state (greedy or temperature).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    prefill_s: float
+    decode_s: float
+
+
+class ServingEngine:
+    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
+                 max_len: int = 512, prefill_buckets=(64, 128, 256)):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.buckets = tuple(sorted(prefill_buckets))
+        self.queue: List[Request] = []
+        self.active: Dict[int, dict] = {}      # slot -> request state
+        self.free_slots = list(range(slots))
+        self.completions: List[Completion] = []
+        # one shared batched cache across slots
+        self.cache = T.init_cache(cfg, slots, max_len)
+        self._decode = jax.jit(
+            lambda p, c, b: T.decode_step(p, c, b, cfg))
+        self._prefills = {}
+
+    # -- request intake (a parcel arriving at the engine locality) ----
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            cfg = self.cfg
+
+            def fn(params, tokens):
+                batch = {"tokens": tokens}
+                hidden, cache = T.prefill(params, batch, cfg)
+                return T.logits_fn(params, hidden), cache
+            self._prefills[bucket] = jax.jit(fn)
+        return self._prefills[bucket]
+
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            req = self.queue.pop(0)
+            slot = self.free_slots.pop(0)
+            t0 = time.perf_counter()
+            n = len(req.prompt)
+            bucket = self._bucket(n)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, bucket - n:] = req.prompt    # left-pad
+            logits, pcache = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks))
+            # splice this request's prefill cache into the slot pool
+            self._splice_cache(slot, pcache, bucket)
+            first = self._sample(logits[0], req)
+            self.active[slot] = {
+                "req": req, "tokens": [int(first)],
+                "prefill_s": time.perf_counter() - t0,
+                "t0": time.perf_counter(),
+                "pos": bucket,
+            }
+
+    def _splice_cache(self, slot: int, pcache: dict, plen: int) -> None:
+        def splice(pool, part):
+            if pool.ndim == 0 or part is None:
+                return pool
+            # find the batch axis: pool (…, slots, …) vs part (…,1,…)
+            for ax in range(pool.ndim):
+                if part.shape[ax] == 1 and pool.shape[ax] == self.slots:
+                    break
+            else:
+                return pool
+            # seq axes differ (plen vs max_len): pad part
+            pads = []
+            for d in range(pool.ndim):
+                if d == ax:
+                    pads.append((0, 0))
+                else:
+                    pads.append((0, pool.shape[d] - part.shape[d]))
+            part = jnp.pad(part, pads)
+            idx = [slice(None)] * pool.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return pool.at[tuple(idx)].set(part)
+
+        for k in self.cache:
+            if k in ("len", "cursor", "abs"):
+                continue
+            self.cache[k] = splice(self.cache[k], pcache.get(k))
+        # shared counters: the pool cache uses one clock; keep max
+        self.cache["len"] = jnp.maximum(self.cache["len"],
+                                        pcache["len"])
+        self.cache["cursor"] = jnp.maximum(self.cache["cursor"],
+                                           pcache["cursor"])
+        self.cache["abs"] = jnp.maximum(self.cache["abs"],
+                                        pcache["abs"])
+
+    def _sample(self, logits: jnp.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits))
+        key = jax.random.PRNGKey(req.rid * 7919 + len(
+            self.active.get(req.rid, {}).get("tokens", [])))
+        return int(jax.random.categorical(key,
+                                          logits / req.temperature))
+
+    # -- the decode work-queue ----------------------------------------
+    def step(self) -> int:
+        """One batched decode step over all active slots."""
+        self._admit()
+        if not self.active:
+            return 0
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, st in self.active.items():
+            tokens[slot, 0] = st["tokens"][-1]
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (self.slots, self.cfg.n_frontend_tokens,
+                 32 if self.cfg.d_model < 1024 else 1280),
+                jnp.dtype(self.cfg.dtype))
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          batch)
+        done = []
+        for slot, st in self.active.items():
+            req = st["req"]
+            tok = self._sample(logits[slot], req)
+            st["tokens"].append(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(st["tokens"]) >= req.max_new_tokens:
+                done.append(slot)
+        for slot in done:
+            st = self.active.pop(slot)
+            self.completions.append(Completion(
+                st["req"].rid, st["tokens"], st["prefill_s"],
+                time.perf_counter() - st["t0"]))
+            self.free_slots.append(slot)
+        return len(self.active) + len(done)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            self._admit()
+            if not self.active and not self.queue:
+                return
+            self.step()

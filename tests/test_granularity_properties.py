@@ -1,0 +1,100 @@
+"""Granularity control + hypothesis invariants on the AMR system."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import amr
+from repro.amr import taskgraph as tg
+from repro.core import GrainModel, list_schedule, n_tasks
+from repro.core.granularity import (auto_tune, efficiency,
+                                    optimal_grain_analytic, sweep)
+
+
+def _build(prob, specs, n_workers):
+    def f(g):
+        wg = tg.build_window_graph(specs, 2, g)
+        tg.assign_owners(wg, n_workers)
+        return list_schedule(wg.graph, n_workers, overhead=4e-6)
+    return f
+
+
+def test_grain_sweep_has_interior_optimum():
+    """Paper Fig 3: an optimal grain exists between the extremes."""
+    prob = amr.WaveProblem(n_points=256, rmax=20.0, amplitude=0.005)
+    specs = amr.default_specs(prob, 2)
+    f = _build(prob, specs, 8)
+    grains = [2, 4, 8, 16, 64, 256]
+    pts = sweep(grains, f)
+    spans = {p.grain: p.makespan for p in pts}
+    best = auto_tune(grains, f)
+    assert spans[best] <= spans[2] and spans[best] <= spans[256]
+    # extremes are penalized: tiny grains by overhead, huge by idling
+    assert pts[0].overhead_fraction > pts[-1].overhead_fraction
+    assert pts[-1].idle_fraction > pts[2].idle_fraction
+
+
+def test_optimal_grain_weakly_depends_on_workers():
+    """Paper: 'the optimal grain size does not seem to depend heavily
+    on the number of cores requested' (Fig 3)."""
+    prob = amr.WaveProblem(n_points=256, rmax=20.0, amplitude=0.005)
+    specs = amr.default_specs(prob, 2)
+    grains = [4, 8, 16, 32, 64]
+    bests = [auto_tune(grains, _build(prob, specs, p)) for p in
+             (4, 8, 16)]
+    assert max(bests) / max(min(bests), 1) <= 4
+
+
+def test_analytic_grain_model():
+    m = GrainModel(c_point=1e-6, sigma=4e-6)
+    g = optimal_grain_analytic(4096, 8, m)
+    assert 1 <= g <= 4096
+    assert efficiency(m, 1) < efficiency(m, g) < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_n_tasks_covers_domain(n_points, g):
+    nt = n_tasks(n_points, g)
+    assert (nt - 1) * g < n_points <= nt * g
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.sampled_from([8, 16, 32]),
+       st.integers(1, 3))
+def test_window_graph_invariants(levels, grain, n_coarse):
+    """Structural invariants of the dataflow graph for random configs."""
+    prob = amr.WaveProblem(n_points=128, rmax=20.0, amplitude=0.005)
+    specs = amr.default_specs(prob, levels)
+    wg = tg.build_window_graph(specs, n_coarse, grain)
+    g = wg.graph
+    g.topo_order()                                 # acyclic
+    # step-task count: every level runs n_coarse * 2^l substeps
+    for l, spec in enumerate(wg.specs):
+        nb = len(wg.blocks[l])
+        steps = [m for m in wg.meta
+                 if m.kind == "step" and m.level == l]
+        assert len(steps) == nb * n_coarse * 2 ** l
+    # every non-initial step task depends on its own previous substep
+    for tid, m in enumerate(wg.meta):
+        if m.kind == "step" and m.index > 0:
+            deps = {wg.meta[d].kind for d in g.tasks[tid].deps}
+            assert deps, f"step task {tid} has no deps"
+
+
+def test_front_bounded_by_causality():
+    """No point can be more than n_coarse steps ahead; front >= 0."""
+    prob = amr.WaveProblem(n_points=128, rmax=20.0, amplitude=0.005)
+    specs = amr.default_specs(prob, 2)
+    wg = tg.build_window_graph(specs, 3, 16)
+    tg.assign_owners(wg, 4)
+    r = list_schedule(wg.graph, 4, overhead=1e-6)
+    for frac in (0.25, 0.5, 1.0):
+        front = tg.timestep_front(wg, r.finish, r.makespan * frac,
+                                  prob.n_points)
+        assert front.min() >= 0
+        assert front.max() <= 3 + 1e-9
+    full = tg.timestep_front(wg, r.finish, r.makespan + 1,
+                             prob.n_points)
+    np.testing.assert_allclose(full, 3.0)   # everything finished

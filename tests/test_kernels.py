@@ -1,0 +1,152 @@
+"""Pallas kernel sweeps vs. pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import flash_attention_ref
+from repro.kernels.scan.ops import selective_scan_op
+from repro.kernels.scan.ref import selective_scan_ref
+from repro.kernels.stencil.ref import stencil_rk3_ref
+from repro.kernels.stencil.stencil import H, stencil_rk3
+
+RNG = np.random.default_rng(42)
+
+
+# -- stencil ------------------------------------------------------------
+
+@pytest.mark.parametrize("grain", [8, 32, 128])
+@pytest.mark.parametrize("nb", [1, 4])
+def test_stencil_shapes(grain, nb):
+    u = jnp.asarray(RNG.normal(size=(nb, 3, grain + 2 * H))
+                    .astype(np.float32)) * 0.01
+    r = jnp.asarray(np.stack(
+        [(np.arange(-H, grain + H) + b * grain) * 0.05
+         for b in range(nb)]).astype(np.float32))
+    flags = jnp.zeros((nb, 2), jnp.int32)
+    flags = flags.at[0, 0].set(1).at[-1, 1].set(1)
+    got = stencil_rk3(u, r, flags, dr=0.05, dt=0.01, p=7)
+    ref = stencil_rk3_ref(u, r, flags, dr=0.05, dt=0.01, p=7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("p", [1, 3, 7])
+def test_stencil_nonlinearity_power(p):
+    g = 32
+    u = jnp.asarray(RNG.normal(size=(2, 3, g + 2 * H))
+                    .astype(np.float32)) * 0.1
+    r = jnp.asarray(np.stack(
+        [(np.arange(-H, g + H) + b * g) * 0.1 for b in range(2)])
+        .astype(np.float32))
+    flags = jnp.zeros((2, 2), jnp.int32).at[0, 0].set(1)
+    got = stencil_rk3(u, r, flags, dr=0.1, dt=0.02, p=p)
+    ref = stencil_rk3_ref(u, r, flags, dr=0.1, dt=0.02, p=p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-6)
+
+
+def test_stencil_matches_amr_engine_numerics():
+    """The kernel must agree with the value the host engine computes."""
+    from repro.amr.wave import WaveProblem, fused_rk3_block_np
+    g = 64
+    u = (RNG.normal(size=(3, g + 2 * H)) * 0.01).astype(np.float32)
+    r = ((np.arange(-H, g + H)) * 0.05).astype(np.float32)
+    host = fused_rk3_block_np(u.copy(), r, 0.05, 0.01, 7,
+                              left_phys=True)
+    flags = jnp.asarray([[1, 0]], jnp.int32)
+    kern = stencil_rk3(jnp.asarray(u)[None], jnp.asarray(r)[None],
+                       flags, dr=0.05, dt=0.01, p=7)[0]
+    np.testing.assert_allclose(np.asarray(kern), host, atol=1e-6)
+
+
+# -- flash attention ------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,kv,h", [(128, 32, 2, 4), (256, 64, 1, 2),
+                                      (128, 16, 4, 4)])
+def test_flash_gqa_shapes(s, d, kv, h):
+    q = jnp.asarray(RNG.normal(size=(2, s, h, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, s, kv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, s, kv, d)).astype(np.float32))
+    got = flash_attention(q, k, v, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_sliding_window(window):
+    s, d = 128, 32
+    q = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    got = flash_attention(q, k, v, window=window, bq=32, bk=32)
+    ref = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5)
+
+
+def test_flash_noncausal():
+    s, d = 64, 32
+    q = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=False, bq=32, bk=32)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5)
+
+
+def test_flash_bf16():
+    s, d = 128, 32
+    q = jnp.asarray(RNG.normal(size=(1, s, 4, d))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, s, 2, d))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, s, 2, d))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=64, bk=64)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        atol=3e-2)
+
+
+def test_flash_q_offset_decode_continuation():
+    """q_offset shifts causality for continuation chunks."""
+    s, d = 64, 16
+    q = jnp.asarray(RNG.normal(size=(1, 32, 2, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, s, 2, d)).astype(np.float32))
+    got = flash_attention(q, k, v, q_offset=32, bq=32, bk=32)
+    ref = flash_attention_ref(q, k, v, q_offset=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5)
+
+
+# -- selective scan -------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,n,chunk,dblk",
+                         [(64, 32, 8, 16, 16), (128, 64, 16, 32, 32),
+                          (32, 16, 4, 32, 16)])
+def test_scan_shapes(s, d, n, chunk, dblk):
+    da = jnp.asarray(np.exp(
+        -np.abs(RNG.normal(size=(2, s, d, n)))).astype(np.float32))
+    dbx = jnp.asarray(
+        RNG.normal(size=(2, s, d, n)).astype(np.float32)) * 0.1
+    c = jnp.asarray(RNG.normal(size=(2, s, n)).astype(np.float32))
+    got = selective_scan_op(da, dbx, c, chunk=chunk, d_block=dblk)
+    ref = selective_scan_ref(da, dbx, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_scan_long_memory():
+    """Decay ~1 carries state across many chunks exactly."""
+    s, d, n = 128, 8, 4
+    da = jnp.ones((1, s, d, n), jnp.float32) * 0.999
+    dbx = jnp.zeros((1, s, d, n), jnp.float32).at[:, 0].set(1.0)
+    c = jnp.ones((1, s, n), jnp.float32)
+    got = selective_scan_op(da, dbx, c, chunk=16, d_block=8)
+    ref = selective_scan_ref(da, dbx, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5)

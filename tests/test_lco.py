@@ -1,0 +1,93 @@
+"""LCO semantics: futures, dataflow, full/empty, semaphores."""
+
+import pytest
+
+from repro.core.lco import (CountingSemaphore, Dataflow,
+                            DependencyCounter, FullEmptyBit, Future,
+                            LCOError)
+
+
+def test_future_set_get():
+    f = Future()
+    assert not f.done()
+    f.set(42)
+    assert f.done() and f.get() == 42
+
+
+def test_future_write_once():
+    f = Future()
+    f.set(1)
+    with pytest.raises(LCOError):
+        f.set(2)
+
+
+def test_future_get_before_set_raises():
+    with pytest.raises(LCOError):
+        Future().get()
+
+
+def test_future_continuations_run_inline():
+    f = Future()
+    seen = []
+    f.then(seen.append)
+    f.then(seen.append)
+    f.set("x")
+    assert seen == ["x", "x"]
+    # late registration fires immediately
+    f.then(seen.append)
+    assert seen == ["x", "x", "x"]
+
+
+def test_dataflow_fires_once_all_inputs_set():
+    out = []
+    df = Dataflow(3, out.append)
+    df.set_input(2, "c")
+    df.set_input(0, "a")
+    assert not df.fired
+    df.set_input(1, "b")
+    assert df.fired and out == [["a", "b", "c"]]
+
+
+def test_dataflow_zero_inputs_fires_immediately():
+    out = []
+    Dataflow(0, out.append)
+    assert out == [[]]
+
+
+def test_dataflow_input_set_twice_raises():
+    df = Dataflow(2, lambda v: None)
+    df.set_input(0, 1)
+    with pytest.raises(LCOError):
+        df.set_input(0, 1)
+
+
+def test_full_empty_bit():
+    fe = FullEmptyBit()
+    got = []
+    fe.read_ff(got.append)          # queued
+    fe.write_ef(7)
+    assert got == [7]
+    assert fe.read_fe() == 7        # empties
+    with pytest.raises(LCOError):
+        fe.read_fe()
+
+
+def test_counting_semaphore_cooperative():
+    sem = CountingSemaphore(1)
+    order = []
+    sem.wait(lambda: order.append("a"))   # grabs the initial count
+    sem.wait(lambda: order.append("b"))   # queued
+    sem.wait(lambda: order.append("c"))   # queued
+    sem.signal(2)
+    assert order == ["a", "b", "c"]
+
+
+def test_dependency_counter():
+    fired = []
+    c = DependencyCounter(2, lambda: fired.append(True))
+    c.satisfy()
+    assert not fired
+    c.satisfy()
+    assert fired == [True]
+    with pytest.raises(LCOError):
+        c.satisfy()

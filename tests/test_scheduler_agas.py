@@ -1,0 +1,169 @@
+"""Scheduler + AGAS + parcels: unit and hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (AGAS, AGASError, LocalityDomain, TaskGraph,
+                        balanced_placement, barrier_schedule,
+                        contiguous_placement, list_schedule,
+                        lower_halo_parcels, migration_plan,
+                        pack_rounds)
+
+
+def diamond():
+    g = TaskGraph()
+    a = g.add(1.0, key="a", phase=0)
+    b = g.add(2.0, key="b", phase=1, deps=[a])
+    c = g.add(1.0, key="c", phase=1, deps=[a], owner=1)
+    g.add(1.0, key="d", phase=2, deps=[b, c])
+    return g
+
+
+def test_list_schedule_runs_all_tasks():
+    g = diamond()
+    r = list_schedule(g, 2, overhead=0.1)
+    assert (r.worker >= 0).all()
+    assert r.makespan == pytest.approx(4.3)
+
+
+def test_barrier_never_faster_than_dataflow():
+    g = diamond()
+    df = list_schedule(g, 2, overhead=0.1)
+    ba = barrier_schedule(g, 2, overhead=0.1, barrier_cost=0.05)
+    assert ba.makespan >= df.makespan - 1e-12
+
+
+def test_round_schedule_valid_and_complete():
+    g = diamond()
+    rs = pack_rounds(g, 2)
+    rs.validate(g)
+    assert len(rs.rounds) == 3
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(3, 40))
+    g = TaskGraph()
+    for i in range(n):
+        deps = []
+        if i:
+            k = draw(st.integers(0, min(3, i)))
+            deps = sorted(draw(st.sets(st.integers(0, i - 1),
+                                       min_size=k, max_size=k)))
+        g.add(draw(st.floats(0.1, 5.0)), phase=i,
+              owner=draw(st.integers(0, 7)), deps=deps)
+    return g
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_dag(), st.integers(1, 8), st.booleans())
+def test_greedy_bound_holds(g, p, use_global):
+    """Graham bound: max(T1/P, Tinf) <= T_P <= T1/P + Tinf."""
+    policy = "global_queue" if use_global else "local_stealing"
+    r = list_schedule(g, p, overhead=0.0, policy=policy)
+    t1, tinf = g.work(), g.span()
+    assert r.makespan >= max(t1 / p, tinf) - 1e-9
+    assert r.makespan <= t1 / p + tinf + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_dag(), st.integers(1, 6))
+def test_rounds_makespan_at_least_span(g, p):
+    rs = pack_rounds(g, p)
+    assert rs.makespan(g) >= g.span() - 1e-9
+    rs.validate(g)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.1, 10.0), min_size=1, max_size=50),
+       st.integers(1, 8))
+def test_lpt_placement_near_optimal(costs, p):
+    """LPT is a 4/3-approximation: load <= 4/3 OPT + max."""
+    place = balanced_placement(costs, p)
+    loads = np.zeros(p)
+    for c, w in zip(costs, place):
+        loads[w] += c
+    lower = max(sum(costs) / p, max(costs))
+    assert loads.max() <= 4.0 / 3.0 * lower + 1e-9
+
+
+def test_contiguous_placement_is_contiguous():
+    pl = contiguous_placement(10, 3)
+    assert pl == sorted(pl)
+    assert set(pl) <= {0, 1, 2}
+
+
+# -- AGAS -------------------------------------------------------------
+
+def test_agas_alloc_lookup_free():
+    ag = AGAS(LocalityDomain.simulated(4), pool_capacity=4)
+    a = ag.allocate(2)
+    assert ag.locality_of(a) == 2
+    ag.free(a)
+    with pytest.raises(AGASError):
+        ag.lookup(a)
+
+
+def test_agas_pool_exhaustion():
+    ag = AGAS(LocalityDomain.simulated(2), pool_capacity=1)
+    ag.allocate(0)
+    with pytest.raises(AGASError):
+        ag.allocate(0)
+
+
+def test_agas_migration_keeps_name():
+    ag = AGAS(LocalityDomain.simulated(4), pool_capacity=4)
+    a = ag.allocate(0)
+    gid = a.gid
+    ag.migrate(a, 3)
+    assert a.gid == gid and ag.locality_of(a) == 3
+    assert ag.migrations == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(1, 12))
+def test_agas_checkpoint_restore_remap(n_old, n_new, n_obj):
+    dom_old = LocalityDomain.simulated(n_old)
+    ag = AGAS(dom_old, pool_capacity=max(n_obj, 4))
+    addrs = [ag.allocate(i % n_old) for i in range(n_obj)]
+    state = ag.checkpoint_state()
+    dom_new = LocalityDomain.simulated(n_new)
+    ag2 = AGAS.restore_state(state, dom_new)
+    # every object still resolvable, on a valid locality
+    for a in addrs:
+        loc, slot = ag2.lookup(a)
+        assert 0 <= loc < n_new
+
+
+def test_migration_plan_payload_roundtrip():
+    """Applying the lowered permutation restores AGAS consistency."""
+    ag = AGAS(LocalityDomain.simulated(3), pool_capacity=4)
+    addrs = [ag.allocate(i % 3) for i in range(6)]
+    # payload arrays: data[loc][slot] = gid
+    data = np.full((3, 4), -1)
+    for a in addrs:
+        loc, slot = ag.lookup(a)
+        data[loc, slot] = a.gid
+    plan = migration_plan(ag, {addrs[0]: 2, addrs[4]: 0})
+    for gid, sl, ss, dl, ds in plan.moves:
+        data[dl, ds] = data[sl, ss]
+    for a in addrs:
+        loc, slot = ag.lookup(a)
+        assert data[loc, slot] == a.gid
+
+
+def test_halo_lowering_legs_are_valid_permutes():
+    ag = AGAS(LocalityDomain.simulated(4), pool_capacity=8)
+    addrs = [ag.allocate(i % 4) for i in range(12)]
+    edges = [(addrs[i], addrs[(i + 1) % 12]) for i in range(12)]
+    low = lower_halo_parcels(edges, ag)
+    total = 0
+    for perm in low.perms:
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        assert len(set(srcs)) == len(srcs)     # ppermute contract
+        assert len(set(dsts)) == len(dsts)
+        total += len(perm)
+    assert total == 12

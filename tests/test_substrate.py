@@ -1,0 +1,189 @@
+"""Substrate: data pipeline, checkpointing, optimizer, FT, serving."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.ft.failures import FailurePlan, InjectedFailure
+from repro.ft.straggler import StragglerMonitor, rebalance
+from repro.ft.supervisor import SupervisorConfig, run_supervised
+from repro.models import transformer as T
+from repro.optim.adamw import (AdamWConfig, apply_updates,
+                               global_norm, init_opt_state, schedule)
+
+
+# -- data ---------------------------------------------------------------
+
+def test_data_deterministic():
+    c = SyntheticCorpus(DataConfig(256, 32, 4, seed=1))
+    b1 = c.batch_fast(5)
+    b2 = c.batch_fast(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = c.batch_fast(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_data_has_learnable_structure():
+    cfg = DataConfig(64, 256, 8, seed=0, markov_strength=0.9)
+    c = SyntheticCorpus(cfg)
+    b = c.batch_fast(0)
+    toks = np.asarray(b["tokens"])
+    succ = np.asarray(c._succ)
+    hits = (succ[toks[:, :-1]] == toks[:, 1:]).mean()
+    assert hits > 0.5        # bigram structure >> chance (1/64)
+
+
+# -- optimizer ------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100)
+    params = {"w": jnp.ones((4, 4))}
+    state = init_opt_state(params)
+    for _ in range(60):
+        grads = jax.tree.map(lambda p: 2 * p, params)   # d/dp ||p||^2
+        params, state, m = apply_updates(params, grads, state, cfg)
+    assert float(global_norm(params)) < 0.5
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+def test_grad_clip():
+    from repro.optim.adamw import clip_by_global_norm
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, n = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# -- checkpoint -----------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    ck.save(3, tree, extra={"next_step": 3})
+    got, extra = ck.restore(3, tree)
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(tree["a"]))
+    assert got["b"]["c"].dtype == jnp.bfloat16
+    assert extra["next_step"] == 3
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_async_overlaps(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"x": jnp.zeros((512, 512))}
+    ck.save_async(1, tree)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_tree_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError):
+        ck.restore(1, {"b": jnp.zeros(2)})
+
+
+# -- fault tolerance -------------------------------------------------------
+
+def _toy_step(state, step):
+    new = {"w": state["w"] * 0.9 + step * 0.01}
+    return new, float(jnp.sum(new["w"]))
+
+
+def test_supervisor_recovers_identically(tmp_path):
+    cfg = SupervisorConfig(ckpt_every=5, total_steps=30)
+    clean = run_supervised(
+        cfg, Checkpointer(str(tmp_path / "clean")),
+        lambda: {"w": jnp.ones(3)}, _toy_step)
+    faulty = run_supervised(
+        cfg, Checkpointer(str(tmp_path / "faulty")),
+        lambda: {"w": jnp.ones(3)}, _toy_step,
+        failure_plan=FailurePlan.at(7, 18, 18 + 100))
+    assert faulty.restarts == 2
+    assert faulty.steps_replayed > 0
+    np.testing.assert_allclose(clean.losses, faulty.losses, rtol=1e-6)
+
+
+def test_supervisor_gives_up_after_budget(tmp_path):
+    cfg = SupervisorConfig(ckpt_every=100, total_steps=10,
+                           max_restarts=1)
+    plan = FailurePlan(frozenset(range(10)))   # always failing
+
+    class AlwaysFail(FailurePlan):
+        def check(self, step, done):
+            raise InjectedFailure("boom")
+
+    with pytest.raises(InjectedFailure):
+        run_supervised(cfg, Checkpointer(str(tmp_path)),
+                       lambda: {"w": jnp.ones(2)}, _toy_step,
+                       failure_plan=AlwaysFail())
+
+
+def test_straggler_monitor_detects():
+    m = StragglerMonitor(4, threshold=1.5)
+    rep = m.observe([1.0, 1.0, 1.0, 3.0])
+    assert rep.stragglers == [3]
+    assert rep.imbalance > 1.5
+
+
+def test_straggler_rebalance_improves_load():
+    from repro.core import AGAS, LocalityDomain
+    ag = AGAS(LocalityDomain.simulated(4), pool_capacity=32)
+    addrs = [ag.allocate(0) for _ in range(16)]   # all on locality 0
+    costs = {a: 1.0 for a in addrs}
+    plan, load = rebalance(ag, costs)
+    assert len(plan.moves) == 12                  # 4 stay, 12 move
+    assert np.asarray(ag.load()).max() == 4
+
+
+def test_straggler_rebalance_respects_speed():
+    from repro.core import AGAS, LocalityDomain
+    ag = AGAS(LocalityDomain.simulated(2), pool_capacity=32)
+    addrs = [ag.allocate(i % 2) for i in range(12)]
+    costs = {a: 1.0 for a in addrs}
+    plan, load = rebalance(ag, costs, speed=[1.0, 0.5])
+    counts = np.asarray(ag.load())
+    assert counts[0] > counts[1]     # slow locality gets less work
+
+
+# -- serving -----------------------------------------------------------
+
+def test_serving_engine_completes():
+    from repro.serving.engine import Request, ServingEngine
+    cfg = configs.get_reduced("yi-6b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, slots=2, max_len=96,
+                        prefill_buckets=(32,))
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid, rng.integers(
+            0, cfg.vocab_size, size=16).astype(np.int32),
+            max_new_tokens=4))
+    eng.run_to_completion()
+    assert len(eng.completions) == 3
+    for c in eng.completions:
+        assert len(c.tokens) == 4
