@@ -84,8 +84,9 @@ def compiled_overhead():
     from repro.amr.compiled import CompiledAMRConfig, make_uniform_step
     from repro.amr.wave import WaveProblem
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.compat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
     prob = WaveProblem(rmax=20.0, amplitude=0.005)
     cfg = CompiledAMRConfig(grain=64, slots=32, n_steps=8)
     step, mk, init, to_g, shd, info = make_uniform_step(

@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV lines (plus `# ...` context
 lines).  Figures covered: 3 (granularity), 5 (cone), 6 (barrier
 removal), 7 (strong scaling), 8 (wallclock/crossover), 9 (thread
-overhead), and the roofline table from the multi-pod dry-run.
+overhead), the roofline table from the multi-pod dry-run, and the
+paged-vs-dense serving comparison (serve_bench).
 """
 
 from __future__ import annotations
@@ -15,13 +16,13 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_granularity, fig5_cone, fig6_barrier,
                             fig7_scaling, fig8_wallclock,
-                            fig9_overhead, roofline)
+                            fig9_overhead, roofline, serve_bench)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig3_granularity, fig5_cone, fig6_barrier,
                 fig7_scaling, fig8_wallclock, fig9_overhead,
-                roofline):
+                roofline, serve_bench):
         try:
             mod.run(verbose=True)
         except Exception:

@@ -1,4 +1,4 @@
-"""Batched serving demo: continuous batching over a slot pool.
+"""Batched serving demo: continuous batching over an AGAS page pool.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -16,23 +16,33 @@ from repro.serving.engine import Request, ServingEngine
 def main():
     cfg = configs.get_reduced("yi-6b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
+    # a page pool half the dense footprint: 4 slots x 160 tokens dense
+    # would be 40 pages of 16; 20 pages serve the same traffic because
+    # pages are allocated on demand (preempting under pressure)
     eng = ServingEngine(params, cfg, slots=4, max_len=160,
-                        prefill_buckets=(32, 64))
+                        prefill_buckets=(32, 64), page_size=16,
+                        n_pages=20)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
+    futures = []
     for rid in range(10):
         n = int(rng.integers(8, 60))
-        eng.submit(Request(
+        futures.append(eng.submit(Request(
             rid, rng.integers(0, cfg.vocab_size, size=n)
-            .astype(np.int32), max_new_tokens=12))
+            .astype(np.int32), max_new_tokens=12)))
     eng.run_to_completion()
     dt = time.perf_counter() - t0
     tok = sum(len(c.tokens) for c in eng.completions)
     print(f"{len(eng.completions)} completions, {tok} tokens, "
           f"{dt:.2f}s ({tok / dt:.1f} tok/s incl. compile)")
-    for c in eng.completions[:5]:
+    for fut in futures[:5]:
+        c = fut.get()                  # completion arrives via the LCO
         print(f"  rid={c.rid:2d} prefill={c.prefill_s * 1e3:6.0f}ms "
               f"decode={c.decode_s * 1e3:6.0f}ms tokens={c.tokens[:6]}...")
+    s = eng.stats()
+    print(f"pages: peak occupancy {s['peak_page_occupancy']:.0%}, "
+          f"{s['page_shares']} prefix-shared, "
+          f"{s['preemptions']} preemptions")
 
 
 if __name__ == "__main__":

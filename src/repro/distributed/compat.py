@@ -1,0 +1,36 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern public API (``jax.make_mesh(...,
+axis_types=...)``, ``jax.shard_map(..., check_vma=...)``) but must also
+run on the 0.4.x line baked into the container, where mesh axis types
+do not exist and shard_map lives in ``jax.experimental.shard_map`` with
+the ``check_rep`` spelling.  Everything that builds meshes or wraps
+shard_map goes through these two functions.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` (new) or experimental shard_map (0.4.x)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as exp_sm
+    return exp_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.attention.flash import flash_attention_bhsd
+from repro.kernels.attention.paged import paged_attention_bhd
 
 
 def _interpret_default() -> bool:
@@ -40,3 +41,18 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         qf, kf, vf, causal=causal, window=window, q_offset=q_offset,
         n_rep=n_rep, bq=bq, bk=bk, interpret=_interpret_default())
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                    positions: jnp.ndarray, *,
+                    window: int = 0) -> jnp.ndarray:
+    """q: (B, 1, H, D); k/v_pages: (N, ps, KV, D) (GQA without
+    repetition); block_tables: (B, P) physical page rows; positions:
+    (B,) per-slot absolute position of the token being decoded.
+    Same contract as kernels.attention.ref.paged_attention_ref."""
+    out = paged_attention_bhd(
+        q[:, 0], k_pages, v_pages, block_tables, positions,
+        window=window, interpret=_interpret_default())
+    return out[:, None]

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: paged decode attention over block tables.
+
+One query token per sequence attends a KV cache scattered across
+fixed-size pages.  The block table is a *scalar-prefetch* operand
+(pltpu.PrefetchScalarGridSpec): it is available before the kernel body
+runs, so the k/v index maps dereference it to pick the physical page
+row each grid step DMAs into VMEM — the AGAS lookup compiled into an
+index map, with no gather materialized in HBM.
+
+Tiling: grid = (B, H, nP) with the page axis LAST (sequential);
+online-softmax statistics (m, l) and the output accumulator persist in
+VMEM scratch across the nP steps of one (B, H) tile and are flushed on
+the final step (same scheme as flash.py).
+
+  q tile  : (1, 1, D) VMEM          k/v tile: (1, ps, 1, D) VMEM
+  scratch : acc (1, D) f32, m (1, 1) f32, l (1, 1) f32
+
+GQA is handled in the k/v index maps (head h reads kv head
+h // n_rep); pages entirely outside the slot's valid range — beyond
+its per-slot position counter or behind its sliding window — are
+skipped via @pl.when, so compute scales with the tokens actually
+resident, not with the table width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, ps, n_pages, window, scale):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+    base = p * ps
+    live = base <= pos
+    if window > 0:
+        live &= pos - (base + ps - 1) < window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0]                       # (1, D)
+        k = k_ref[0, :, 0]                 # (ps, D)
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (1, ps)
+        j = base + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        mask = j <= pos
+        if window > 0:
+            mask &= pos - j < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pr = jnp.exp(s - m_new)
+        pr = jnp.where(mask, pr, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pr, axis=-1,
+                                                 keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            pr.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_bhd(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray,
+                        block_tables: jnp.ndarray,
+                        positions: jnp.ndarray, *,
+                        window: int = 0,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, D); k/v_pages: (N, ps, KV, D); block_tables: (B, P)
+    int32 physical rows; positions: (B,) int32 per-slot clocks.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_rep = h // kvh
+    n_tables = block_tables.shape[1]
+    kern = functools.partial(
+        _kernel, ps=ps, n_pages=n_tables, window=window,
+        scale=d ** -0.5)
+
+    # index maps see the scalar-prefetch refs appended to grid indices
+    def kv_map(bi, hi, pi, bt, pos):
+        return (bt[bi, pi], 0, hi // n_rep, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_tables),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, hi, pi, bt, pos:
+                         (bi, hi, 0)),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, pi, bt, pos:
+                               (bi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), positions.astype(jnp.int32),
+      q, k_pages, v_pages)

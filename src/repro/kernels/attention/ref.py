@@ -1,7 +1,9 @@
-"""Pure-jnp oracle for the flash kernel (chunked online softmax)."""
+"""Pure-jnp oracles: flash kernel (chunked online softmax) and the
+gather-based paged decode attention."""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.models.attention import flash_jnp, repeat_kv
@@ -19,3 +21,42 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
                      q_offset=q_offset,
                      chunk_q=min(128, q.shape[1]),
                      chunk_k=min(128, k.shape[1]))
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray,
+                        block_tables: jnp.ndarray,
+                        positions: jnp.ndarray, *,
+                        window: int = 0) -> jnp.ndarray:
+    """Gather-based paged decode attention (one layer, one new token).
+
+    q:            (B, 1, H, D) query for the token being decoded.
+    k/v_pages:    (N, ps, KV, D) page pool rows (N includes the null
+                  row idle slots point at).
+    block_tables: (B, P) int32 physical page rows per slot; entries
+                  past the slot's length may be any valid row (masked).
+    positions:    (B,) int32 absolute position of the new token per
+                  slot — the per-slot clock.  The new token's K/V must
+                  already be written at its page slot.
+    window > 0 restricts each slot to its trailing `window` positions
+    (the ring-buffer SWA semantics, expressed as an absolute-position
+    mask because pages are never trimmed).
+    """
+    b, _, h, d = q.shape
+    kvh = k_pages.shape[2]
+    k = k_pages[block_tables].reshape(b, -1, kvh, d)   # (B, P*ps, KV, D)
+    v = v_pages[block_tables].reshape(b, -1, kvh, d)
+    n_rep = h // kvh
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = d ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    j = jnp.arange(k.shape[1])
+    mask = j[None, :] <= positions[:, None]
+    if window > 0:
+        mask &= positions[:, None] - j[None, :] < window
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)

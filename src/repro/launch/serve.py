@@ -2,6 +2,8 @@
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --engine paged --pages 24 --page-size 16   # oversubscribed pool
 """
 
 from __future__ import annotations
@@ -20,33 +22,59 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--engine", choices=("auto", "paged", "dense"),
+                    default="auto")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size (0 = dense-equivalent)")
     args = ap.parse_args()
 
     import repro.configs as configs
     from repro.models import transformer as T
-    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.engine import (DenseServingEngine,
+                                      PagedServingEngine, Request,
+                                      make_engine)
 
     cfg = configs.get_reduced(args.arch)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(params, cfg, slots=args.slots,
-                        max_len=args.max_len)
+    kw = dict(slots=args.slots, max_len=args.max_len)
+    if args.engine == "dense":
+        eng = DenseServingEngine(params, cfg, **kw)
+    elif args.engine == "paged":
+        eng = PagedServingEngine(
+            params, cfg, page_size=args.page_size,
+            n_pages=args.pages or None, **kw)
+    else:
+        eng = make_engine(params, cfg, page_size=args.page_size,
+                          n_pages=args.pages or None, **kw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
+    futs = []
     for rid in range(args.requests):
         n = int(rng.integers(8, 48))
-        eng.submit(Request(rid, rng.integers(
+        futs.append(eng.submit(Request(rid, rng.integers(
             0, cfg.vocab_size, size=n).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new)))
     eng.run_to_completion()
     dt = time.perf_counter() - t0
     total_new = sum(len(c.tokens) for c in eng.completions)
-    print(f"[serve] {len(eng.completions)} completions, "
+    print(f"[serve] {type(eng).__name__}: "
+          f"{len(eng.completions)} completions, "
           f"{total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s)")
-    for c in eng.completions[:4]:
+    for f in futs[:4]:
+        c = f.get()                       # the completion LCO
         print(f"  rid={c.rid} new={len(c.tokens)} "
               f"prefill={c.prefill_s * 1e3:.0f}ms "
-              f"decode={c.decode_s * 1e3:.0f}ms")
+              f"decode={c.decode_s * 1e3:.0f}ms "
+              f"preempts={c.preemptions}")
+    if hasattr(eng, "stats"):
+        s = eng.stats()
+        print(f"[serve] steps={s['steps']} "
+              f"peak_active={s['peak_active']} "
+              f"peak_page_occ={s['peak_page_occupancy']:.2f} "
+              f"preemptions={s['preemptions']} "
+              f"shares={s['page_shares']} cow={s['cow_copies']}")
 
 
 if __name__ == "__main__":

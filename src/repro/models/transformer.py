@@ -19,6 +19,11 @@ Entry points:
   loss_fn(params, batch, cfg)               -> scalar (chunked-CE)
   init_cache(cfg, batch, cache_len)         -> cache pytree
   decode_step(params, cache, batch, cfg)    -> (logits, cache)
+  init_paged_cache(cfg, n_rows, page_size)  -> {"k","v"} page arrays
+  decode_step_paged(params, pages, batch, cfg) -> (logits, pages)
+                                            (per-slot position clocks
+                                            over AGAS block tables,
+                                            DESIGN.md §4a)
 
 `batch` is a dict: tokens (B,S) int32; labels (B,S) for train;
 patch_embeds (B,Nimg,Df) for vlm; frame_embeds (B,S,D) for audio;
@@ -392,13 +397,19 @@ def logits_fn(params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
 
 
 def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
-            use_pallas: bool = False, tp: int = 1
+            use_pallas: bool = False, tp: int = 1,
+            full_kv: bool = False, last_index=None
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Full-sequence forward that also builds the decode cache.
 
     Returns (last-position hidden (B, D), cache).  SWA archs keep only
     the trailing `window` keys (ring reset so the cursor wraps onto the
-    oldest slot).
+    oldest slot) unless `full_kv` — the paged cache keeps every
+    position and enforces the window as an absolute-position mask
+    instead of by trimming.  `last_index` (a traced int32) selects
+    which position's hidden state is returned instead of the final
+    one — used by right-padded prefills, where the real sequence ends
+    before the padded buffer does, without recompiling per length.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -413,7 +424,7 @@ def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
     eff = min(s, win) if win else s
 
     def trim(k):   # keep trailing window for SWA ring buffers
-        return k[..., -eff:, :, :] if win else k
+        return k[..., -eff:, :, :] if (win and not full_kv) else k
 
     # len = valid cache slots; cursor = next ring write slot (slot 0 is
     # the oldest after a trim); abs = absolute next position (RoPE
@@ -504,7 +515,11 @@ def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
         raise ValueError(fam)
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return x[:, -1], cache
+    if last_index is None:
+        return x[:, -1], cache
+    out = jax.lax.dynamic_index_in_dim(x, last_index, axis=1,
+                                       keepdims=False)
+    return out, cache
 
 
 # ---------------------------------------------------------------------------
@@ -719,3 +734,89 @@ def decode_step(params: Params, cache: Dict[str, Any],
     cache = dict(cache, len=cache["len"] + 1,
                  cursor=cache["cursor"] + 1, abs=cache["abs"] + 1)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache decode (serving/kvcache.py block tables)
+# ---------------------------------------------------------------------------
+
+PAGED_FAMILIES = ("dense", "audio", "moe")
+
+
+def init_paged_cache(cfg: ArchConfig, n_rows: int, page_size: int,
+                     dtype=None) -> Dict[str, Any]:
+    """Allocate the page-pool KV arrays: (L, n_rows, ps, KV, D).
+
+    `n_rows` counts physical rows (the pool passes capacity + 1 so the
+    last row can serve as the null page idle slots write into).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged decode supports {PAGED_FAMILIES}, not {cfg.family!r}")
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, n_rows, page_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step_paged(params: Params, pages: Dict[str, Any],
+                      batch: Dict[str, Any], cfg: ArchConfig,
+                      tp: int = 1, use_pallas: bool = False
+                      ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step over block tables with per-slot position clocks.
+
+    batch: tokens (B, 1); block_tables (B, P) int32 physical page
+    rows; positions (B,) int32 per-slot absolute position of the new
+    token (replaces the dense cache's shared len/cursor/abs clock);
+    write_rows/write_offs (B,) int32 page slot the new K/V lands in
+    (idle slots point at the pool's null row, which no mask ever
+    reads).  Sliding windows are enforced as absolute-position masks —
+    pages are never trimmed, so RoPE phases baked at write time stay
+    valid.  Returns (logits (B, V) f32, new pages).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged decode supports {PAGED_FAMILIES}, not {cfg.family!r}")
+    if use_pallas:
+        from repro.kernels.attention.ops import paged_attention
+    else:
+        from repro.kernels.attention.ref import \
+            paged_attention_ref as paged_attention
+    tokens = batch["tokens"]
+    tables = batch["block_tables"]
+    positions = batch["positions"]
+    write_rows = batch["write_rows"]
+    write_offs = batch["write_offs"]
+    b = tokens.shape[0]
+    x = embed_lookup(params["embed"], tokens)
+    rot = int(cfg.head_dim * cfg.rope_fraction) if cfg.n_heads else 2
+    # per-slot RoPE phases: (B, 1, rot/2) broadcasting over heads
+    cos, sin = att.rope_angles(positions[:, None], max(rot, 2),
+                               cfg.rope_theta)
+    fam = cfg.family
+
+    def layer(x, lkv):
+        lp, kp, vp = lkv
+        h = rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = att.qkv(lp["attn"], h, cfg)
+        q = att.apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = att.apply_rope(k, cos, sin, cfg.rope_fraction)
+        # scatter the new token's K/V into each slot's write page
+        kp = kp.at[write_rows, write_offs].set(k[:, 0])
+        vp = vp.at[write_rows, write_offs].set(v[:, 0])
+        o = paged_attention(q, kp, vp, tables, positions,
+                            window=cfg.sliding_window)
+        x = x + o.reshape(b, 1, -1) @ lp["attn"]["wo"]
+        if fam == "moe":
+            hh = rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+            mo, _ = moe_mod.moe_apply(lp["moe"], hh, cfg, tp)
+            x = x + mo
+        else:
+            x = x + _mlp_block(lp, x, cfg)
+        return x, (kp, vp)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        layer, x, (params["layers"], pages["k"], pages["v"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, x[:, 0])
+    return logits, dict(pages, k=k_new, v=v_new)

@@ -1,24 +1,45 @@
-"""Batched serving engine: prefill/decode split with continuous
-batching over a fixed slot pool.
+"""Continuous-batching serving engines: paged (AGAS pages) and dense.
 
 The ParalleX reading of serving (DESIGN.md §4): each request is a
-first-class object in a slot pool (an AGAS allocation); arriving
-requests are parcels that trigger a prefill task; decode is a dataflow
-chain per slot, and the engine's scheduler packs ready slots into
-batched decode steps (the work-queue at token granularity).
+first-class object whose completion is an LCO — `submit` returns a
+`core.lco.Future` that is set exactly once when the request finishes.
+Arriving requests are parcels that trigger a prefill task; decode is a
+dataflow chain per slot, and the engine packs ready slots into batched
+decode steps (the work-queue at token granularity).
+
+Two engines share that skeleton:
+
+* `PagedServingEngine` (the default `ServingEngine`) — KV memory is a
+  pool of AGAS-named pages (serving/kvcache.py, DESIGN.md §4a).
+  Admission is gated on free *pages*, not free slots: a request enters
+  when the pool can hold its prefill (prefix-shared pages excluded)
+  plus one decode page of headroom.  When the pool runs dry mid-decode
+  the youngest request is preempted back to the queue (its pages freed,
+  its progress carried so re-admission resumes seamlessly).  Every slot
+  keeps its own position clock — there is no shared `len/cursor/abs`.
+  Per-step counters (queue depth, page occupancy, latencies) expose the
+  runtime's overheads in the spirit of the paper's Fig 9.
+
+* `DenseServingEngine` — the static-ownership baseline: a bulk
+  `(slots, max_len)` cache with one shared position clock spliced via
+  `jnp.maximum`.  Kept as the CSP-style comparison point for parity
+  tests and benchmarks/serve_bench.py; its memory scales with
+  worst-case length whether or not tokens exist.
 
 Design points that matter at scale and are implemented here:
-* fixed-shape decode batch (slot pool) -> one compiled decode_step;
+* fixed-shape decode batch (slot pool) -> one compiled decode step;
 * prefill runs per request at bucketed lengths (pad-to-bucket) to
   bound compilation count;
 * slots free on EOS/length and refill from the queue (continuous
   batching);
-* per-slot sampling state (greedy or temperature).
+* per-slot sampling state (greedy or temperature), keyed by the
+  request id and its own generated-token count.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -26,8 +47,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.lco import Future
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
+from repro.serving.kvcache import (PagedKVCache, PageExhausted,
+                                   PAGED_FAMILIES)
 
 
 @dataclasses.dataclass
@@ -45,66 +69,160 @@ class Completion:
     tokens: List[int]
     prefill_s: float
     decode_s: float
+    preemptions: int = 0
 
 
-class ServingEngine:
-    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
-                 max_len: int = 512, prefill_buckets=(64, 128, 256)):
+class _EngineBase:
+    """Queue intake, bucketed prefill, sampling, and the run loop."""
+
+    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int,
+                 max_len: int, prefill_buckets=(64, 128, 256)):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.buckets = tuple(sorted(prefill_buckets))
-        self.queue: List[Request] = []
+        # queue items: {"req", "gen" (tokens carried over a
+        # preemption), "preempts"}
+        self.queue: List[dict] = []
         self.active: Dict[int, dict] = {}      # slot -> request state
         self.free_slots = list(range(slots))
         self.completions: List[Completion] = []
-        # one shared batched cache across slots
-        self.cache = T.init_cache(cfg, slots, max_len)
-        self._decode = jax.jit(
-            lambda p, c, b: T.decode_step(p, c, b, cfg))
-        self._prefills = {}
+        self._futures: Dict[int, Future] = {}
+        self._prefills: Dict[int, Any] = {}
 
     # -- request intake (a parcel arriving at the engine locality) ----
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    def submit(self, req: Request) -> Future:
+        """Enqueue; returns the completion LCO (set exactly once)."""
+        fut = Future()
+        self._futures[req.rid] = fut
+        self.queue.append({"req": req, "gen": [], "preempts": 0,
+                           "bucket": None})
+        return fut
+
+    @staticmethod
+    def _queue_prompt(item: dict) -> np.ndarray:
+        """Prompt + any tokens generated before a preemption."""
+        req = item["req"]
+        if item["gen"]:
+            return np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(item["gen"], np.int32)])
+        return np.asarray(req.prompt, np.int32)
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
             if n <= b:
                 return b
-        return self.buckets[-1]
+        # beyond the ladder: multiples of the largest bucket, so the
+        # compile count stays bounded
+        big = self.buckets[-1]
+        return -(-n // big) * big
+
+    @staticmethod
+    def _pad_to(tokens: np.ndarray, length: int) -> np.ndarray:
+        padded = np.zeros(length, np.int32)
+        padded[length - len(tokens):] = tokens           # left-pad
+        return padded
+
+    def _padded_prompt(self, tokens: np.ndarray) -> np.ndarray:
+        return self._pad_to(tokens, self._bucket(len(tokens)))
 
     def _prefill_fn(self, bucket: int):
+        """One compiled prefill per bucket.  The real sequence may end
+        before the padded buffer does (right-padded resumes); the last
+        index is a traced operand, so it never forces a recompile."""
         if bucket not in self._prefills:
             cfg = self.cfg
+            full_kv = self._FULL_KV
 
-            def fn(params, tokens):
+            def fn(params, tokens, last_index):
                 batch = {"tokens": tokens}
-                hidden, cache = T.prefill(params, batch, cfg)
+                hidden, cache = T.prefill(params, batch, cfg,
+                                          full_kv=full_kv,
+                                          last_index=last_index)
                 return T.logits_fn(params, hidden), cache
             self._prefills[bucket] = jax.jit(fn)
         return self._prefills[bucket]
 
+    def _sample(self, logits: jnp.ndarray, req: Request,
+                n_gen: int) -> int:
+        """Sample keyed by (rid, generated-token count) — each step of
+        each request gets a distinct PRNG key."""
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits))
+        key = jax.random.PRNGKey(req.rid * 7919 + n_gen)
+        return int(jax.random.categorical(key,
+                                          logits / req.temperature))
+
+    def _reject(self, item: dict, err: Exception) -> None:
+        """Fail one request without killing the engine: its completion
+        LCO carries the error; everything else keeps flowing."""
+        fut = self._futures.pop(item["req"].rid, None)
+        if fut is not None:
+            fut.set_error(err)
+
+    def _finish(self, st: dict) -> None:
+        comp = Completion(st["req"].rid, st["tokens"], st["prefill_s"],
+                          time.perf_counter() - st["t0"],
+                          st.get("preempts", 0))
+        self.completions.append(comp)
+        fut = self._futures.pop(comp.rid, None)
+        if fut is not None:
+            fut.set(comp)
+
+    def step(self) -> int:
+        raise NotImplementedError
+
+    def _admit(self) -> None:
+        raise NotImplementedError
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.active and not self.queue:
+                return
+            self.step()                  # step() admits first
+
+
+class DenseServingEngine(_EngineBase):
+    """Static bulk KV ownership: (slots, max_len), one shared clock."""
+
+    _FULL_KV = False
+
+    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
+                 max_len: int = 512, prefill_buckets=(64, 128, 256)):
+        super().__init__(params, cfg, slots=slots, max_len=max_len,
+                         prefill_buckets=prefill_buckets)
+        # one shared batched cache across slots
+        self.cache = T.init_cache(cfg, slots, max_len)
+        self._decode = jax.jit(
+            lambda p, c, b: T.decode_step(p, c, b, cfg))
+
     def _admit(self) -> None:
         while self.queue and self.free_slots:
-            req = self.queue.pop(0)
+            item = self.queue.pop(0)
+            req = item["req"]
+            toks = self._padded_prompt(self._queue_prompt(item))
+            bucket = len(toks)
+            if bucket > self.max_len:
+                self._reject(item, ValueError(
+                    f"request {req.rid}: padded prompt {bucket} "
+                    f"exceeds max_len {self.max_len}"))
+                continue
             slot = self.free_slots.pop(0)
             t0 = time.perf_counter()
-            n = len(req.prompt)
-            bucket = self._bucket(n)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, bucket - n:] = req.prompt    # left-pad
             logits, pcache = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(toks))
+                self.params, jnp.asarray(toks[None]),
+                jnp.int32(bucket - 1))
             # splice this request's prefill cache into the slot pool
             self._splice_cache(slot, pcache, bucket)
-            first = self._sample(logits[0], req)
+            first = self._sample(logits[0], req, len(item["gen"]))
             self.active[slot] = {
-                "req": req, "tokens": [int(first)],
+                "req": req, "tokens": item["gen"] + [int(first)],
                 "prefill_s": time.perf_counter() - t0,
                 "t0": time.perf_counter(),
                 "pos": bucket,
+                "preempts": item["preempts"],
             }
 
     def _splice_cache(self, slot: int, pcache: dict, plen: int) -> None:
@@ -141,14 +259,6 @@ class ServingEngine:
         self.cache["abs"] = jnp.maximum(self.cache["abs"],
                                         pcache["abs"])
 
-    def _sample(self, logits: jnp.ndarray, req: Request) -> int:
-        if req.temperature <= 0:
-            return int(jnp.argmax(logits))
-        key = jax.random.PRNGKey(req.rid * 7919 + len(
-            self.active.get(req.rid, {}).get("tokens", [])))
-        return int(jax.random.categorical(key,
-                                          logits / req.temperature))
-
     # -- the decode work-queue ----------------------------------------
     def step(self) -> int:
         """One batched decode step over all active slots."""
@@ -169,22 +279,228 @@ class ServingEngine:
         done = []
         for slot, st in self.active.items():
             req = st["req"]
-            tok = self._sample(logits[slot], req)
+            tok = self._sample(logits[slot], req, len(st["tokens"]))
             st["tokens"].append(tok)
             if (req.eos_id is not None and tok == req.eos_id) or \
                     len(st["tokens"]) >= req.max_new_tokens:
                 done.append(slot)
         for slot in done:
-            st = self.active.pop(slot)
-            self.completions.append(Completion(
-                st["req"].rid, st["tokens"], st["prefill_s"],
-                time.perf_counter() - st["t0"]))
+            self._finish(self.active.pop(slot))
             self.free_slots.append(slot)
         return len(self.active) + len(done)
 
-    def run_to_completion(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
-            self._admit()
-            if not self.active and not self.queue:
+
+class PagedServingEngine(_EngineBase):
+    """KV memory as AGAS pages: demand allocation, prefix sharing,
+    page-gated admission, and preemption under pressure."""
+
+    _FULL_KV = True
+
+    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
+                 max_len: int = 512, prefill_buckets=(64, 128, 256),
+                 page_size: int = 16, n_pages: Optional[int] = None):
+        super().__init__(params, cfg, slots=slots, max_len=max_len,
+                         prefill_buckets=prefill_buckets)
+        if n_pages is None:
+            # default: the dense engine's worst-case footprint — callers
+            # shrink it to oversubscribe (kvcache preempts under
+            # pressure), or grow slots beyond what dense could afford
+            n_pages = slots * (-(-max_len // page_size))
+        self.kvc = PagedKVCache(cfg, slots, max_len, n_pages, page_size)
+        # donate the page pool: on accelerators the step updates KV
+        # pages in place instead of holding input + output copies
+        self._decode = jax.jit(
+            lambda p, pages, b: T.decode_step_paged(p, pages, b, cfg),
+            donate_argnums=(1,))
+        self._seq = itertools.count()          # admission order
+        self.preemptions = 0
+        self.counters: List[dict] = []         # per-step telemetry
+
+    # -- page-gated admission -----------------------------------------
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            item = self.queue[0]
+            req = item["req"]
+            prompt = self._queue_prompt(item)
+            if item["gen"]:
+                # re-admission after preemption: reconstruct the
+                # ORIGINAL padded layout (same left-pad count, same
+                # positions) extended by the generated tokens, so the
+                # resumed request decodes exactly as if it had never
+                # been preempted
+                padded = self._pad_to(
+                    prompt, item["bucket"] + len(item["gen"]))
+            else:
+                padded = self._padded_prompt(prompt)
+            real = len(padded)
+            if real > self.max_len:
+                self.queue.pop(0)
+                self._reject(item, ValueError(
+                    f"request {req.rid}: padded prompt {real} "
+                    f"exceeds max_len {self.max_len}"))
+                continue
+            # admit on PAGES, not slots: prefill pages (prefix-shared
+            # ones are free), one decode page of headroom, plus a
+            # watermark for active slots whose next write takes a page
+            # (boundary alloc or COW) — otherwise an admission can be
+            # preempted away in the very same step
+            upcoming = sum(1 for s in self.active
+                           if self.kvc.needs_alloc(s))
+            need = self.kvc.pages_needed(padded) + 1
+            if need > self.kvc.pool.capacity:
+                self.queue.pop(0)
+                self._reject(item, RuntimeError(
+                    f"request {req.rid} needs {need} pages but the "
+                    f"pool holds {self.kvc.pool.capacity}"))
+                continue
+            if need + upcoming > self.kvc.pool.free_pages:
+                break                          # head-of-line blocking
+            self.queue.pop(0)
+            slot = self.free_slots.pop(0)
+            t0 = time.perf_counter()
+            # resumes run at the bucket ladder too: pad RIGHT (junk
+            # tokens after the real end never enter the cache and,
+            # under causality, cannot influence earlier positions), so
+            # the compile count stays bucket-bounded
+            bucket = self._bucket(real)
+            toks = np.zeros(bucket, np.int32)
+            toks[:real] = padded
+            logits, pcache = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks[None]),
+                jnp.int32(real - 1))
+            self.kvc.attach(slot, padded,
+                            pcache["k"][:, 0, :real],
+                            pcache["v"][:, 0, :real])
+            first = self._sample(logits[0], req, len(item["gen"]))
+            self.active[slot] = {
+                "req": req, "tokens": item["gen"] + [int(first)],
+                "prefill_s": time.perf_counter() - t0,
+                "t0": time.perf_counter(),
+                "seq": next(self._seq),
+                "preempts": item["preempts"],
+                "bucket": item["bucket"] if item["gen"] else real,
+            }
+
+    # -- preemption under page pressure -------------------------------
+    def _preempt(self, slot: int) -> None:
+        """Evict a request: free its pages, requeue it at the front
+        with its progress AND its original padded bucket, so
+        re-admission reconstructs the identical context layout and
+        resumes where it left off."""
+        st = self.active.pop(slot)
+        self.kvc.release(slot)
+        self.free_slots.append(slot)
+        self.preemptions += 1
+        self.queue.insert(0, {"req": st["req"], "gen": st["tokens"],
+                              "preempts": st["preempts"] + 1,
+                              "bucket": st["bucket"]})
+
+    def _prepare_writes(self) -> None:
+        """Reserve every active slot's write page, preempting the
+        youngest request (LIFO — the oldest keeps its pages, so the
+        system always drains) until the pool fits.  A lone request the
+        pool cannot hold is failed via its LCO, not the engine."""
+        while True:
+            try:
+                for slot in sorted(self.active,
+                                   key=lambda s: self.active[s]["seq"]):
+                    self.kvc.prepare_decode(slot)
                 return
-            self.step()
+            except PageExhausted:
+                if len(self.active) <= 1:
+                    slot, st = next(iter(self.active.items()))
+                    self.active.pop(slot)
+                    self.kvc.release(slot)
+                    self.free_slots.append(slot)
+                    self._reject({"req": st["req"]}, RuntimeError(
+                        "page pool too small for request "
+                        f"{st['req'].rid}: {self.kvc.pool.capacity} "
+                        f"pages of {self.kvc.pool.page_size}"))
+                    return
+                victim = max(self.active,
+                             key=lambda s: self.active[s]["seq"])
+                self._preempt(victim)
+
+    # -- the decode work-queue ----------------------------------------
+    def step(self) -> int:
+        """One batched decode step over all active slots."""
+        self._admit()
+        # truncate requests whose next token has no cache room left
+        # (bucket + generated reached max_len) instead of overflowing
+        for slot in [s for s in self.active
+                     if self.kvc.lengths[s] >= self.max_len]:
+            self._finish(self.active.pop(slot))
+            self.kvc.release(slot)
+            self.free_slots.append(slot)
+        if not self.active:
+            return 0
+        self._prepare_writes()
+        if not self.active:                    # lone request rejected
+            return 0
+        t0 = time.perf_counter()
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, st in self.active.items():
+            tokens[slot, 0] = st["tokens"][-1]
+        batch = {"tokens": jnp.asarray(tokens),
+                 **self.kvc.batch_inputs()}
+        logits, pages = self._decode(self.params, self.kvc.pool.pages,
+                                     batch)
+        self.kvc.pool.pages = pages
+        done = []
+        for slot, st in self.active.items():
+            self.kvc.advance(slot)
+            req = st["req"]
+            tok = self._sample(logits[slot], req, len(st["tokens"]))
+            st["tokens"].append(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(st["tokens"]) >= req.max_new_tokens:
+                done.append(slot)
+        for slot in done:
+            self._finish(self.active.pop(slot))
+            self.kvc.release(slot)
+            self.free_slots.append(slot)
+        pool = self.kvc.pool
+        self.counters.append({
+            "t": time.perf_counter(),
+            "queue_depth": len(self.queue),
+            "active": len(self.active) + len(done),
+            "pages_used": pool.used_pages,
+            "page_occupancy": pool.occupancy(),
+            "preemptions": self.preemptions,
+            "decode_ms": (time.perf_counter() - t0) * 1e3,
+        })
+        return len(self.active) + len(done)
+
+    def stats(self) -> dict:
+        """Aggregate per-step counters (the Fig 9 overhead view)."""
+        c = self.counters
+        pool = self.kvc.pool
+        return {
+            "steps": len(c),
+            "peak_active": max((x["active"] for x in c), default=0),
+            "peak_page_occupancy": max(
+                (x["page_occupancy"] for x in c), default=0.0),
+            "mean_decode_ms": float(np.mean(
+                [x["decode_ms"] for x in c])) if c else 0.0,
+            "preemptions": self.preemptions,
+            "page_allocs": pool.allocs,
+            "page_shares": pool.shares,
+            "cow_copies": pool.cow_copies,
+            "mean_prefill_ms": float(np.mean(
+                [x.prefill_s for x in self.completions])) * 1e3
+            if self.completions else 0.0,
+        }
+
+
+#: The serving engine: paged KV over AGAS pages.
+ServingEngine = PagedServingEngine
+
+
+def make_engine(params: Any, cfg: ArchConfig, **kwargs) -> _EngineBase:
+    """Paged engine for attention-cache families, dense fallback for
+    families whose recurrent state has no paged layout (ssm/hybrid/vlm)."""
+    if cfg.family in PAGED_FAMILIES:
+        return PagedServingEngine(params, cfg, **kwargs)
+    kwargs.pop("page_size", None)
+    kwargs.pop("n_pages", None)
+    return DenseServingEngine(params, cfg, **kwargs)

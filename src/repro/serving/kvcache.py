@@ -1,0 +1,342 @@
+"""AGAS-managed paged KV cache (DESIGN.md §4a).
+
+The ParalleX reading of KV memory: instead of a dense ``(slots,
+max_len)`` cache statically owned by each decode slot, KV storage is a
+pool of fixed-size *pages*, each a first-class globally-named object
+allocated and freed through the AGAS directory (`core/agas.py`).  A
+page's `GlobalAddress` is its immutable name; the AGAS slot it resolves
+to is the physical row in the device-side page arrays, so a block-table
+lookup compiles to a gather index — the same "nothing dynamic survives
+to run time" rendering used for AMR blocks.
+
+Three layers live here:
+
+* `PagePool` — the allocator: AGAS-backed gid -> physical-row mapping,
+  per-page refcounts, a prompt-prefix hash index enabling pages shared
+  between requests (copy-on-write on first divergent append), and the
+  device arrays themselves (``pages["k"]/pages["v"]`` of shape
+  ``(L, n_pages + 1, page_size, KV, D)``; the extra trailing row is the
+  *null page*, the write target of idle decode slots — never read
+  because the per-slot masks exclude it).
+
+* `PagedKVCache` — the per-engine view: one block table per decode
+  slot mapping token position ``p`` to the physical row of page
+  ``p // page_size``, plus **per-slot** position counters (replacing
+  the dense cache's shared ``len/cursor/abs`` clock).
+
+* `PageExhausted` — the backpressure signal: raised when the pool has
+  no free page; the serving engine reacts by preempting a request back
+  to the queue (the LCO analogue of a parcel being deferred).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agas import AGAS, AGASError, GlobalAddress
+from repro.core.localities import LocalityDomain
+from repro.models.config import ArchConfig
+from repro.models.transformer import PAGED_FAMILIES, init_paged_cache
+
+
+class PageExhausted(RuntimeError):
+    """No free page in the pool; callers preempt or defer."""
+
+
+def page_keys(tokens: np.ndarray, page_size: int
+              ) -> List[Tuple[bytes, int]]:
+    """Chained prefix hashes, one per page of a (padded) prompt.
+
+    Key i commits to ALL tokens in pages 0..i plus the page's fill
+    count, so two requests share page i iff their padded prompts agree
+    on every token up to and including it.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    keys: List[Tuple[bytes, int]] = []
+    for start in range(0, len(tokens), page_size):
+        chunk = np.asarray(tokens[start:start + page_size], np.int32)
+        h.update(chunk.tobytes())
+        keys.append((h.digest(), len(chunk)))
+    return keys
+
+
+# Jitted + donated page mutations: on accelerators the update happens
+# in place instead of copying the whole pool per call (CPU falls back
+# to a copy with a one-time donation warning).
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(arr, idx, spans):
+    return arr.at[:, idx].set(spans)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _clone_row(arr, src, dst):
+    return arr.at[:, dst].set(arr[:, src])
+
+
+class PagePool:
+    """Refcounted AGAS page allocator + the device page arrays."""
+
+    def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
+                 dtype=None):
+        if cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"paged KV cache supports {PAGED_FAMILIES}, "
+                f"not {cfg.family!r}")
+        self.cfg = cfg
+        self.capacity = int(n_pages)
+        self.page_size = int(page_size)
+        self.null_row = self.capacity          # reserved garbage row
+        # One locality: the serving engine is a single-device demo; a
+        # sharded pool would use one locality per KV shard.
+        self.agas = AGAS(LocalityDomain.simulated(1), self.capacity,
+                         space="kvpage")
+        self._refs: Dict[int, int] = {}            # gid -> refcount
+        self._prefix: Dict[Tuple[bytes, int], GlobalAddress] = {}
+        self._key_of: Dict[int, Tuple[bytes, int]] = {}
+        self.pages: Dict[str, Any] = init_paged_cache(
+            cfg, self.capacity + 1, self.page_size, dtype)
+        # performance counters (Fig 9 spirit: runtime overhead visible)
+        self.allocs = 0
+        self.shares = 0
+        self.cow_copies = 0
+
+    # -- allocation / refcounting -------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return self.capacity - len(self._refs)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._refs)
+
+    def occupancy(self) -> float:
+        return self.used_pages / max(self.capacity, 1)
+
+    def alloc(self) -> GlobalAddress:
+        try:
+            addr = self.agas.allocate(0)
+        except AGASError:
+            raise PageExhausted(
+                f"page pool exhausted ({self.capacity} pages)") from None
+        self._refs[addr.gid] = 1
+        self.allocs += 1
+        return addr
+
+    def incref(self, addr: GlobalAddress) -> None:
+        self._refs[addr.gid] += 1
+
+    def decref(self, addr: GlobalAddress) -> None:
+        self._refs[addr.gid] -= 1
+        if self._refs[addr.gid] == 0:
+            del self._refs[addr.gid]
+            key = self._key_of.pop(addr.gid, None)
+            if key is not None:
+                cur = self._prefix.get(key)
+                if cur is not None and cur.gid == addr.gid:
+                    del self._prefix[key]
+            self.agas.free(addr)
+
+    def refcount(self, addr: GlobalAddress) -> int:
+        return self._refs[addr.gid]
+
+    def row(self, addr: GlobalAddress) -> int:
+        return self.agas.slot_of(addr)
+
+    # -- prefix sharing ------------------------------------------------
+    def lookup_prefix(self, key: Tuple[bytes, int]
+                      ) -> Optional[GlobalAddress]:
+        return self._prefix.get(key)
+
+    def register_prefix(self, key: Tuple[bytes, int],
+                        addr: GlobalAddress) -> None:
+        if key not in self._prefix:
+            self._prefix[key] = addr
+            self._key_of[addr.gid] = key
+
+    # -- device-side page content -------------------------------------
+    def write_pages(self, rows: List[int], k_spans, v_spans) -> None:
+        """One batched scatter of whole pages: spans are
+        (L, len(rows), page_size, KV, D)."""
+        idx = jnp.asarray(rows, jnp.int32)
+        self.pages["k"] = _scatter_rows(self.pages["k"], idx,
+                                        k_spans.astype(
+                                            self.pages["k"].dtype))
+        self.pages["v"] = _scatter_rows(self.pages["v"], idx,
+                                        v_spans.astype(
+                                            self.pages["v"].dtype))
+
+    def copy_page(self, src_row: int, dst_row: int) -> None:
+        """COW: clone a page's contents under a fresh global name."""
+        src = jnp.int32(src_row)
+        dst = jnp.int32(dst_row)
+        self.pages["k"] = _clone_row(self.pages["k"], src, dst)
+        self.pages["v"] = _clone_row(self.pages["v"], src, dst)
+        self.cow_copies += 1
+
+
+@dataclasses.dataclass
+class _SlotState:
+    addrs: List[GlobalAddress]
+    length: int                      # tokens stored = abs position clock
+
+
+class PagedKVCache:
+    """Per-slot block tables over a shared PagePool.
+
+    Every decode slot carries its own position counter (`lengths`) —
+    the per-slot clock that replaces the dense cache's shared
+    ``len/cursor/abs`` triple — and a block table row mapping its token
+    positions onto physical page rows.
+    """
+
+    def __init__(self, cfg: ArchConfig, slots: int, max_len: int,
+                 n_pages: int, page_size: int, dtype=None):
+        self.pool = PagePool(cfg, n_pages, page_size, dtype)
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.max_pages_slot = -(-self.max_len // page_size)
+        null = self.pool.null_row
+        self.tables = np.full((slots, self.max_pages_slot), null,
+                              np.int32)
+        self.lengths = np.zeros(slots, np.int32)
+        self.write_rows = np.full(slots, null, np.int32)
+        self.write_offs = np.zeros(slots, np.int32)
+        self._state: List[_SlotState] = [
+            _SlotState([], 0) for _ in range(slots)]
+
+    # -- admission-time accounting ------------------------------------
+    def pages_needed(self, padded_tokens: np.ndarray) -> int:
+        """Fresh pages a prefill would allocate (prefix hits excluded)."""
+        ps = self.pool.page_size
+        return sum(1 for key in page_keys(padded_tokens, ps)
+                   if self.pool.lookup_prefix(key) is None)
+
+    # -- prefill attach ------------------------------------------------
+    def attach(self, slot: int, padded_tokens: np.ndarray,
+               k, v) -> None:
+        """Install a prefilled prompt into `slot`.
+
+        k/v: (L, S, KV, D) full-prompt KV (padded bucket included, so
+        the paged path attends exactly what the dense path would).
+        Shared pages (prefix-hash hits) are reused by refcount instead
+        of rewritten.
+        """
+        ps = self.pool.page_size
+        s = len(padded_tokens)
+        if s > self.max_len:
+            raise ValueError(f"prompt {s} exceeds max_len {self.max_len}")
+        st = self._state[slot]
+        assert not st.addrs, f"slot {slot} already attached"
+        keys = page_keys(padded_tokens, ps)
+        acquired: List[GlobalAddress] = []
+        fresh: List[int] = []               # page indices to write
+        try:
+            for i, (key, fill) in enumerate(keys):
+                shared = self.pool.lookup_prefix(key)
+                if shared is not None:
+                    self.pool.incref(shared)
+                    self.pool.shares += 1
+                    acquired.append(shared)
+                else:
+                    addr = self.pool.alloc()
+                    self.pool.register_prefix(key, addr)
+                    acquired.append(addr)
+                    fresh.append(i)
+        except PageExhausted:
+            for a in acquired:
+                self.pool.decref(a)
+            raise
+        if fresh:
+            # one batched whole-page scatter (zero-padded tail on the
+            # partial page — never read: masks stop at the clock)
+            pad = len(keys) * ps - s
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+                .reshape(k.shape[0], len(keys), ps, *k.shape[2:])
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+                .reshape(v.shape[0], len(keys), ps, *v.shape[2:])
+            fi = jnp.asarray(fresh, jnp.int32)
+            self.pool.write_pages(
+                [self.pool.row(acquired[i]) for i in fresh],
+                kp[:, fi], vp[:, fi])
+        st.addrs = acquired
+        st.length = s
+        self.lengths[slot] = s
+        for i, a in enumerate(acquired):
+            self.tables[slot, i] = self.pool.row(a)
+
+    # -- decode-step bookkeeping --------------------------------------
+    def prepare_decode(self, slot: int) -> None:
+        """Reserve the write target for this slot's next token.
+
+        Allocates a fresh page at page boundaries; clones (COW) a
+        shared page before the first divergent append.  Idempotent, so
+        the engine can retry after preempting a victim on
+        PageExhausted.
+        """
+        st = self._state[slot]
+        ps = self.pool.page_size
+        pos = st.length
+        page_idx, off = divmod(pos, ps)
+        if page_idx >= self.max_pages_slot:
+            raise RuntimeError(
+                f"slot {slot} overflows max_len {self.max_len}")
+        if page_idx == len(st.addrs):
+            addr = self.pool.alloc()
+            st.addrs.append(addr)
+        else:
+            addr = st.addrs[page_idx]
+            if self.pool.refcount(addr) > 1:
+                fresh = self.pool.alloc()
+                self.pool.copy_page(self.pool.row(addr),
+                                    self.pool.row(fresh))
+                self.pool.decref(addr)
+                st.addrs[page_idx] = fresh
+                addr = fresh
+        row = self.pool.row(addr)
+        self.tables[slot, page_idx] = row
+        self.write_rows[slot] = row
+        self.write_offs[slot] = off
+
+    def needs_alloc(self, slot: int) -> bool:
+        """Will this slot's next prepare_decode take a page from the
+        pool?  True at page boundaries (fresh page) and on shared
+        partial pages (COW clone) — the admission watermark."""
+        st = self._state[slot]
+        page_idx, _ = divmod(st.length, self.pool.page_size)
+        if page_idx >= len(st.addrs):
+            return True
+        return self.pool.refcount(st.addrs[page_idx]) > 1
+
+    def advance(self, slot: int) -> None:
+        st = self._state[slot]
+        st.length += 1
+        self.lengths[slot] = st.length
+
+    def release(self, slot: int) -> None:
+        st = self._state[slot]
+        for a in st.addrs:
+            self.pool.decref(a)
+        st.addrs = []
+        st.length = 0
+        null = self.pool.null_row
+        self.tables[slot, :] = null
+        self.lengths[slot] = 0
+        self.write_rows[slot] = null
+        self.write_offs[slot] = 0
+
+    # -- the compiled-step view ---------------------------------------
+    def batch_inputs(self) -> Dict[str, Any]:
+        """Fixed-shape arrays for decode_step_paged (one compile)."""
+        return {
+            "block_tables": jnp.asarray(self.tables),
+            "positions": jnp.asarray(self.lengths),
+            "write_rows": jnp.asarray(self.write_rows),
+            "write_offs": jnp.asarray(self.write_offs),
+        }

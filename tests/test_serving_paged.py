@@ -1,0 +1,296 @@
+"""AGAS paged KV-cache subsystem: allocator, paged attention op,
+paged-vs-dense decode parity, preemption, and the completion LCO."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import attention as att
+from repro.models import transformer as T
+from repro.serving.engine import (DenseServingEngine,
+                                  PagedServingEngine, Request,
+                                  make_engine)
+from repro.serving.kvcache import (PagedKVCache, PageExhausted,
+                                   PagePool, page_keys)
+
+RNG = np.random.default_rng(7)
+
+
+def _cfg(name="yi-6b"):
+    return configs.get_reduced(name)
+
+
+# -- page allocator ----------------------------------------------------
+
+def test_pool_alloc_free_refcount_oom():
+    pool = PagePool(_cfg(), n_pages=4, page_size=8)
+    addrs = [pool.alloc() for _ in range(4)]
+    assert pool.free_pages == 0 and pool.occupancy() == 1.0
+    with pytest.raises(PageExhausted):
+        pool.alloc()
+    pool.incref(addrs[0])
+    assert pool.refcount(addrs[0]) == 2
+    pool.decref(addrs[0])
+    assert pool.free_pages == 0          # still held once
+    pool.decref(addrs[0])
+    assert pool.free_pages == 1          # really freed
+    a = pool.alloc()                     # reuses the freed slot
+    assert 0 <= pool.row(a) <= 4
+    for x in addrs[1:] + [a]:
+        pool.decref(x)
+    assert pool.free_pages == 4 and pool.used_pages == 0
+
+
+def test_page_keys_chain_includes_prefix():
+    a = np.arange(24, dtype=np.int32)
+    b = np.arange(24, dtype=np.int32)
+    b[2] = 99                            # diverge inside page 0
+    ka, kb = page_keys(a, 8), page_keys(b, 8)
+    assert len(ka) == 3
+    # all pages differ: the chain commits to the full prefix
+    assert all(x != y for x, y in zip(ka, kb))
+    # identical prompts share every key; fill counts match
+    assert page_keys(a, 8) == ka
+    assert ka[-1][1] == 8
+    assert page_keys(a[:20], 8)[-1][1] == 4
+
+
+def test_prefix_sharing_and_cow():
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=8,
+                       page_size=16)
+    padded = RNG.integers(0, 100, size=24).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    k = jnp.asarray(RNG.normal(size=(L, 24, kvh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(L, 24, kvh, hd)), jnp.float32)
+    kvc.attach(0, padded, k, v)
+    used0 = kvc.pool.used_pages
+    assert used0 == 2                    # one full + one partial page
+    kvc.attach(1, padded, k, v)          # identical prompt: all shared
+    assert kvc.pool.used_pages == used0
+    assert kvc.pool.shares == 2
+    assert np.array_equal(kvc.tables[0][:2], kvc.tables[1][:2])
+    # first divergent append: slot 1 must COW the shared partial page
+    kvc.prepare_decode(1)
+    assert kvc.pool.cow_copies == 1
+    assert kvc.tables[1][1] != kvc.tables[0][1]
+    # shared content was cloned bit-for-bit
+    r0, r1 = int(kvc.tables[0][1]), int(kvc.tables[1][1])
+    np.testing.assert_array_equal(
+        np.asarray(kvc.pool.pages["k"][:, r0, :8]),
+        np.asarray(kvc.pool.pages["k"][:, r1, :8]))
+    # slot 0 appends into its own page: refcount is 1 now, no COW
+    kvc.prepare_decode(0)
+    assert kvc.pool.cow_copies == 1
+    kvc.release(0)
+    kvc.release(1)
+    assert kvc.pool.used_pages == 0      # no leaked refcounts
+
+
+# -- paged attention op ------------------------------------------------
+
+def _rand_pages(n, ps, kvh, d):
+    k = jnp.asarray(RNG.normal(size=(n, ps, kvh, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(n, ps, kvh, d)), jnp.float32)
+    return k, v
+
+
+def test_paged_ref_matches_dense_decode_attention():
+    """Gathering pages laid out contiguously must reproduce
+    att.decode_attention over the equivalent dense cache."""
+    from repro.kernels.attention.ref import paged_attention_ref
+    cfg = _cfg("yi-6b")
+    b, h, kvh, d, ps, npages = 2, cfg.n_heads, cfg.n_kv_heads, \
+        cfg.head_dim, 8, 6
+    q = jnp.asarray(RNG.normal(size=(b, 1, h, d)), jnp.float32)
+    kp, vp = _rand_pages(npages + 1, ps, kvh, d)
+    # both slots at the same position => dense semantics apply
+    pos = 20
+    tables = jnp.asarray(
+        np.stack([[0, 1, 2, npages], [3, 4, 5, npages]]), jnp.int32)
+    positions = jnp.full((b,), pos, jnp.int32)
+    got = paged_attention_ref(q, kp, vp, tables, positions)
+    # dense equivalent: contiguous cache rows from the same pages;
+    # the null-page entries are masked on both sides (pos < len)
+    k_dense = kp[tables].reshape(b, 4 * ps, kvh, d)
+    v_dense = vp[tables].reshape(b, 4 * ps, kvh, d)
+    ref = att.decode_attention(q, k_dense, v_dense,
+                               jnp.int32(pos + 1), cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [0, 6])
+@pytest.mark.parametrize("kvh", [1, 2])
+def test_paged_pallas_kernel_matches_ref(window, kvh):
+    from repro.kernels.attention.ops import paged_attention
+    from repro.kernels.attention.ref import paged_attention_ref
+    b, h, d, ps, npages, ptab = 3, 4, 16, 8, 9, 4
+    q = jnp.asarray(RNG.normal(size=(b, 1, h, d)), jnp.float32)
+    kp, vp = _rand_pages(npages + 1, ps, kvh, d)
+    tables = jnp.asarray(RNG.integers(0, npages, size=(b, ptab)),
+                         jnp.int32)
+    positions = jnp.asarray([3, 17, 30], jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, tables, positions,
+                              window=window)
+    got = paged_attention(q, kp, vp, tables, positions, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5)
+
+
+# -- decode parity: paged engine == dense engine, greedy ---------------
+
+def _mixed_requests(cfg, n, lo=8, hi=30, max_new=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid, rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(lo, hi)))
+        .astype(np.int32), max_new_tokens=max_new)
+        for rid in range(n)]
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "mixtral-8x7b"])
+def test_paged_engine_token_parity_with_dense(arch):
+    """Greedy decode over block tables is token-identical to the dense
+    slot-pool cache (same bucket, simultaneous admission).
+
+    Caveat: the two engines compile separate executables, so a logit
+    near-tie could in principle resolve differently; this seed has no
+    such ties (stable across many runs)."""
+    cfg = _cfg(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_requests(cfg, 4, seed=3)
+    kw = dict(slots=4, max_len=96, prefill_buckets=(32,))
+    pe = PagedServingEngine(params, cfg, page_size=16, **kw)
+    de = DenseServingEngine(params, cfg, **kw)
+    for r in reqs:
+        pe.submit(r)
+        de.submit(r)
+    pe.run_to_completion()
+    de.run_to_completion()
+    ptoks = {c.rid: c.tokens for c in pe.completions}
+    dtoks = {c.rid: c.tokens for c in de.completions}
+    assert set(ptoks) == {r.rid for r in reqs}
+    assert ptoks == dtoks
+
+
+# -- page pressure: preemption, completion LCO, counters ---------------
+
+def test_preemption_under_page_pressure_completes_all():
+    cfg = _cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid, rng.integers(0, cfg.vocab_size, size=24)
+                    .astype(np.int32), max_new_tokens=20)
+            for rid in range(5)]
+    # 14 pages of 8 cannot hold 5 requests' worst case (6 pages each):
+    # the engine must preempt and still finish everything
+    eng = PagedServingEngine(params, cfg, slots=5, max_len=80,
+                             prefill_buckets=(32,), page_size=8,
+                             n_pages=14)
+    attached = []                        # every padded prefill layout
+    orig_attach = eng.kvc.attach
+
+    def logging_attach(slot, padded, k, v):
+        attached.append(np.array(padded))
+        orig_attach(slot, padded, k, v)
+    eng.kvc.attach = logging_attach
+    futs = [eng.submit(r) for r in reqs]
+    eng.run_to_completion()
+    assert len(eng.completions) == 5
+    assert all(len(c.tokens) == 20 for c in eng.completions)
+    assert eng.preemptions > 0
+    assert eng.kvc.pool.used_pages == 0              # nothing leaked
+    # preemption is seamless at the layout level: every re-admission
+    # reconstructed [original left-pads | prompt | generated] exactly
+    # (bucket 32 here), so positions and context match what the
+    # request saw before eviction.  (End-to-end greedy token equality
+    # across two engine instances is NOT asserted: each engine
+    # jit-compiles its own executables, and XLA may resolve float
+    # near-ties differently between compilations.)
+    bucket0 = 32
+    resumed = [p for p in attached if len(p) > bucket0]
+    assert len(resumed) == eng.preemptions
+    prompts = {tuple(r.prompt.tolist()): r for r in reqs}
+    comps = {c.rid: c for c in eng.completions}
+    for padded in resumed:
+        n0 = 24                          # all prompts are 24 tokens
+        assert list(padded[:bucket0 - n0]) == [0] * (bucket0 - n0)
+        req = prompts[tuple(padded[bucket0 - n0:bucket0].tolist())]
+        gen = list(padded[bucket0:])
+        # the carried tokens are a verbatim prefix of the completion
+        assert comps[req.rid].tokens[:len(gen)] == gen
+    # completion LCOs fired exactly once, with the right payloads
+    for r, f in zip(reqs, futs):
+        assert f.done() and f.get().rid == r.rid
+    # per-step telemetry recorded the pressure
+    s = eng.stats()
+    assert s["steps"] == len(eng.counters) > 0
+    assert 0.0 < s["peak_page_occupancy"] <= 1.0
+    assert s["preemptions"] == eng.preemptions
+
+
+def test_admission_gated_on_pages_not_slots():
+    cfg = _cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, slots=4, max_len=64,
+                             prefill_buckets=(32,), page_size=16,
+                             n_pages=5)
+    rng = np.random.default_rng(4)
+    for rid in range(3):
+        eng.submit(Request(rid, rng.integers(
+            0, cfg.vocab_size, size=20).astype(np.int32),
+            max_new_tokens=4))
+    eng._admit()
+    # 5 pages admit at most one 32-token prompt (2 pages + headroom)
+    # at a time even though 4 slots are free
+    assert len(eng.active) < 3
+    assert len(eng.free_slots) > 0
+    eng.run_to_completion()
+    assert len(eng.completions) == 3
+
+
+def test_oversized_prompt_rejected_without_killing_engine():
+    cfg = _cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, slots=2, max_len=96,
+                             prefill_buckets=(64, 128), page_size=16)
+    # 90 tokens fits max_len but its bucket (128) does not
+    f_big = eng.submit(Request(0, np.arange(90, dtype=np.int32) % 250,
+                               max_new_tokens=4))
+    f_ok = eng.submit(Request(1, np.arange(10, dtype=np.int32),
+                              max_new_tokens=4))
+    eng.run_to_completion()
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        f_big.get()
+    assert len(f_ok.get().tokens) == 4       # the valid request lived
+
+
+def test_generation_truncates_at_max_len_instead_of_overflowing():
+    cfg = _cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = PagedServingEngine(params, cfg, slots=2, max_len=64,
+                             prefill_buckets=(32,), page_size=16)
+    f1 = eng.submit(Request(0, np.arange(10, dtype=np.int32),
+                            max_new_tokens=50))
+    f2 = eng.submit(Request(1, np.arange(8, dtype=np.int32),
+                            max_new_tokens=4))
+    eng.run_to_completion()
+    # 32-token bucket + 32 decode writes fill max_len; prefill's first
+    # token needs no cache row, so 33 tokens come back
+    assert len(f1.get().tokens) == 33
+    assert len(f2.get().tokens) == 4
+    assert eng.kvc.pool.used_pages == 0
+
+
+def test_make_engine_falls_back_for_recurrent_families():
+    cfg = _cfg("falcon-mamba-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = make_engine(params, cfg, slots=2, max_len=64,
+                      prefill_buckets=(32,))
+    assert isinstance(eng, DenseServingEngine)
+    eng.submit(Request(0, np.arange(10, dtype=np.int32),
+                       max_new_tokens=4))
+    eng.run_to_completion()
+    assert len(eng.completions) == 1
