@@ -1,13 +1,24 @@
-"""Serving benchmark: AGAS paged KV cache vs dense slot-pool baseline.
+"""Serving benchmark: chunked prefill vs whole-prompt paged vs dense.
 
-At equal peak KV bytes, the dense engine owns `slots x max_len` token
-rows whether or not tokens exist; the paged engine spends the same
-bytes as an on-demand page pool and can therefore run MORE concurrent
-requests when real prompt lengths are mixed (short requests only hold
-the pages they touched).  This bench serves one mixed-length trace
-through both engines and reports throughput, achieved concurrency, and
-page occupancy — the serving rendering of the paper's Fig 9 claim that
-runtime-managed resources amortize their management overhead.
+Two comparisons, each on the trace it is valid for:
+
+* dense vs paged (PR 1): a short single-bucket trace — the dense
+  engine's one shared ``len/cursor/abs`` clock is only correct when
+  every concurrent request shares a prefill bucket and the cursor
+  never outruns ``max_len``, so the bulk-ownership baseline is
+  measured inside its own validity envelope.  At equal peak KV bytes
+  the paged engine runs more concurrent requests, because short
+  requests only hold the pages they touched.
+* whole-prompt vs chunked prefill (this PR, DESIGN.md §4b): a mixed
+  short/long trace with the long prompts queued FIRST — the
+  head-of-line shape chunked prefill exists to break.  At EQUAL page
+  budget, splitting prefill into page-aligned chunks under a per-step
+  token budget must hold p50 time-to-first-token strictly below the
+  whole-prompt engine at a total-throughput cost within 10%.
+
+Engines are warmed up (prefill buckets, the chunk step, and the decode
+step compiled) on a throwaway trace before timing, so the latency
+split reflects scheduling, not XLA compilation.
 
 Emits the run.py ``name,us_per_call,derived`` CSV contract plus one
 ``# json {...}`` line (and ``--out FILE`` to persist the JSON).
@@ -24,22 +35,62 @@ import numpy as np
 from benchmarks.common import emit
 
 ARCH = "yi-6b"
+
+# -- dense vs paged (PR 1): short trace, one shared bucket -------------
 SLOTS_DENSE = 4
-MAX_LEN = 96                # dense peak: 4 * 96 = 384 KV token rows
+DENSE_MAX_LEN = 96          # dense peak: 4 * 96 = 384 KV token rows
 PAGE_SIZE = 16
-N_PAGES = SLOTS_DENSE * MAX_LEN // PAGE_SIZE    # same 384 rows: 24 pages
+DENSE_N_PAGES = SLOTS_DENSE * DENSE_MAX_LEN // PAGE_SIZE     # 24 pages
 SLOTS_PAGED = 8             # paged runs 2x the decode width, same bytes
-N_REQUESTS = 16
+
+# -- whole-prompt vs chunked (this PR): mixed trace, equal pages -------
+MIXED_MAX_LEN = 128
+MIXED_N_PAGES = 32          # 512 KV token rows for both paged engines
+CHUNK = 32
+STEP_TOKENS = SLOTS_PAGED + 2 * CHUNK
+N_SHORT = 14
+N_LONG = 2
 MAX_NEW = 16
 
 
-def _requests(cfg):
+def _short_requests(cfg, n, max_new=MAX_NEW, rid0=0, seed=0):
+    rng = np.random.default_rng(seed)
+    from repro.serving.engine import Request
+    return [Request(rid0 + i, rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(8, 30)))
+        .astype(np.int32), max_new_tokens=max_new)
+        for i in range(n)]
+
+
+def _mixed_requests(cfg, n_short=N_SHORT, n_long=N_LONG,
+                    max_new=MAX_NEW):
+    """Long prompts FIRST, shorts queued behind them."""
     rng = np.random.default_rng(0)
     from repro.serving.engine import Request
-    return [Request(rid, rng.integers(
-        0, cfg.vocab_size, size=int(rng.integers(8, 30)))
-        .astype(np.int32), max_new_tokens=MAX_NEW)
-        for rid in range(N_REQUESTS)]
+    longs = [Request(rid, rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(80, 96)))
+        .astype(np.int32), max_new_tokens=max_new)
+        for rid in range(n_long)]
+    return longs + _short_requests(cfg, n_short, max_new=max_new,
+                                   rid0=n_long, seed=1)
+
+
+def _warmup(eng, cfg, lens):
+    """Compile every executable the timed trace will hit, then wipe
+    the engine's telemetry so timings reflect scheduling only."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(2)
+    for rid, n in enumerate(lens):
+        eng.submit(Request(-1 - rid, rng.integers(
+            0, cfg.vocab_size, size=n).astype(np.int32),
+            max_new_tokens=4))
+    eng.run_to_completion()
+    eng.completions.clear()
+    if hasattr(eng, "counters"):
+        eng.counters.clear()
+        eng.preemptions = 0
+        pool = eng.kvc.pool
+        pool.allocs = pool.shares = pool.cow_copies = 0
 
 
 def _serve(eng, reqs):
@@ -53,58 +104,113 @@ def _serve(eng, reqs):
     return dt, new_tokens
 
 
-def run(verbose=True, out_path=None):
+def _eng_stats(st, slots, tok, wall):
+    return {"slots": slots, "tok_s": tok / wall, "wall_s": wall,
+            "peak_active": st["peak_active"],
+            "peak_page_occupancy": st["peak_page_occupancy"],
+            "preemptions": st["preemptions"],
+            "page_shares": st["page_shares"],
+            "cow_copies": st["cow_copies"],
+            "ttft_p50_ms": st["ttft_p50_ms"],
+            "ttft_p95_ms": st["ttft_p95_ms"],
+            "itl_p50_ms": st["itl_p50_ms"],
+            "itl_p95_ms": st["itl_p95_ms"]}
+
+
+def run(verbose=True, out_path=None, smoke=False):
     import jax
 
     import repro.configs as configs
     from repro.models import transformer as T
-    from repro.serving.engine import (DenseServingEngine,
-                                      PagedServingEngine)
+    from repro.serving.engine import make_engine
 
     cfg = configs.get_reduced(ARCH)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    reqs = _requests(cfg)
+    result = {"arch": ARCH, "page_size": PAGE_SIZE}
 
-    dense = DenseServingEngine(params, cfg, slots=SLOTS_DENSE,
-                               max_len=MAX_LEN, prefill_buckets=(32,))
-    dense_s, dense_tok = _serve(dense, reqs)
-    # the dense engine can never exceed its slot count
-    dense_peak_active = SLOTS_DENSE
+    # -- dense vs paged on the short trace ----------------------------
+    short = _short_requests(cfg, 4 if smoke else 16,
+                            max_new=4 if smoke else MAX_NEW)
+    kw_short = dict(max_len=DENSE_MAX_LEN, prefill_buckets=(32,))
+    dense = make_engine(params, cfg, engine="dense",
+                        slots=SLOTS_DENSE, **kw_short)
+    _warmup(dense, cfg, (12,))
+    dense_s, dense_tok = _serve(dense, short)
 
-    paged = PagedServingEngine(params, cfg, slots=SLOTS_PAGED,
-                               max_len=MAX_LEN, prefill_buckets=(32,),
-                               page_size=PAGE_SIZE, n_pages=N_PAGES)
-    paged_s, paged_tok = _serve(paged, reqs)
-    st = paged.stats()
+    paged_s_eng = make_engine(params, cfg, engine="paged",
+                              slots=SLOTS_PAGED, page_size=PAGE_SIZE,
+                              n_pages=DENSE_N_PAGES, **kw_short)
+    _warmup(paged_s_eng, cfg, (12,))
+    pshort_s, pshort_tok = _serve(paged_s_eng, short)
+    ps_st = paged_s_eng.stats()
 
-    result = {
-        "arch": ARCH,
-        "kv_token_rows": SLOTS_DENSE * MAX_LEN,
+    result["short_trace"] = {
+        "kv_token_rows": SLOTS_DENSE * DENSE_MAX_LEN,
+        "n_requests": len(short),
         "dense": {"slots": SLOTS_DENSE, "tok_s": dense_tok / dense_s,
-                  "wall_s": dense_s, "peak_active": dense_peak_active},
-        "paged": {"slots": SLOTS_PAGED, "tok_s": paged_tok / paged_s,
-                  "wall_s": paged_s, "pages": N_PAGES,
-                  "page_size": PAGE_SIZE,
-                  "peak_active": st["peak_active"],
-                  "peak_page_occupancy": st["peak_page_occupancy"],
-                  "preemptions": st["preemptions"],
-                  "page_shares": st["page_shares"],
-                  "cow_copies": st["cow_copies"]},
+                  "wall_s": dense_s, "peak_active": SLOTS_DENSE},
+        "paged": _eng_stats(ps_st, SLOTS_PAGED, pshort_tok, pshort_s),
+    }
+
+    # -- whole-prompt vs chunked on the mixed trace -------------------
+    mixed = _mixed_requests(cfg, n_short=4 if smoke else N_SHORT,
+                            n_long=1 if smoke else N_LONG,
+                            max_new=4 if smoke else MAX_NEW)
+    kw_mixed = dict(max_len=MIXED_MAX_LEN, prefill_buckets=(32,),
+                    slots=SLOTS_PAGED, page_size=PAGE_SIZE,
+                    n_pages=MIXED_N_PAGES)
+    # cover every bucket a preempted request's re-admission can land
+    # in (32/64/96/128), not just the fresh-prompt buckets — otherwise
+    # a preemption drops an XLA compile inside the timed region
+    warm_lens = (97, 90, 33, 12)
+
+    paged = make_engine(params, cfg, engine="paged", **kw_mixed)
+    _warmup(paged, cfg, warm_lens)
+    paged_s, paged_tok = _serve(paged, mixed)
+    pst = paged.stats()
+
+    chunked = make_engine(params, cfg, engine="chunked",
+                          chunk_size=CHUNK, step_tokens=STEP_TOKENS,
+                          **kw_mixed)
+    _warmup(chunked, cfg, warm_lens)
+    chunked_s, chunked_tok = _serve(chunked, mixed)
+    cst = chunked.stats()
+
+    result["mixed_trace"] = {
+        "pages": MIXED_N_PAGES, "chunk_size": CHUNK,
+        "step_tokens": STEP_TOKENS,
+        "n_long": 1 if smoke else N_LONG,
+        "n_short": 4 if smoke else N_SHORT,
+        "paged": _eng_stats(pst, SLOTS_PAGED, paged_tok, paged_s),
+        "chunked": _eng_stats(cst, SLOTS_PAGED, chunked_tok,
+                              chunked_s),
     }
     if verbose:
-        print(f"# serve_bench dense  {dense_tok / dense_s:8.1f} tok/s "
-              f"peak_active={dense_peak_active}")
-        print(f"# serve_bench paged  {paged_tok / paged_s:8.1f} tok/s "
-              f"peak_active={st['peak_active']} "
-              f"occ={st['peak_page_occupancy']:.2f} "
-              f"preempt={st['preemptions']}")
+        print(f"# serve_bench dense   {dense_tok / dense_s:8.1f} tok/s "
+              f"(short trace, peak_active={SLOTS_DENSE})")
+        print(f"# serve_bench paged   {pshort_tok / pshort_s:8.1f} tok/s "
+              f"(short trace, peak_active={ps_st['peak_active']})")
+        print(f"# serve_bench paged   {paged_tok / paged_s:8.1f} tok/s "
+              f"(mixed) ttft_p50={pst['ttft_p50_ms']:.1f}ms "
+              f"itl_p50={pst['itl_p50_ms']:.2f}ms "
+              f"preempt={pst['preemptions']}")
+        print(f"# serve_bench chunked {chunked_tok / chunked_s:8.1f} tok/s "
+              f"(mixed) ttft_p50={cst['ttft_p50_ms']:.1f}ms "
+              f"itl_p50={cst['itl_p50_ms']:.2f}ms "
+              f"preempt={cst['preemptions']}")
         print("# json " + json.dumps(result))
+    # serve_dense/paged_tok_s stay the SAME short trace as PR 1 (the
+    # equal-KV-bytes pair); the mixed-trace engines get their own names
     emit("serve_dense_tok_s", dense_tok / dense_s, "tok_per_s")
-    emit("serve_paged_tok_s", paged_tok / paged_s, "tok_per_s")
-    emit("serve_paged_peak_active", st["peak_active"],
+    emit("serve_paged_tok_s", pshort_tok / pshort_s, "tok_per_s")
+    emit("serve_paged_mixed_tok_s", paged_tok / paged_s, "tok_per_s")
+    emit("serve_chunked_tok_s", chunked_tok / chunked_s, "tok_per_s")
+    emit("serve_paged_peak_active", ps_st["peak_active"],
          f"dense_slots_{SLOTS_DENSE}_equal_kv_bytes")
-    emit("serve_paged_peak_page_occupancy",
-         st["peak_page_occupancy"] * 100.0, "percent")
+    emit("serve_paged_ttft_p50", pst["ttft_p50_ms"] * 1e3, "us")
+    emit("serve_chunked_ttft_p50", cst["ttft_p50_ms"] * 1e3, "us")
+    emit("serve_paged_itl_p50", pst["itl_p50_ms"] * 1e3, "us")
+    emit("serve_chunked_itl_p50", cst["itl_p50_ms"] * 1e3, "us")
     if out_path:
         with open(out_path, "w") as f:
             json.dump(result, f, indent=2)
@@ -114,5 +220,8 @@ def run(verbose=True, out_path=None):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traces (CI): exercises all three engines"
+                         " without asserting the latency split")
     args = ap.parse_args()
-    run(out_path=args.out)
+    run(out_path=args.out, smoke=args.smoke)

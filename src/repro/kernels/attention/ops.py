@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.attention.flash import flash_attention_bhsd
-from repro.kernels.attention.paged import paged_attention_bhd
+from repro.kernels.attention.paged import (paged_attention_bhd,
+                                           paged_prefill_attention_btd)
 
 
 def _interpret_default() -> bool:
@@ -56,3 +57,18 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         q[:, 0], k_pages, v_pages, block_tables, positions,
         window=window, interpret=_interpret_default())
     return out[:, None]
+
+
+@partial(jax.jit, static_argnames=("window",))
+def paged_prefill_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                            v_pages: jnp.ndarray,
+                            block_tables: jnp.ndarray,
+                            start: jnp.ndarray, *,
+                            window: int = 0) -> jnp.ndarray:
+    """q: (B, T, H, D) chunk queries; k/v_pages: (N, ps, KV, D) (GQA
+    without repetition); block_tables: (B, P) physical page rows;
+    start: (B,) absolute position of each chunk's first query.  Same
+    contract as kernels.attention.ref.paged_prefill_attention_ref."""
+    return paged_prefill_attention_btd(
+        q, k_pages, v_pages, block_tables, start, window=window,
+        interpret=_interpret_default())

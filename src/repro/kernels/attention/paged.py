@@ -1,7 +1,15 @@
-"""Pallas TPU kernel: paged decode attention over block tables.
+"""Pallas TPU kernels: paged attention over block tables.
 
-One query token per sequence attends a KV cache scattered across
-fixed-size pages.  The block table is a *scalar-prefetch* operand
+Two entry points share the scheme:
+
+* `paged_attention_bhd` — decode: ONE query token per sequence attends
+  a KV cache scattered across fixed-size pages.
+* `paged_prefill_attention_btd` — chunked prefill: a CHUNK of T query
+  tokens (absolute positions start..start+T-1) attends the pages
+  already written for earlier chunks plus the chunk's own freshly
+  written pages, causal within the chunk (DESIGN.md §4b).
+
+The block table is a *scalar-prefetch* operand
 (pltpu.PrefetchScalarGridSpec): it is available before the kernel body
 runs, so the k/v index maps dereference it to pick the physical page
 row each grid step DMAs into VMEM — the AGAS lookup compiled into an
@@ -12,14 +20,15 @@ online-softmax statistics (m, l) and the output accumulator persist in
 VMEM scratch across the nP steps of one (B, H) tile and are flushed on
 the final step (same scheme as flash.py).
 
-  q tile  : (1, 1, D) VMEM          k/v tile: (1, ps, 1, D) VMEM
-  scratch : acc (1, D) f32, m (1, 1) f32, l (1, 1) f32
+  q tile  : (1, T, 1, D) VMEM       k/v tile: (1, ps, 1, D) VMEM
+  scratch : acc (T, D) f32, m (T, 1) f32, l (T, 1) f32
+  (decode is the T == 1 special case with its own entry point)
 
 GQA is handled in the k/v index maps (head h reads kv head
 h // n_rep); pages entirely outside the slot's valid range — beyond
-its per-slot position counter or behind its sliding window — are
-skipped via @pl.when, so compute scales with the tokens actually
-resident, not with the table width.
+its per-slot position counter (or the chunk's last query) or behind
+its sliding window — are skipped via @pl.when, so compute scales with
+the tokens actually resident, not with the table width.
 """
 
 from __future__ import annotations
@@ -125,4 +134,109 @@ def paged_attention_bhd(q: jnp.ndarray, k_pages: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), positions.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def _prefill_kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, t, ps, n_pages, window,
+                    scale):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    start = start_ref[b]
+    base = p * ps
+    # some query in the chunk can see this page: the last query sits at
+    # start + t - 1; under a window the earliest query (at `start`)
+    # bounds how far back any key can still be visible
+    live = base <= start + (t - 1)
+    if window > 0:
+        live &= start - (base + ps - 1) < window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, :, 0]                 # (T, D)
+        k = k_ref[0, :, 0]                 # (ps, D)
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (T, ps)
+        j = base + jax.lax.broadcasted_iota(jnp.int32, (t, ps), 1)
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, (t, ps), 0)
+        mask = j <= qpos                   # causal across + within chunk
+        if window > 0:
+            mask &= qpos - j < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        pr = jnp.exp(s - m_new)
+        pr = jnp.where(mask, pr, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pr, axis=-1,
+                                                 keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            pr.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_btd(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                v_pages: jnp.ndarray,
+                                block_tables: jnp.ndarray,
+                                start: jnp.ndarray, *,
+                                window: int = 0,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Chunked-prefill attention over block tables.
+
+    q: (B, T, H, D) chunk queries; k/v_pages: (N, ps, KV, D);
+    block_tables: (B, P) int32 physical rows; start: (B,) int32
+    absolute position of q[:, 0].  The chunk's own K/V must already be
+    written into its pages; query t attends keys at positions
+    <= start + t (and within the sliding window when set).
+    Returns (B, T, H, D).
+    """
+    b, t, h, d = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    n_rep = h // kvh
+    n_tables = block_tables.shape[1]
+    kern = functools.partial(
+        _prefill_kernel, t=t, ps=ps, n_pages=n_tables, window=window,
+        scale=d ** -0.5)
+
+    def kv_map(bi, hi, pi, bt, st):
+        return (bt[bi, pi], 0, hi // n_rep, 0)
+
+    def q_map(bi, hi, pi, bt, st):
+        return (bi, 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_tables),
+        in_specs=[
+            pl.BlockSpec((1, t, 1, d), q_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+            pl.BlockSpec((1, ps, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, t, 1, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((t, d), jnp.float32),
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), start.astype(jnp.int32),
       q, k_pages, v_pages)

@@ -1,5 +1,5 @@
 """Pure-jnp oracles: flash kernel (chunked online softmax) and the
-gather-based paged decode attention."""
+gather-based paged attention ops (decode and chunked prefill)."""
 
 from __future__ import annotations
 
@@ -57,6 +57,46 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     if window > 0:
         mask &= positions[:, None] - j[None, :] < window
     s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                v_pages: jnp.ndarray,
+                                block_tables: jnp.ndarray,
+                                start: jnp.ndarray, *,
+                                window: int = 0) -> jnp.ndarray:
+    """Gather-based chunked-prefill attention (one layer, T chunk
+    tokens at absolute positions start..start+T-1).
+
+    q:            (B, T, H, D) queries for the chunk being prefilled.
+    k/v_pages:    (N, ps, KV, D) page pool rows; the chunk's own K/V
+                  must already be written into its pages.
+    block_tables: (B, P) int32 physical page rows per slot.
+    start:        (B,) int32 absolute position of q[:, 0] — query t
+                  attends key positions <= start + t (causal across
+                  earlier chunks AND within this chunk).
+    window > 0 additionally restricts each query to its trailing
+    `window` positions (absolute-position SWA mask; pages are never
+    trimmed).
+    """
+    b, t, h, d = q.shape
+    kvh = k_pages.shape[2]
+    k = k_pages[block_tables].reshape(b, -1, kvh, d)   # (B, P*ps, KV, D)
+    v = v_pages[block_tables].reshape(b, -1, kvh, d)
+    n_rep = h // kvh
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = d ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    j = jnp.arange(k.shape[1])
+    qpos = start[:, None] + jnp.arange(t)[None, :]       # (B, T)
+    mask = j[None, None, :] <= qpos[:, :, None]          # (B, T, K)
+    if window > 0:
+        mask &= qpos[:, :, None] - j[None, None, :] < window
+    s = jnp.where(mask[:, None, :, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
     return out.astype(q.dtype)

@@ -4,6 +4,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 8
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
       --engine paged --pages 24 --page-size 16   # oversubscribed pool
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --engine chunked --chunk-size 32 --step-tokens 64
 """
 
 from __future__ import annotations
@@ -22,31 +24,31 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--engine", choices=("auto", "paged", "dense"),
+    ap.add_argument("--engine",
+                    choices=("auto", "chunked", "paged", "dense"),
                     default="auto")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pages", type=int, default=0,
                     help="page-pool size (0 = dense-equivalent)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="prefill chunk width (0 = 2 pages)")
+    ap.add_argument("--step-tokens", type=int, default=0,
+                    help="per-step token budget (0 = slots + chunk)")
     args = ap.parse_args()
 
     import repro.configs as configs
     from repro.models import transformer as T
-    from repro.serving.engine import (DenseServingEngine,
-                                      PagedServingEngine, Request,
-                                      make_engine)
+    from repro.serving.engine import Request, make_engine
 
     cfg = configs.get_reduced(args.arch)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     kw = dict(slots=args.slots, max_len=args.max_len)
-    if args.engine == "dense":
-        eng = DenseServingEngine(params, cfg, **kw)
-    elif args.engine == "paged":
-        eng = PagedServingEngine(
-            params, cfg, page_size=args.page_size,
-            n_pages=args.pages or None, **kw)
-    else:
-        eng = make_engine(params, cfg, page_size=args.page_size,
-                          n_pages=args.pages or None, **kw)
+    engine = "chunked" if args.engine == "auto" else args.engine
+    eng = make_engine(params, cfg, engine=engine,
+                      page_size=args.page_size,
+                      n_pages=args.pages or None,
+                      chunk_size=args.chunk_size or None,
+                      step_tokens=args.step_tokens or None, **kw)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     futs = []
@@ -75,6 +77,10 @@ def main():
               f"peak_page_occ={s['peak_page_occupancy']:.2f} "
               f"preemptions={s['preemptions']} "
               f"shares={s['page_shares']} cow={s['cow_copies']}")
+        print(f"[serve] ttft_p50={s['ttft_p50_ms']:.0f}ms "
+              f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
+              f"itl_p50={s['itl_p50_ms']:.1f}ms "
+              f"itl_p95={s['itl_p95_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,12 @@ Entry points:
                                             (per-slot position clocks
                                             over AGAS block tables,
                                             DESIGN.md §4a)
+  prefill_chunk(params, pages, batch, cfg)  -> (logits, pages)
+                                            (resumable chunked prefill:
+                                            one page-aligned chunk of a
+                                            prompt attends the pages of
+                                            earlier chunks and extends
+                                            the paged cache, §4b)
 
 `batch` is a dict: tokens (B,S) int32; labels (B,S) for train;
 patch_embeds (B,Nimg,Df) for vlm; frame_embeds (B,S,D) for audio;
@@ -819,4 +825,87 @@ def decode_step_paged(params: Params, pages: Dict[str, Any],
         layer, x, (params["layers"], pages["k"], pages["v"]))
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = logits_fn(params, x[:, 0])
+    return logits, dict(pages, k=k_new, v=v_new)
+
+
+def prefill_chunk(params: Params, pages: Dict[str, Any],
+                  batch: Dict[str, Any], cfg: ArchConfig,
+                  tp: int = 1, use_pallas: bool = False
+                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Resumable chunked prefill: one page-aligned chunk of a prompt
+    consumes and extends the paged KV cache (DESIGN.md §4b).
+
+    batch: tokens (B, C) chunk tokens, right-padded to the fixed chunk
+    width; block_tables (B, P) int32 physical page rows (pages of
+    earlier chunks plus this chunk's freshly acquired pages); start
+    (B,) int32 absolute position of tokens[:, 0] — page-aligned, equal
+    to the tokens already resident for the slot; chunk_rows (B, C/ps)
+    int32 physical rows this chunk's K/V pages are scattered into, with
+    the pool's null row substituted for prefix-shared pages (their
+    content already exists and must not be rewritten) and for pages
+    past a partial final chunk; last_index () int32 chunk-local index
+    whose hidden state feeds the returned logits (only meaningful on a
+    prompt's final chunk; earlier chunks ignore it).
+
+    Query t attends key positions <= start + t: causal over every
+    earlier chunk's pages and within the chunk itself — the chunk's
+    K/V is scattered into its pages *before* the gather, so one paged
+    attention covers both.  Junk K/V from right-padding lands inside
+    the final partial page beyond the slot's clock; masks never read
+    it, and the first decode write overwrites it (same invariant as
+    the whole-prompt attach path).  Returns (logits (B, V) f32, new
+    pages).
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged prefill supports {PAGED_FAMILIES}, not {cfg.family!r}")
+    if use_pallas:
+        from repro.kernels.attention.ops import paged_prefill_attention
+    else:
+        from repro.kernels.attention.ref import \
+            paged_prefill_attention_ref as paged_prefill_attention
+    tokens = batch["tokens"]
+    tables = batch["block_tables"]
+    start = batch["start"]
+    chunk_rows = batch["chunk_rows"]
+    last_index = batch["last_index"]
+    b, c = tokens.shape
+    ps = pages["k"].shape[2]
+    assert c % ps == 0, f"chunk width {c} not page-aligned (ps={ps})"
+    cp = c // ps
+    x = embed_lookup(params["embed"], tokens)
+    positions = start[:, None] + jnp.arange(c)[None, :]    # (B, C)
+    rot = int(cfg.head_dim * cfg.rope_fraction) if cfg.n_heads else 2
+    cos, sin = att.rope_angles(positions, max(rot, 2), cfg.rope_theta)
+    fam = cfg.family
+
+    def layer(x, lkv):
+        lp, kp, vp = lkv
+        h = rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = att.qkv(lp["attn"], h, cfg)
+        q = att.apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = att.apply_rope(k, cos, sin, cfg.rope_fraction)
+        # scatter the chunk's K/V as whole pages (shared pages and the
+        # tail of a partial chunk point at the null row)
+        kw = k.reshape(b, cp, ps, *k.shape[2:]).astype(kp.dtype)
+        vw = v.reshape(b, cp, ps, *v.shape[2:]).astype(vp.dtype)
+        kp = kp.at[chunk_rows].set(kw)
+        vp = vp.at[chunk_rows].set(vw)
+        o = paged_prefill_attention(q, kp, vp, tables, start,
+                                    window=cfg.sliding_window)
+        x = x + o.reshape(b, c, -1) @ lp["attn"]["wo"]
+        if fam == "moe":
+            hh = rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+            mo, _ = moe_mod.moe_apply(lp["moe"], hh, cfg, tp)
+            x = x + mo
+        else:
+            x = x + _mlp_block(lp, x, cfg)
+        return x, (kp, vp)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        layer, x, (params["layers"], pages["k"], pages["v"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    out = jax.lax.dynamic_index_in_dim(x, last_index, axis=1,
+                                       keepdims=False)
+    logits = logits_fn(params, out)
     return logits, dict(pages, k=k_new, v=v_new)

@@ -1,13 +1,14 @@
 """serving subpackage: paged KV cache + continuous-batching engines."""
 
-from repro.serving.engine import (Completion, DenseServingEngine,
+from repro.serving.engine import (ChunkedPagedServingEngine, Completion,
+                                  DenseServingEngine,
                                   PagedServingEngine, Request,
                                   ServingEngine, make_engine)
 from repro.serving.kvcache import (PagedKVCache, PageExhausted,
                                    PagePool, page_keys)
 
 __all__ = [
-    "Completion", "DenseServingEngine", "PagedServingEngine",
-    "Request", "ServingEngine", "make_engine", "PagedKVCache",
-    "PageExhausted", "PagePool", "page_keys",
+    "ChunkedPagedServingEngine", "Completion", "DenseServingEngine",
+    "PagedServingEngine", "Request", "ServingEngine", "make_engine",
+    "PagedKVCache", "PageExhausted", "PagePool", "page_keys",
 ]

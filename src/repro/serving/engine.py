@@ -1,24 +1,34 @@
-"""Continuous-batching serving engines: paged (AGAS pages) and dense.
+"""Continuous-batching serving engines: chunked, paged, and dense.
 
 The ParalleX reading of serving (DESIGN.md §4): each request is a
 first-class object whose completion is an LCO — `submit` returns a
 `core.lco.Future` that is set exactly once when the request finishes.
-Arriving requests are parcels that trigger a prefill task; decode is a
-dataflow chain per slot, and the engine packs ready slots into batched
-decode steps (the work-queue at token granularity).
+Arriving requests are parcels; decode is a dataflow chain per slot,
+and the engine packs ready slots into batched decode steps (the
+work-queue at token granularity).
 
-Two engines share that skeleton:
+Three engines share that skeleton:
 
-* `PagedServingEngine` (the default `ServingEngine`) — KV memory is a
-  pool of AGAS-named pages (serving/kvcache.py, DESIGN.md §4a).
-  Admission is gated on free *pages*, not free slots: a request enters
-  when the pool can hold its prefill (prefix-shared pages excluded)
-  plus one decode page of headroom.  When the pool runs dry mid-decode
-  the youngest request is preempted back to the queue (its pages freed,
-  its progress carried so re-admission resumes seamlessly).  Every slot
-  keeps its own position clock — there is no shared `len/cursor/abs`.
-  Per-step counters (queue depth, page occupancy, latencies) expose the
-  runtime's overheads in the spirit of the paper's Fig 9.
+* `ChunkedPagedServingEngine` (the default `ServingEngine`) — prefill
+  is no longer one-shot per request: a prompt is split into
+  page-size-aligned CHUNKS, each an independently schedulable task,
+  and every `step()` spends a token budget on a mix of pending prefill
+  chunks and the decode batch (decode-priority; chunks fill the
+  remainder, FCFS by admission order — DESIGN.md §4b).  Time-to-first-
+  token for short requests stops waiting behind long prompts, and the
+  decode batch never idles for a whole-prompt admission — the serving
+  rendering of the paper's Fig 3 granularity trade-off.
+
+* `PagedServingEngine` — the whole-prompt baseline over the same AGAS
+  page pool (serving/kvcache.py, DESIGN.md §4a): each admission runs
+  one bucketed prefill for the entire prompt before any decode
+  resumes.  Admission is gated on free *pages*, not free slots; when
+  the pool runs dry the youngest request is preempted back to the
+  queue (its pages freed, its progress carried so re-admission resumes
+  seamlessly).  Every slot keeps its own position clock — there is no
+  shared `len/cursor/abs`.  Per-step counters (queue depth, page
+  occupancy, TTFT / inter-token latencies) expose the runtime's
+  overheads in the spirit of the paper's Fig 9.
 
 * `DenseServingEngine` — the static-ownership baseline: a bulk
   `(slots, max_len)` cache with one shared position clock spliced via
@@ -28,8 +38,9 @@ Two engines share that skeleton:
 
 Design points that matter at scale and are implemented here:
 * fixed-shape decode batch (slot pool) -> one compiled decode step;
-* prefill runs per request at bucketed lengths (pad-to-bucket) to
-  bound compilation count;
+* whole-prompt prefill runs at bucketed lengths (pad-to-bucket) and
+  chunked prefill at one fixed chunk width, so compilation count stays
+  bounded either way;
 * slots free on EOS/length and refill from the queue (continuous
   batching);
 * per-slot sampling state (greedy or temperature), keyed by the
@@ -70,6 +81,19 @@ class Completion:
     prefill_s: float
     decode_s: float
     preemptions: int = 0
+    # submit -> first sampled token (survives preemption: the first
+    # token is only ever sampled once)
+    ttft_s: float = 0.0
+    # gaps between consecutive sampled tokens (inter-token latencies)
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+
+
+def _mean(xs) -> float:
+    return float(np.mean(xs)) if len(xs) else 0.0
+
+
+def _pct(xs, q: float) -> float:
+    return float(np.percentile(xs, q)) if len(xs) else 0.0
 
 
 class _EngineBase:
@@ -97,7 +121,9 @@ class _EngineBase:
         fut = Future()
         self._futures[req.rid] = fut
         self.queue.append({"req": req, "gen": [], "preempts": 0,
-                           "bucket": None})
+                           "bucket": None,
+                           "t_submit": time.perf_counter(),
+                           "ttft_s": None, "tok_t": []})
         return fut
 
     @staticmethod
@@ -163,13 +189,40 @@ class _EngineBase:
             fut.set_error(err)
 
     def _finish(self, st: dict) -> None:
+        tok_t = st.get("tok_t", [])
         comp = Completion(st["req"].rid, st["tokens"], st["prefill_s"],
                           time.perf_counter() - st["t0"],
-                          st.get("preempts", 0))
+                          st.get("preempts", 0),
+                          ttft_s=st.get("ttft_s") or 0.0,
+                          itl_s=[b - a for a, b in zip(tok_t, tok_t[1:])])
         self.completions.append(comp)
         fut = self._futures.pop(comp.rid, None)
         if fut is not None:
             fut.set(comp)
+
+    @staticmethod
+    def _latency_state(item: dict, now: float) -> dict:
+        """TTFT / inter-token bookkeeping threaded from a queue item
+        into a slot state (and back, across preemptions)."""
+        return {"t_submit": item.get("t_submit", now),
+                "ttft_s": item.get("ttft_s"),
+                "tok_t": list(item.get("tok_t", []))}
+
+    @staticmethod
+    def _first_token(st: dict, now: float) -> None:
+        if st["ttft_s"] is None:
+            st["ttft_s"] = now - st["t_submit"]
+        st["tok_t"].append(now)
+
+    @staticmethod
+    def _stopped(req: Request, tokens: List[int]) -> bool:
+        """EOS or length cap reached — checked after EVERY sampled
+        token, including the one prefill produces (a max_new_tokens=1
+        request must not enter the decode batch at all)."""
+        if req.eos_id is not None and tokens and \
+                tokens[-1] == req.eos_id:
+            return True
+        return len(tokens) >= req.max_new_tokens
 
     def step(self) -> int:
         raise NotImplementedError
@@ -217,13 +270,19 @@ class DenseServingEngine(_EngineBase):
             # splice this request's prefill cache into the slot pool
             self._splice_cache(slot, pcache, bucket)
             first = self._sample(logits[0], req, len(item["gen"]))
+            now = time.perf_counter()
             self.active[slot] = {
                 "req": req, "tokens": item["gen"] + [int(first)],
-                "prefill_s": time.perf_counter() - t0,
-                "t0": time.perf_counter(),
+                "prefill_s": now - t0,
+                "t0": now,
                 "pos": bucket,
                 "preempts": item["preempts"],
+                **self._latency_state(item, now),
             }
+            self._first_token(self.active[slot], now)
+            if self._stopped(req, self.active[slot]["tokens"]):
+                self._finish(self.active.pop(slot))
+                self.free_slots.append(slot)
 
     def _splice_cache(self, slot: int, pcache: dict, plen: int) -> None:
         def splice(pool, part):
@@ -277,12 +336,13 @@ class DenseServingEngine(_EngineBase):
         logits, self.cache = self._decode(self.params, self.cache,
                                           batch)
         done = []
+        now = time.perf_counter()
         for slot, st in self.active.items():
             req = st["req"]
             tok = self._sample(logits[slot], req, len(st["tokens"]))
             st["tokens"].append(tok)
-            if (req.eos_id is not None and tok == req.eos_id) or \
-                    len(st["tokens"]) >= req.max_new_tokens:
+            st["tok_t"].append(now)
+            if self._stopped(req, st["tokens"]):
                 done.append(slot)
         for slot in done:
             self._finish(self.active.pop(slot))
@@ -317,28 +377,48 @@ class PagedServingEngine(_EngineBase):
         self.counters: List[dict] = []         # per-step telemetry
 
     # -- page-gated admission -----------------------------------------
+    def _admission_layout(self, item: dict) -> Optional[tuple]:
+        """Rebuild the queue head's padded layout and screen out
+        requests that can never run.
+
+        Fresh requests pad to the bucket ladder; re-admissions after a
+        preemption reconstruct the ORIGINAL padded layout (same
+        left-pad count, same positions) extended by the generated
+        tokens, so the resumed request decodes exactly as if it had
+        never been preempted.  Returns (padded, real, need) where
+        `need` counts fresh prefill pages plus one decode page of
+        headroom, or None if the item was rejected (and popped)."""
+        req = item["req"]
+        prompt = self._queue_prompt(item)
+        if item["gen"]:
+            padded = self._pad_to(
+                prompt, item["bucket"] + len(item["gen"]))
+        else:
+            padded = self._padded_prompt(prompt)
+        real = len(padded)
+        if real > self.max_len:
+            self.queue.pop(0)
+            self._reject(item, ValueError(
+                f"request {req.rid}: padded prompt {real} "
+                f"exceeds max_len {self.max_len}"))
+            return None
+        need = self.kvc.pages_needed(padded) + 1
+        if need > self.kvc.pool.capacity:
+            self.queue.pop(0)
+            self._reject(item, RuntimeError(
+                f"request {req.rid} needs {need} pages but the "
+                f"pool holds {self.kvc.pool.capacity}"))
+            return None
+        return padded, real, need
+
     def _admit(self) -> None:
         while self.queue and self.free_slots:
             item = self.queue[0]
             req = item["req"]
-            prompt = self._queue_prompt(item)
-            if item["gen"]:
-                # re-admission after preemption: reconstruct the
-                # ORIGINAL padded layout (same left-pad count, same
-                # positions) extended by the generated tokens, so the
-                # resumed request decodes exactly as if it had never
-                # been preempted
-                padded = self._pad_to(
-                    prompt, item["bucket"] + len(item["gen"]))
-            else:
-                padded = self._padded_prompt(prompt)
-            real = len(padded)
-            if real > self.max_len:
-                self.queue.pop(0)
-                self._reject(item, ValueError(
-                    f"request {req.rid}: padded prompt {real} "
-                    f"exceeds max_len {self.max_len}"))
+            layout = self._admission_layout(item)
+            if layout is None:
                 continue
+            padded, real, need = layout
             # admit on PAGES, not slots: prefill pages (prefix-shared
             # ones are free), one decode page of headroom, plus a
             # watermark for active slots whose next write takes a page
@@ -346,13 +426,6 @@ class PagedServingEngine(_EngineBase):
             # preempted away in the very same step
             upcoming = sum(1 for s in self.active
                            if self.kvc.needs_alloc(s))
-            need = self.kvc.pages_needed(padded) + 1
-            if need > self.kvc.pool.capacity:
-                self.queue.pop(0)
-                self._reject(item, RuntimeError(
-                    f"request {req.rid} needs {need} pages but the "
-                    f"pool holds {self.kvc.pool.capacity}"))
-                continue
             if need + upcoming > self.kvc.pool.free_pages:
                 break                          # head-of-line blocking
             self.queue.pop(0)
@@ -372,14 +445,21 @@ class PagedServingEngine(_EngineBase):
                             pcache["k"][:, 0, :real],
                             pcache["v"][:, 0, :real])
             first = self._sample(logits[0], req, len(item["gen"]))
+            now = time.perf_counter()
             self.active[slot] = {
                 "req": req, "tokens": item["gen"] + [int(first)],
-                "prefill_s": time.perf_counter() - t0,
-                "t0": time.perf_counter(),
+                "prefill_s": now - t0,
+                "t0": now,
                 "seq": next(self._seq),
                 "preempts": item["preempts"],
                 "bucket": item["bucket"] if item["gen"] else real,
+                **self._latency_state(item, now),
             }
+            self._first_token(self.active[slot], now)
+            if self._stopped(req, self.active[slot]["tokens"]):
+                self._finish(self.active.pop(slot))
+                self.kvc.release(slot)
+                self.free_slots.append(slot)
 
     # -- preemption under page pressure -------------------------------
     def _preempt(self, slot: int) -> None:
@@ -393,16 +473,28 @@ class PagedServingEngine(_EngineBase):
         self.preemptions += 1
         self.queue.insert(0, {"req": st["req"], "gen": st["tokens"],
                               "preempts": st["preempts"] + 1,
-                              "bucket": st["bucket"]})
+                              "bucket": st["bucket"],
+                              "t_submit": st["t_submit"],
+                              "ttft_s": st.get("ttft_s"),
+                              "tok_t": st.get("tok_t", [])})
 
-    def _prepare_writes(self) -> None:
-        """Reserve every active slot's write page, preempting the
+    def _decode_slots(self) -> List[int]:
+        """Slots currently in the decode phase (every active slot for
+        the whole-prompt engine; the chunked engine overlays a prefill
+        phase whose slots ride the decode batch as masked passengers)."""
+        return [s for s in self.active
+                if self.active[s].get("phase", "decode") == "decode"]
+
+    def _prepare_writes(self, slots: Optional[List[int]] = None) -> None:
+        """Reserve every decoding slot's write page, preempting the
         youngest request (LIFO — the oldest keeps its pages, so the
         system always drains) until the pool fits.  A lone request the
         pool cannot hold is failed via its LCO, not the engine."""
         while True:
             try:
-                for slot in sorted(self.active,
+                todo = [s for s in slots if s in self.active] \
+                    if slots is not None else self._decode_slots()
+                for slot in sorted(todo,
                                    key=lambda s: self.active[s]["seq"]):
                     self.kvc.prepare_decode(slot)
                 return
@@ -422,6 +514,37 @@ class PagedServingEngine(_EngineBase):
                 self._preempt(victim)
 
     # -- the decode work-queue ----------------------------------------
+    def _decode_batch(self, slots: List[int]) -> List[int]:
+        """One compiled decode step for `slots`: assemble the batch,
+        sample each slot's next token, finish/release requests that hit
+        EOS or their length cap.  Returns the finished slots.  Shared
+        by the whole-prompt and chunked engines, so sampling and
+        completion bookkeeping can never diverge between them."""
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot in slots:
+            tokens[slot, 0] = self.active[slot]["tokens"][-1]
+        batch = {"tokens": jnp.asarray(tokens),
+                 **self.kvc.batch_inputs()}
+        logits, pages = self._decode(self.params, self.kvc.pool.pages,
+                                     batch)
+        self.kvc.pool.pages = pages
+        done: List[int] = []
+        now = time.perf_counter()
+        for slot in slots:
+            st = self.active[slot]
+            self.kvc.advance(slot)
+            req = st["req"]
+            tok = self._sample(logits[slot], req, len(st["tokens"]))
+            st["tokens"].append(tok)
+            st["tok_t"].append(now)
+            if self._stopped(req, st["tokens"]):
+                done.append(slot)
+        for slot in done:
+            self._finish(self.active.pop(slot))
+            self.kvc.release(slot)
+            self.free_slots.append(slot)
+        return done
+
     def step(self) -> int:
         """One batched decode step over all active slots."""
         self._admit()
@@ -438,27 +561,7 @@ class PagedServingEngine(_EngineBase):
         if not self.active:                    # lone request rejected
             return 0
         t0 = time.perf_counter()
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for slot, st in self.active.items():
-            tokens[slot, 0] = st["tokens"][-1]
-        batch = {"tokens": jnp.asarray(tokens),
-                 **self.kvc.batch_inputs()}
-        logits, pages = self._decode(self.params, self.kvc.pool.pages,
-                                     batch)
-        self.kvc.pool.pages = pages
-        done = []
-        for slot, st in self.active.items():
-            self.kvc.advance(slot)
-            req = st["req"]
-            tok = self._sample(logits[slot], req, len(st["tokens"]))
-            st["tokens"].append(tok)
-            if (req.eos_id is not None and tok == req.eos_id) or \
-                    len(st["tokens"]) >= req.max_new_tokens:
-                done.append(slot)
-        for slot in done:
-            self._finish(self.active.pop(slot))
-            self.kvc.release(slot)
-            self.free_slots.append(slot)
+        done = self._decode_batch(list(self.active))
         pool = self.kvc.pool
         self.counters.append({
             "t": time.perf_counter(),
@@ -472,35 +575,270 @@ class PagedServingEngine(_EngineBase):
         return len(self.active) + len(done)
 
     def stats(self) -> dict:
-        """Aggregate per-step counters (the Fig 9 overhead view)."""
+        """Aggregate per-step counters plus TTFT / inter-token latency
+        percentiles (the Fig 9 overhead view).  Safe to call at any
+        point in the engine's life — before the first completion every
+        aggregate degrades to 0.0 instead of np.mean's NaN-plus-
+        RuntimeWarning on an empty list."""
         c = self.counters
         pool = self.kvc.pool
+        ttfts = [x.ttft_s * 1e3 for x in self.completions
+                 if x.ttft_s > 0.0]
+        itls = [d * 1e3 for x in self.completions for d in x.itl_s]
         return {
             "steps": len(c),
             "peak_active": max((x["active"] for x in c), default=0),
             "peak_page_occupancy": max(
                 (x["page_occupancy"] for x in c), default=0.0),
-            "mean_decode_ms": float(np.mean(
-                [x["decode_ms"] for x in c])) if c else 0.0,
+            "mean_decode_ms": _mean([x["decode_ms"] for x in c]),
             "preemptions": self.preemptions,
             "page_allocs": pool.allocs,
             "page_shares": pool.shares,
             "cow_copies": pool.cow_copies,
-            "mean_prefill_ms": float(np.mean(
-                [x.prefill_s for x in self.completions])) * 1e3
-            if self.completions else 0.0,
+            "mean_prefill_ms": _mean(
+                [x.prefill_s for x in self.completions]) * 1e3,
+            # latency split the chunked scheduler is judged on:
+            # time-to-first-token vs steady-state inter-token gaps
+            "mean_ttft_ms": _mean(ttfts),
+            "ttft_p50_ms": _pct(ttfts, 50),
+            "ttft_p95_ms": _pct(ttfts, 95),
+            "mean_itl_ms": _mean(itls),
+            "itl_p50_ms": _pct(itls, 50),
+            "itl_p95_ms": _pct(itls, 95),
         }
 
 
-#: The serving engine: paged KV over AGAS pages.
-ServingEngine = PagedServingEngine
+class ChunkedPagedServingEngine(PagedServingEngine):
+    """Chunked prefill under a token-budget step scheduler.
+
+    The serving grain is a page-size-aligned CHUNK of a prompt
+    (DESIGN.md §4b): every `step()` spends at most `step_tokens`
+    tokens — one per decoding slot first (decode priority), pending
+    prefill chunks filling the remainder in admission order.  A long
+    admission therefore never stalls the decode batch for its whole
+    prefill, and a short prompt's first token stops waiting behind a
+    long prompt's.  Admission is gated on the FIRST chunk's pages
+    (plus headroom), not the whole prompt: later chunks allocate as
+    they run, and page exhaustion mid-prefill preempts LIFO exactly
+    like exhaustion mid-decode (the preempted request re-enters the
+    queue and re-prefills from scratch on re-admission — deterministic,
+    since an identical padded layout reproduces identical pages).
+    """
+
+    def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
+                 max_len: int = 512, prefill_buckets=(64, 128, 256),
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 step_tokens: Optional[int] = None):
+        super().__init__(params, cfg, slots=slots, max_len=max_len,
+                         prefill_buckets=prefill_buckets,
+                         page_size=page_size, n_pages=n_pages)
+        if chunk_size is None:
+            chunk_size = 2 * page_size
+        if chunk_size <= 0 or chunk_size % page_size:
+            raise ValueError(
+                f"chunk_size {chunk_size} must be a positive multiple "
+                f"of page_size {page_size}")
+        self.chunk_size = int(chunk_size)
+        # every decoding slot gets its token, and at least one full
+        # chunk always fits in the remainder-free case
+        self.step_tokens = int(step_tokens or (slots + chunk_size))
+        if self.step_tokens < self.chunk_size:
+            raise ValueError(
+                f"step_tokens {self.step_tokens} must cover at least "
+                f"one chunk of {self.chunk_size}")
+        # ONE compiled chunk step (fixed chunk width; the true last
+        # position and start offset are traced operands)
+        self._chunk_step = jax.jit(
+            lambda p, pages, toks, tables, start, rows, last:
+            T.prefill_chunk(p, pages, {
+                "tokens": toks, "block_tables": tables, "start": start,
+                "chunk_rows": rows, "last_index": last}, cfg),
+            donate_argnums=(1,))
+
+    # -- admission: gated on the first chunk, not the whole prompt ----
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            item = self.queue[0]
+            req = item["req"]
+            layout = self._admission_layout(item)
+            if layout is None:
+                continue
+            padded, real, _ = layout
+            # gate on the FIRST chunk plus one page of headroom (and
+            # the decode-write watermark); later chunks allocate as
+            # they are scheduled and preempt under pressure
+            first_end = min(self.chunk_size, real)
+            upcoming = sum(1 for s in self._decode_slots()
+                           if self.kvc.needs_alloc(s))
+            need = self.kvc.pages_needed_chunk(padded, 0, first_end) + 1
+            if need + upcoming > self.kvc.pool.free_pages:
+                break                          # head-of-line blocking
+            self.queue.pop(0)
+            slot = self.free_slots.pop(0)
+            now = time.perf_counter()
+            self.active[slot] = {
+                "req": req, "tokens": list(item["gen"]),
+                "phase": "prefill",
+                "padded": padded, "real": real, "pos": 0,
+                "prefill_s": 0.0,
+                "t0": now,                      # reset at first token
+                "seq": next(self._seq),
+                "preempts": item["preempts"],
+                "bucket": item["bucket"] if item["gen"] else real,
+                "n_gen0": len(item["gen"]),
+                **self._latency_state(item, now),
+            }
+
+    # -- one prefill chunk as a schedulable task ----------------------
+    def _run_chunk(self, slot: int, take: int) -> bool:
+        """Acquire pages for and run one chunk of `slot`'s prompt.
+        Returns False if the slot was preempted (or rejected) by page
+        exhaustion instead of advanced."""
+        st = self.active[slot]
+        start = st["pos"]
+        end = start + take
+        while True:
+            try:
+                rows = self.kvc.begin_chunk(slot, st["padded"],
+                                            start, end)
+                break
+            except PageExhausted:
+                if len(self.active) <= 1:
+                    self.active.pop(slot)
+                    self.kvc.release(slot)
+                    self.free_slots.append(slot)
+                    self._reject({"req": st["req"]}, RuntimeError(
+                        "page pool too small for request "
+                        f"{st['req'].rid}: {self.kvc.pool.capacity} "
+                        f"pages of {self.kvc.pool.page_size}"))
+                    return False
+                victim = max(self.active,
+                             key=lambda s: self.active[s]["seq"])
+                self._preempt(victim)
+                if victim == slot:
+                    return False
+        ps = self.kvc.pool.page_size
+        t0 = time.perf_counter()
+        toks = np.zeros(self.chunk_size, np.int32)
+        toks[:take] = st["padded"][start:end]
+        rows_arr = np.full(self.chunk_size // ps,
+                           self.kvc.pool.null_row, np.int32)
+        rows_arr[:len(rows)] = rows
+        logits, pages = self._chunk_step(
+            self.params, self.kvc.pool.pages,
+            jnp.asarray(toks[None]),
+            jnp.asarray(self.kvc.tables[slot][None]),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(rows_arr[None]),
+            jnp.int32(take - 1))
+        self.kvc.pool.pages = pages
+        st["pos"] = end
+        st["prefill_s"] += time.perf_counter() - t0
+        if end == st["real"]:
+            # final chunk: the prompt is resident — sample the first
+            # token and hand the slot to the decode batch
+            now = time.perf_counter()
+            st["phase"] = "decode"
+            st["t0"] = now
+            first = self._sample(logits[0], st["req"], st["n_gen0"])
+            st["tokens"].append(int(first))
+            self._first_token(st, now)
+            if self._stopped(st["req"], st["tokens"]):
+                self._finish(self.active.pop(slot))
+                self.kvc.release(slot)
+                self.free_slots.append(slot)
+        return True
+
+    # -- the token-budget step ----------------------------------------
+    def step(self) -> int:
+        """One budgeted step: every decoding slot gets its token, and
+        pending prefill chunks (FCFS by admission order) fill whatever
+        budget remains.  A prompt whose final chunk lands this step
+        samples its first token now but starts decoding next step, so
+        the step never exceeds its token budget."""
+        self._admit()
+        # truncate decoding requests whose next token has no cache room
+        for slot in [s for s in self._decode_slots()
+                     if self.kvc.lengths[s] >= self.max_len]:
+            self._finish(self.active.pop(slot))
+            self.kvc.release(slot)
+            self.free_slots.append(slot)
+        if not self.active:
+            return 0
+        # the decode reservation is taken at step start; a slot whose
+        # prefill completes THIS step joins the decode batch NEXT step,
+        # so prefill chunks + decode tokens never exceed step_tokens
+        decoding = self._decode_slots()
+        budget = self.step_tokens - len(decoding)
+        prefill_tok = 0
+        n_chunks = 0
+        ps = self.kvc.pool.page_size
+        for slot in sorted((s for s in self.active
+                            if self.active[s]["phase"] == "prefill"),
+                           key=lambda s: self.active[s]["seq"]):
+            if slot not in self.active:      # preempted by an earlier
+                continue                     # chunk's page pressure
+            st = self.active[slot]
+            take = min(self.chunk_size, st["real"] - st["pos"])
+            if take > budget:
+                # trim to the page-aligned piece the budget covers
+                take = (budget // ps) * ps
+            if take <= 0:
+                break                        # FCFS: no overtaking
+            if self._run_chunk(slot, take):
+                budget -= take
+                prefill_tok += take
+                n_chunks += 1
+        # the decode batch: prefilling slots ride along masked (their
+        # write row is the null page; their logits are discarded)
+        done: List[int] = []
+        decoding = [s for s in decoding if s in self.active]
+        if decoding:
+            self._prepare_writes(decoding)
+            decoding = [s for s in decoding if s in self.active]
+        # timer starts after write preparation, matching the
+        # whole-prompt engine so mean_decode_ms stays comparable
+        t0 = time.perf_counter()
+        if decoding:
+            done = self._decode_batch(decoding)
+        pool = self.kvc.pool
+        self.counters.append({
+            "t": time.perf_counter(),
+            "queue_depth": len(self.queue),
+            "active": len(self.active) + len(done),
+            "pages_used": pool.used_pages,
+            "page_occupancy": pool.occupancy(),
+            "preemptions": self.preemptions,
+            "decode_ms": (time.perf_counter() - t0) * 1e3,
+            "prefill_chunks": n_chunks,
+            "prefill_chunk_tokens": prefill_tok,
+            "decode_tokens": len(decoding),
+            "budget_tokens": self.step_tokens,
+        })
+        return len(self.active) + len(done)
 
 
-def make_engine(params: Any, cfg: ArchConfig, **kwargs) -> _EngineBase:
-    """Paged engine for attention-cache families, dense fallback for
-    families whose recurrent state has no paged layout (ssm/hybrid/vlm)."""
-    if cfg.family in PAGED_FAMILIES:
+#: The serving engine: chunked prefill over AGAS pages.
+ServingEngine = ChunkedPagedServingEngine
+
+
+def make_engine(params: Any, cfg: ArchConfig, *,
+                engine: str = "chunked", **kwargs) -> _EngineBase:
+    """Engine factory.  `engine` selects the scheduler for
+    attention-cache families: "chunked" (default — chunked prefill
+    under a token budget), "paged" (whole-prompt prefill over AGAS
+    pages), or "dense" (static slot-pool baseline).  Families whose
+    recurrent state has no paged layout (ssm/hybrid/vlm) always fall
+    back to the dense engine."""
+    if engine not in ("chunked", "paged", "dense"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if cfg.family in PAGED_FAMILIES and engine != "dense":
+        if engine == "chunked":
+            return ChunkedPagedServingEngine(params, cfg, **kwargs)
+        kwargs.pop("chunk_size", None)
+        kwargs.pop("step_tokens", None)
         return PagedServingEngine(params, cfg, **kwargs)
-    kwargs.pop("page_size", None)
-    kwargs.pop("n_pages", None)
+    for k in ("page_size", "n_pages", "chunk_size", "step_tokens"):
+        kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

@@ -22,7 +22,11 @@ Three layers live here:
 * `PagedKVCache` — the per-engine view: one block table per decode
   slot mapping token position ``p`` to the physical row of page
   ``p // page_size``, plus **per-slot** position counters (replacing
-  the dense cache's shared ``len/cursor/abs`` clock).
+  the dense cache's shared ``len/cursor/abs`` clock).  Prompts attach
+  either whole (`attach`) or one page-aligned chunk at a time
+  (`begin_chunk`, DESIGN.md §4b) — the prefix hash-chain is computed
+  over the full prefix either way, so the two paths share pages with
+  each other.
 
 * `PageExhausted` — the backpressure signal: raised when the pool has
   no free page; the serving engine reacts by preempting a request back
@@ -156,7 +160,10 @@ class PagePool:
 
     def register_prefix(self, key: Tuple[bytes, int],
                         addr: GlobalAddress) -> None:
-        if key not in self._prefix:
+        # one key per page: a second registration (either direction)
+        # is a no-op, so freeing a page can never leave a stale key
+        # behind in the prefix index
+        if key not in self._prefix and addr.gid not in self._key_of:
             self._prefix[key] = addr
             self._key_of[addr.gid] = key
 
@@ -185,6 +192,10 @@ class PagePool:
 class _SlotState:
     addrs: List[GlobalAddress]
     length: int                      # tokens stored = abs position clock
+    # running blake2b prefix chain for chunked prefill: hashes exactly
+    # the tokens already resident, so each chunk hashes only its own
+    # tokens instead of re-walking the prefix (None = not chunking)
+    chain: Optional[Any] = None
 
 
 class PagedKVCache:
@@ -218,6 +229,20 @@ class PagedKVCache:
         return sum(1 for key in page_keys(padded_tokens, ps)
                    if self.pool.lookup_prefix(key) is None)
 
+    def pages_needed_chunk(self, padded_tokens: np.ndarray,
+                           start: int, end: int) -> int:
+        """Fresh pages one chunk [start, end) would allocate.
+
+        The chain keys are computed over the full prefix up to `end`,
+        so a chunk boundary never changes a page's identity: chunked
+        and whole-prompt prefills of the same padded prompt hash to
+        the same pages (prefix sharing works across the two paths).
+        """
+        ps = self.pool.page_size
+        keys = page_keys(padded_tokens[:end], ps)[start // ps:]
+        return sum(1 for key in keys
+                   if self.pool.lookup_prefix(key) is None)
+
     # -- prefill attach ------------------------------------------------
     def attach(self, slot: int, padded_tokens: np.ndarray,
                k, v) -> None:
@@ -238,7 +263,7 @@ class PagedKVCache:
         acquired: List[GlobalAddress] = []
         fresh: List[int] = []               # page indices to write
         try:
-            for i, (key, fill) in enumerate(keys):
+            for i, key in enumerate(keys):
                 shared = self.pool.lookup_prefix(key)
                 if shared is not None:
                     self.pool.incref(shared)
@@ -270,6 +295,78 @@ class PagedKVCache:
         self.lengths[slot] = s
         for i, a in enumerate(acquired):
             self.tables[slot, i] = self.pool.row(a)
+
+    # -- chunked prefill (DESIGN.md §4b) ------------------------------
+    def begin_chunk(self, slot: int, padded_tokens: np.ndarray,
+                    start: int, end: int) -> List[int]:
+        """Acquire the pages covering chunk [start, end) of a chunked
+        prefill and install them in `slot`'s block table.
+
+        `start` must be page-aligned and equal the slot's resident
+        length (chunks arrive in order); `end` is page-aligned except
+        on the prompt's final chunk, which may leave the last page
+        partially filled — the slot holds that partial page between
+        the chunk and its first decode write.  Prefix-shared pages are
+        reused by refcount.  Returns one physical write row per page
+        of the chunk, with the pool's null row substituted for shared
+        pages so the compiled scatter cannot clobber shared content.
+        Atomic under PageExhausted: either every page of the chunk is
+        acquired or none (the caller preempts a victim and retries).
+        """
+        ps = self.pool.page_size
+        st = self._state[slot]
+        if start % ps:
+            raise ValueError(f"chunk start {start} not page-aligned")
+        if start != st.length:
+            raise ValueError(
+                f"slot {slot}: chunk starts at {start} but {st.length} "
+                f"tokens are resident")
+        if end > self.max_len:
+            raise ValueError(f"chunk end {end} exceeds {self.max_len}")
+        # extend the slot's running prefix chain (committed only on
+        # success, so a PageExhausted retry re-hashes just this chunk);
+        # digests match page_keys over the whole prompt exactly —
+        # update() chunking never changes a blake2b digest
+        if st.chain is not None:
+            chain = st.chain.copy()
+        else:
+            chain = hashlib.blake2b(digest_size=16)
+            if start:                # resident tokens came via attach()
+                chain.update(np.asarray(padded_tokens[:start],
+                                        np.int32).tobytes())
+        keys: List[Tuple[bytes, int]] = []
+        for pstart in range(start, end, ps):
+            span = np.asarray(padded_tokens[pstart:min(pstart + ps, end)],
+                              np.int32)
+            chain.update(span.tobytes())
+            keys.append((chain.digest(), len(span)))
+        acquired: List[GlobalAddress] = []
+        rows: List[int] = []
+        try:
+            for key in keys:
+                shared = self.pool.lookup_prefix(key)
+                if shared is not None:
+                    self.pool.incref(shared)
+                    self.pool.shares += 1
+                    acquired.append(shared)
+                    rows.append(self.pool.null_row)
+                else:
+                    addr = self.pool.alloc()
+                    self.pool.register_prefix(key, addr)
+                    acquired.append(addr)
+                    rows.append(self.pool.row(addr))
+        except PageExhausted:
+            for a in acquired:
+                self.pool.decref(a)
+            raise
+        base = start // ps
+        for i, a in enumerate(acquired):
+            st.addrs.append(a)
+            self.tables[slot, base + i] = self.pool.row(a)
+        st.chain = chain
+        st.length = end
+        self.lengths[slot] = end
+        return rows
 
     # -- decode-step bookkeeping --------------------------------------
     def prepare_decode(self, slot: int) -> None:
@@ -325,6 +422,7 @@ class PagedKVCache:
             self.pool.decref(a)
         st.addrs = []
         st.length = 0
+        st.chain = None
         null = self.pool.null_row
         self.tables[slot, :] = null
         self.lengths[slot] = 0

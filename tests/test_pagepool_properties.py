@@ -1,0 +1,146 @@
+"""Hypothesis property tests for the AGAS page allocator.
+
+Random interleaved alloc / incref / decref / COW-fork /
+prefix-register sequences must preserve the pool invariants:
+
+* refcounts are never negative (a page with refcount 0 is freed and
+  forgotten, never seen at -1);
+* ``free_pages + used_pages == n_pages`` at every step;
+* a prefix-shared page is never written in place — a divergent append
+  COW-forks onto a fresh page and the original's content survives;
+* released physical rows are reusable by later allocs.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.serving.kvcache import PageExhausted, PagePool
+
+N_PAGES = 5
+PAGE_SIZE = 4
+
+# op codes: (kind, param) — param picks a held page / prefix key
+OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "incref", "decref", "cow",
+                               "register", "share"]),
+              st.integers(0, 7)),
+    min_size=1, max_size=60)
+
+
+def _stamp(pool, row, value):
+    """Write a recognisable constant into one physical page row."""
+    shape = pool.pages["k"].shape              # (L, N, ps, KV, D)
+    span = jnp.full((shape[0], 1) + shape[2:], float(value),
+                    pool.pages["k"].dtype)
+    pool.write_pages([row], span, span)
+
+
+def _content(pool, row):
+    return float(np.asarray(pool.pages["k"][0, row, 0, 0, 0]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=OPS)
+def test_pool_invariants_under_random_interleaving(ops):
+    cfg = configs.get_reduced("yi-6b")
+    pool = PagePool(cfg, n_pages=N_PAGES, page_size=PAGE_SIZE)
+    held = []                   # (addr, stamp) pairs we hold a ref on
+    refs = {}                   # gid -> refcount we believe it has
+    stamps = {}                 # gid -> content stamped at alloc
+    next_stamp = 1
+    next_key = 0
+
+    def check_invariants():
+        assert pool.free_pages + pool.used_pages == pool.capacity
+        assert 0 <= pool.free_pages <= pool.capacity
+        for addr, _ in held:
+            assert pool.refcount(addr) >= 1
+            assert pool.refcount(addr) == refs[addr.gid]
+            assert 0 <= pool.row(addr) < pool.capacity
+
+    for kind, param in ops:
+        if kind == "alloc":
+            try:
+                addr = pool.alloc()
+            except PageExhausted:
+                assert pool.free_pages == 0
+                continue
+            _stamp(pool, pool.row(addr), next_stamp)
+            stamps[addr.gid] = next_stamp
+            next_stamp += 1
+            held.append((addr, stamps[addr.gid]))
+            refs[addr.gid] = 1
+        elif kind == "incref" and held:
+            addr, s = held[param % len(held)]
+            pool.incref(addr)
+            refs[addr.gid] += 1
+            held.append((addr, s))
+        elif kind == "decref" and held:
+            addr, _ = held.pop(param % len(held))
+            pool.decref(addr)
+            refs[addr.gid] -= 1
+            if refs[addr.gid] == 0:
+                del refs[addr.gid]
+                stamps.pop(addr.gid, None)
+        elif kind == "cow" and held:
+            # divergent append into a shared page: fork, never write
+            # in place
+            addr, s = held[param % len(held)]
+            if pool.refcount(addr) > 1:
+                try:
+                    fresh = pool.alloc()
+                except PageExhausted:
+                    assert pool.free_pages == 0
+                    continue
+                pool.copy_page(pool.row(addr), pool.row(fresh))
+                # the clone carries the stamp; the original survives
+                assert _content(pool, pool.row(fresh)) == s
+                assert _content(pool, pool.row(addr)) == s
+                idx = next(i for i, (a, _) in enumerate(held)
+                           if a.gid == addr.gid)
+                held[idx] = (fresh, s)
+                stamps[fresh.gid] = s
+                refs[fresh.gid] = 1
+                pool.decref(addr)
+                refs[addr.gid] -= 1
+        elif kind == "register" and held:
+            addr, _ = held[param % len(held)]
+            pool.register_prefix((b"k%d" % next_key, PAGE_SIZE), addr)
+            next_key += 1
+        elif kind == "share" and next_key:
+            key = (b"k%d" % (param % next_key), PAGE_SIZE)
+            addr = pool.lookup_prefix(key)
+            if addr is not None:
+                # a prefix hit reuses the page by refcount: its stamp
+                # is exactly what the registering owner wrote (the
+                # page was never rewritten)
+                assert _content(pool, pool.row(addr)) \
+                    == stamps[addr.gid]
+                pool.incref(addr)
+                refs[addr.gid] += 1
+                held.append((addr, stamps[addr.gid]))
+        check_invariants()
+
+    # every page we still hold has its original content (prefix-shared
+    # pages were never written in place)
+    for addr, s in held:
+        assert _content(pool, pool.row(addr)) == s
+
+    # released addresses are reusable: drain and refill the pool
+    for addr, _ in held:
+        pool.decref(addr)
+    assert pool.used_pages == 0 and pool.free_pages == pool.capacity
+    again = [pool.alloc() for _ in range(pool.capacity)]
+    assert len({pool.row(a) for a in again}) == pool.capacity
+    with pytest.raises(PageExhausted):
+        pool.alloc()
+    for a in again:
+        pool.decref(a)
+    assert pool.free_pages == pool.capacity
