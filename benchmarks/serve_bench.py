@@ -9,12 +9,20 @@ Two comparisons, each on the trace it is valid for:
   measured inside its own validity envelope.  At equal peak KV bytes
   the paged engine runs more concurrent requests, because short
   requests only hold the pages they touched.
-* whole-prompt vs chunked prefill (this PR, DESIGN.md §4b): a mixed
-  short/long trace with the long prompts queued FIRST — the
-  head-of-line shape chunked prefill exists to break.  At EQUAL page
-  budget, splitting prefill into page-aligned chunks under a per-step
-  token budget must hold p50 time-to-first-token strictly below the
-  whole-prompt engine at a total-throughput cost within 10%.
+* whole-prompt vs chunked prefill (DESIGN.md §4b): a mixed short/long
+  trace with the long prompts queued FIRST — the head-of-line shape
+  chunked prefill exists to break.  At EQUAL page budget, splitting
+  prefill into page-aligned chunks under a per-step token budget must
+  hold p50 time-to-first-token strictly below the whole-prompt engine
+  at a total-throughput cost within 10%.
+
+``--kv-shards N`` additionally serves the mixed trace from a pool
+sharded over N AGAS localities (DESIGN.md §4c) — device-backed when
+the runtime has one device per shard (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` like
+tests/test_distributed.py), simulated otherwise — with a forced
+mid-trace page migration, and asserts the greedy outputs are
+token-identical to the single-locality chunked engine.
 
 Engines are warmed up (prefill buckets, the chunk step, and the decode
 step compiled) on a throwaway trace before timing, so the latency
@@ -117,7 +125,43 @@ def _eng_stats(st, slots, tok, wall):
             "itl_p95_ms": st["itl_p95_ms"]}
 
 
-def run(verbose=True, out_path=None, smoke=False):
+def _serve_sharded(params, cfg, kw_mixed, warm_lens, mixed, kv_shards,
+                   baseline_tokens):
+    """Mixed trace over a kv_shards-locality pool + a forced mid-trace
+    migration; greedy outputs must match the single-locality engine
+    token for token (the AGAS name-stability promise, end to end)."""
+    from repro.distributed.sharding import kv_pool_mesh
+    from repro.serving.engine import make_engine
+
+    mesh = kv_pool_mesh(kv_shards)
+    eng = make_engine(params, cfg, engine="chunked", chunk_size=CHUNK,
+                      step_tokens=STEP_TOKENS, kv_shards=kv_shards,
+                      mesh=mesh, **kw_mixed)
+    _warmup(eng, cfg, warm_lens)
+    eng.kvc.pool.page_migrations = 0
+    for r in mixed:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    for _ in range(4):                  # into the trace, then force a
+        eng.step()                      # mid-trace migration
+    eng.force_migrate()
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    new_tokens = sum(len(c.tokens) for c in eng.completions)
+    st = eng.stats()
+    toks = {c.rid: c.tokens for c in eng.completions}
+    assert toks == baseline_tokens, (
+        f"kv_shards={kv_shards} outputs diverge from the "
+        "single-locality engine")
+    out = _eng_stats(st, eng.slots, new_tokens, dt)
+    out.update(kv_shards=kv_shards,
+               backing="mesh" if mesh is not None else "simulated",
+               shard_occupancy=st["shard_occupancy"],
+               page_migrations=st["page_migrations"])
+    return out
+
+
+def run(verbose=True, out_path=None, smoke=False, kv_shards=0):
     import jax
 
     import repro.configs as configs
@@ -185,6 +229,22 @@ def run(verbose=True, out_path=None, smoke=False):
         "chunked": _eng_stats(cst, SLOTS_PAGED, chunked_tok,
                               chunked_s),
     }
+
+    # -- sharded pool on the mixed trace (DESIGN.md §4c) --------------
+    if kv_shards > 1:
+        baseline = {c.rid: c.tokens for c in chunked.completions}
+        sh = _serve_sharded(params, cfg, kw_mixed, warm_lens, mixed,
+                            kv_shards, baseline)
+        result["mixed_trace"]["sharded"] = sh
+        if verbose:
+            occ = ", ".join(f"{o:.2f}" for o in sh["shard_occupancy"])
+            print(f"# serve_bench sharded {sh['tok_s']:8.1f} tok/s "
+                  f"(mixed, {kv_shards} shards, {sh['backing']}) "
+                  f"occ=[{occ}] migrations={sh['page_migrations']} "
+                  "token-identical to single-locality")
+        emit("serve_sharded_tok_s", sh["tok_s"], "tok_per_s")
+        emit("serve_sharded_page_migrations", sh["page_migrations"],
+             f"kv_shards_{kv_shards}")
     if verbose:
         print(f"# serve_bench dense   {dense_tok / dense_s:8.1f} tok/s "
               f"(short trace, peak_active={SLOTS_DENSE})")
@@ -223,5 +283,10 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny traces (CI): exercises all three engines"
                          " without asserting the latency split")
+    ap.add_argument("--kv-shards", type=int, default=0,
+                    help="also serve the mixed trace from a pool "
+                         "sharded over N AGAS localities (with a "
+                         "forced migration) and assert token parity "
+                         "with the single-locality engine")
     args = ap.parse_args()
-    run(out_path=args.out, smoke=args.smoke)
+    run(out_path=args.out, smoke=args.smoke, kv_shards=args.kv_shards)

@@ -104,6 +104,21 @@ class AGAS:
     def residents(self, locality: int) -> set:
         return set(self._residents[locality])
 
+    def free_count(self, locality: int) -> int:
+        """Free pool slots on one locality (the allocator's load signal)."""
+        return len(self._free[locality])
+
+    def least_loaded(self) -> int:
+        """Locality with the most free slots (ties -> lowest id).
+
+        The locality-aware allocation policy: new objects land where
+        capacity is, which keeps the per-locality pools balanced without
+        a central planner (the HPX local-first/least-loaded placement
+        the sharded KV page pool uses).
+        """
+        return max(range(len(self.domain)),
+                   key=lambda l: (self.free_count(l), -l))
+
     # -- migration -----------------------------------------------------------
     def migrate(self, addr: GlobalAddress, new_locality: int) -> Tuple[int, int]:
         """Move an object; its global name is unchanged (the AGAS promise).

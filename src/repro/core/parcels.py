@@ -232,6 +232,24 @@ def _lower_moves(recs, n_loc) -> HaloLowering:
                         n_parcels=len(recs))
 
 
+def plan_move_arrays(plan: MigrationPlan
+                     ) -> Tuple[np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray]:
+    """(src_loc, src_slot, dst_loc, dst_slot) int32 arrays of a plan.
+
+    This is the single-device lowering of the plan's ppermute legs:
+    applied as ONE gather-before-scatter permutation
+    (``arr.at[:, dst_loc, dst_slot].set(arr[:, src_loc, src_slot])``),
+    every payload is read from the pre-plan array before any
+    destination is written, so the move order inside the legs cannot
+    matter — exactly the semantics the legged ppermute execution has
+    when each leg gathers from a snapshot of the source pool.
+    """
+    moves = np.array([m[1:] for m in plan.moves],
+                     np.int32).reshape(-1, 4)
+    return moves[:, 0], moves[:, 1], moves[:, 2], moves[:, 3]
+
+
 def parcel_traffic_bytes(lowering: HaloLowering, payload_bytes: int) -> dict:
     """Traffic accounting for the roofline collective term."""
     inter = sum(

@@ -213,6 +213,38 @@ def cache_shardings(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh,
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 
 
+def page_pool_pspec(kv_axis: str = "kv") -> P:
+    """PartitionSpec for the sharded KV page arrays (DESIGN.md §4c):
+    (L, n_shards, rows_per_shard, ps, KV, D) with the locality axis
+    over the `kv_axis` mesh axis, everything else replicated."""
+    return P(None, kv_axis, None, None, None, None)
+
+
+def page_pool_shardings(mesh: Mesh, kv_axis: str = "kv"
+                        ) -> NamedSharding:
+    """NamedSharding placing one page-pool locality per device along
+    the `kv_axis` mesh axis — the device-backed rendering of the AGAS
+    LocalityDomain the serving allocator speaks."""
+    return NamedSharding(mesh, page_pool_pspec(kv_axis))
+
+
+def kv_pool_mesh(n_shards: int, kv_axis: str = "kv"):
+    """Mesh with a trailing `kv_axis` of size n_shards, or None.
+
+    Returns None when the runtime cannot back one locality per device
+    (single shard, or the device count does not divide) — the pool
+    then falls back to simulated localities on one device, which is
+    bit-identical in results and lets the same engine config run in
+    unit tests and on real meshes.
+    """
+    import jax
+    nd = jax.device_count()
+    if n_shards <= 1 or nd < n_shards or nd % n_shards:
+        return None
+    from repro.distributed.compat import make_mesh
+    return make_mesh((nd // n_shards, n_shards), ("data", kv_axis))
+
+
 def constrain(x, mesh: Mesh, *spec):
     """with_sharding_constraint helper tolerant of absent axes."""
     spec = tuple(s if (s is None or

@@ -50,9 +50,11 @@ def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                     positions: jnp.ndarray, *,
                     window: int = 0) -> jnp.ndarray:
     """q: (B, 1, H, D); k/v_pages: (N, ps, KV, D) (GQA without
-    repetition); block_tables: (B, P) physical page rows; positions:
-    (B,) per-slot absolute position of the token being decoded.
-    Same contract as kernels.attention.ref.paged_attention_ref."""
+    repetition) or (S, R, ps, KV, D) for a locality-sharded pool;
+    block_tables: (B, P) physical page rows (``locality * R + slot``
+    encoded when sharded); positions: (B,) per-slot absolute position
+    of the token being decoded.  Same contract as
+    kernels.attention.ref.paged_attention_ref."""
     out = paged_attention_bhd(
         q[:, 0], k_pages, v_pages, block_tables, positions,
         window=window, interpret=_interpret_default())
@@ -66,9 +68,11 @@ def paged_prefill_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                             start: jnp.ndarray, *,
                             window: int = 0) -> jnp.ndarray:
     """q: (B, T, H, D) chunk queries; k/v_pages: (N, ps, KV, D) (GQA
-    without repetition); block_tables: (B, P) physical page rows;
-    start: (B,) absolute position of each chunk's first query.  Same
-    contract as kernels.attention.ref.paged_prefill_attention_ref."""
+    without repetition) or (S, R, ps, KV, D) for a locality-sharded
+    pool; block_tables: (B, P) physical page rows (``locality * R +
+    slot`` encoded when sharded); start: (B,) absolute position of
+    each chunk's first query.  Same contract as
+    kernels.attention.ref.paged_prefill_attention_ref."""
     return paged_prefill_attention_btd(
         q, k_pages, v_pages, block_tables, start, window=window,
         interpret=_interpret_default())

@@ -44,7 +44,8 @@ NEG_INF = -1.0e30
 
 
 def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, ps, n_pages, window, scale):
+            acc_ref, m_ref, l_ref, *, ps, n_pages, window, scale,
+            sharded=False):
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -63,8 +64,10 @@ def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(live)
     def _body():
         q = q_ref[0]                       # (1, D)
-        k = k_ref[0, :, 0]                 # (ps, D)
-        v = v_ref[0, :, 0]
+        # sharded pools DMA a (1, 1, ps, 1, D) block (locality axis
+        # resolved by the index map); flat pools a (1, ps, 1, D) one
+        k = k_ref[0, 0, :, 0] if sharded else k_ref[0, :, 0]   # (ps, D)
+        v = v_ref[0, 0, :, 0] if sharded else v_ref[0, :, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (1, ps)
@@ -96,20 +99,32 @@ def paged_attention_bhd(q: jnp.ndarray, k_pages: jnp.ndarray,
                         positions: jnp.ndarray, *,
                         window: int = 0,
                         interpret: bool = True) -> jnp.ndarray:
-    """q: (B, H, D); k/v_pages: (N, ps, KV, D); block_tables: (B, P)
-    int32 physical rows; positions: (B,) int32 per-slot clocks.
-    Returns (B, H, D)."""
+    """q: (B, H, D); k/v_pages: (N, ps, KV, D) — or (S, R, ps, KV, D)
+    for a locality-sharded pool, where block-table rows encode
+    ``locality * R + slot`` and the index map performs the AGAS
+    (locality, slot) decode; block_tables: (B, P) int32 physical rows;
+    positions: (B,) int32 per-slot clocks.  Returns (B, H, D)."""
     b, h, d = q.shape
-    _, ps, kvh, _ = k_pages.shape
+    sharded = k_pages.ndim == 5
+    ps, kvh = k_pages.shape[-3], k_pages.shape[-2]
     n_rep = h // kvh
     n_tables = block_tables.shape[1]
     kern = functools.partial(
         _kernel, ps=ps, n_pages=n_tables, window=window,
-        scale=d ** -0.5)
+        scale=d ** -0.5, sharded=sharded)
 
     # index maps see the scalar-prefetch refs appended to grid indices
-    def kv_map(bi, hi, pi, bt, pos):
-        return (bt[bi, pi], 0, hi // n_rep, 0)
+    if sharded:
+        rps = k_pages.shape[1]             # rows per shard
+
+        def kv_map(bi, hi, pi, bt, pos):
+            row = bt[bi, pi]
+            return (row // rps, row % rps, 0, hi // n_rep, 0)
+        kv_spec = pl.BlockSpec((1, 1, ps, 1, d), kv_map)
+    else:
+        def kv_map(bi, hi, pi, bt, pos):
+            return (bt[bi, pi], 0, hi // n_rep, 0)
+        kv_spec = pl.BlockSpec((1, ps, 1, d), kv_map)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -117,8 +132,8 @@ def paged_attention_bhd(q: jnp.ndarray, k_pages: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((1, 1, d), lambda bi, hi, pi, bt, pos:
                          (bi, hi, 0)),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
+            kv_spec,
+            kv_spec,
         ],
         out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi, pi, bt, pos:
                                (bi, hi, 0)),
@@ -139,7 +154,7 @@ def paged_attention_bhd(q: jnp.ndarray, k_pages: jnp.ndarray,
 
 def _prefill_kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
                     acc_ref, m_ref, l_ref, *, t, ps, n_pages, window,
-                    scale):
+                    scale, sharded=False):
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -161,8 +176,8 @@ def _prefill_kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(live)
     def _body():
         q = q_ref[0, :, 0]                 # (T, D)
-        k = k_ref[0, :, 0]                 # (ps, D)
-        v = v_ref[0, :, 0]
+        k = k_ref[0, 0, :, 0] if sharded else k_ref[0, :, 0]   # (ps, D)
+        v = v_ref[0, 0, :, 0] if sharded else v_ref[0, :, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (T, ps)
@@ -197,23 +212,35 @@ def paged_prefill_attention_btd(q: jnp.ndarray, k_pages: jnp.ndarray,
                                 interpret: bool = True) -> jnp.ndarray:
     """Chunked-prefill attention over block tables.
 
-    q: (B, T, H, D) chunk queries; k/v_pages: (N, ps, KV, D);
-    block_tables: (B, P) int32 physical rows; start: (B,) int32
-    absolute position of q[:, 0].  The chunk's own K/V must already be
-    written into its pages; query t attends keys at positions
-    <= start + t (and within the sliding window when set).
-    Returns (B, T, H, D).
+    q: (B, T, H, D) chunk queries; k/v_pages: (N, ps, KV, D) — or
+    (S, R, ps, KV, D) for a locality-sharded pool with
+    ``locality * R + slot`` row encoding (the AGAS decode lives in the
+    index map, exactly as in the decode kernel); block_tables: (B, P)
+    int32 physical rows; start: (B,) int32 absolute position of
+    q[:, 0].  The chunk's own K/V must already be written into its
+    pages; query t attends keys at positions <= start + t (and within
+    the sliding window when set).  Returns (B, T, H, D).
     """
     b, t, h, d = q.shape
-    _, ps, kvh, _ = k_pages.shape
+    sharded = k_pages.ndim == 5
+    ps, kvh = k_pages.shape[-3], k_pages.shape[-2]
     n_rep = h // kvh
     n_tables = block_tables.shape[1]
     kern = functools.partial(
         _prefill_kernel, t=t, ps=ps, n_pages=n_tables, window=window,
-        scale=d ** -0.5)
+        scale=d ** -0.5, sharded=sharded)
 
-    def kv_map(bi, hi, pi, bt, st):
-        return (bt[bi, pi], 0, hi // n_rep, 0)
+    if sharded:
+        rps = k_pages.shape[1]             # rows per shard
+
+        def kv_map(bi, hi, pi, bt, st):
+            row = bt[bi, pi]
+            return (row // rps, row % rps, 0, hi // n_rep, 0)
+        kv_spec = pl.BlockSpec((1, 1, ps, 1, d), kv_map)
+    else:
+        def kv_map(bi, hi, pi, bt, st):
+            return (bt[bi, pi], 0, hi // n_rep, 0)
+        kv_spec = pl.BlockSpec((1, ps, 1, d), kv_map)
 
     def q_map(bi, hi, pi, bt, st):
         return (bi, 0, hi, 0)
@@ -223,8 +250,8 @@ def paged_prefill_attention_btd(q: jnp.ndarray, k_pages: jnp.ndarray,
         grid=(b, h, n_tables),
         in_specs=[
             pl.BlockSpec((1, t, 1, d), q_map),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
-            pl.BlockSpec((1, ps, 1, d), kv_map),
+            kv_spec,
+            kv_spec,
         ],
         out_specs=pl.BlockSpec((1, t, 1, d), q_map),
         scratch_shapes=[

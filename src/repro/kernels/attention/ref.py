@@ -23,6 +23,26 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
                      chunk_k=min(128, k.shape[1]))
 
 
+def _gather_pages(pages: jnp.ndarray, block_tables: jnp.ndarray,
+                  b: int, kvh: int, d: int) -> jnp.ndarray:
+    """Resolve block-table rows to page contents: (B, P*ps, KV, D).
+
+    Flat pool: pages (N, ps, KV, D), rows index axis 0 directly.
+    Sharded pool (DESIGN.md §4c): pages (S, R, ps, KV, D) — one AGAS
+    locality per leading-axis shard — and each row encodes
+    ``locality * R + slot``, so the gather decodes (locality, slot)
+    and reads the page on the shard that owns it (under a mesh the
+    locality axis is sharded over "kv" and GSPMD lowers the cross-
+    shard reads to collectives).
+    """
+    if pages.ndim == 5:
+        rps = pages.shape[1]
+        out = pages[block_tables // rps, block_tables % rps]
+    else:
+        out = pages[block_tables]
+    return out.reshape(b, -1, kvh, d)
+
+
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray,
                         block_tables: jnp.ndarray,
@@ -32,7 +52,8 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     q:            (B, 1, H, D) query for the token being decoded.
     k/v_pages:    (N, ps, KV, D) page pool rows (N includes the null
-                  row idle slots point at).
+                  row idle slots point at), or (S, R, ps, KV, D) for a
+                  locality-sharded pool (see _gather_pages).
     block_tables: (B, P) int32 physical page rows per slot; entries
                   past the slot's length may be any valid row (masked).
     positions:    (B,) int32 absolute position of the new token per
@@ -43,9 +64,9 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     mask because pages are never trimmed).
     """
     b, _, h, d = q.shape
-    kvh = k_pages.shape[2]
-    k = k_pages[block_tables].reshape(b, -1, kvh, d)   # (B, P*ps, KV, D)
-    v = v_pages[block_tables].reshape(b, -1, kvh, d)
+    kvh = k_pages.shape[-2]
+    k = _gather_pages(k_pages, block_tables, b, kvh, d)
+    v = _gather_pages(v_pages, block_tables, b, kvh, d)
     n_rep = h // kvh
     k = repeat_kv(k, n_rep)
     v = repeat_kv(v, n_rep)
@@ -71,8 +92,10 @@ def paged_prefill_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     tokens at absolute positions start..start+T-1).
 
     q:            (B, T, H, D) queries for the chunk being prefilled.
-    k/v_pages:    (N, ps, KV, D) page pool rows; the chunk's own K/V
-                  must already be written into its pages.
+    k/v_pages:    (N, ps, KV, D) page pool rows — or (S, R, ps, KV, D)
+                  for a locality-sharded pool (see _gather_pages); the
+                  chunk's own K/V must already be written into its
+                  pages.
     block_tables: (B, P) int32 physical page rows per slot.
     start:        (B,) int32 absolute position of q[:, 0] — query t
                   attends key positions <= start + t (causal across
@@ -82,9 +105,9 @@ def paged_prefill_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     trimmed).
     """
     b, t, h, d = q.shape
-    kvh = k_pages.shape[2]
-    k = k_pages[block_tables].reshape(b, -1, kvh, d)   # (B, P*ps, KV, D)
-    v = v_pages[block_tables].reshape(b, -1, kvh, d)
+    kvh = k_pages.shape[-2]
+    k = _gather_pages(k_pages, block_tables, b, kvh, d)
+    v = _gather_pages(v_pages, block_tables, b, kvh, d)
     n_rep = h // kvh
     k = repeat_kv(k, n_rep)
     v = repeat_kv(v, n_rep)

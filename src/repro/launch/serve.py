@@ -6,6 +6,9 @@ Usage:
       --engine paged --pages 24 --page-size 16   # oversubscribed pool
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
       --engine chunked --chunk-size 32 --step-tokens 64
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --kv-shards 4          # sharded AGAS page pool (DESIGN.md §4c)
 """
 
 from __future__ import annotations
@@ -34,9 +37,14 @@ def main():
                     help="prefill chunk width (0 = 2 pages)")
     ap.add_argument("--step-tokens", type=int, default=0,
                     help="per-step token budget (0 = slots + chunk)")
+    ap.add_argument("--kv-shards", type=int, default=1,
+                    help="AGAS localities the page pool is sharded "
+                         "over (device-backed when the runtime has "
+                         "one device per shard, simulated otherwise)")
     args = ap.parse_args()
 
     import repro.configs as configs
+    from repro.distributed.sharding import kv_pool_mesh
     from repro.models import transformer as T
     from repro.serving.engine import Request, make_engine
 
@@ -44,11 +52,18 @@ def main():
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     kw = dict(slots=args.slots, max_len=args.max_len)
     engine = "chunked" if args.engine == "auto" else args.engine
+    mesh = kv_pool_mesh(args.kv_shards)
     eng = make_engine(params, cfg, engine=engine,
                       page_size=args.page_size,
                       n_pages=args.pages or None,
                       chunk_size=args.chunk_size or None,
-                      step_tokens=args.step_tokens or None, **kw)
+                      step_tokens=args.step_tokens or None,
+                      kv_shards=args.kv_shards, mesh=mesh, **kw)
+    if args.kv_shards > 1 and hasattr(eng, "kvc"):
+        backing = "mesh" if mesh is not None else "simulated"
+        print(f"[serve] kv page pool: {args.kv_shards} shards "
+              f"({backing} localities), "
+              f"{eng.kvc.pool.pages_per_shard} pages/shard")
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     futs = []
@@ -77,6 +92,11 @@ def main():
               f"peak_page_occ={s['peak_page_occupancy']:.2f} "
               f"preemptions={s['preemptions']} "
               f"shares={s['page_shares']} cow={s['cow_copies']}")
+        if s["kv_shards"] > 1:
+            occ = ", ".join(f"{o:.2f}" for o in s["shard_occupancy"])
+            print(f"[serve] shards={s['kv_shards']} "
+                  f"occupancy=[{occ}] "
+                  f"page_migrations={s['page_migrations']}")
         print(f"[serve] ttft_p50={s['ttft_p50_ms']:.0f}ms "
               f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
               f"itl_p50={s['itl_p50_ms']:.1f}ms "

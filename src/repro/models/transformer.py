@@ -750,18 +750,29 @@ PAGED_FAMILIES = ("dense", "audio", "moe")
 
 
 def init_paged_cache(cfg: ArchConfig, n_rows: int, page_size: int,
-                     dtype=None) -> Dict[str, Any]:
-    """Allocate the page-pool KV arrays: (L, n_rows, ps, KV, D).
+                     dtype=None, n_shards: int = 1) -> Dict[str, Any]:
+    """Allocate the page-pool KV arrays.
 
+    Single locality (``n_shards == 1``): (L, n_rows, ps, KV, D), where
     `n_rows` counts physical rows (the pool passes capacity + 1 so the
     last row can serve as the null page idle slots write into).
+
+    Sharded pool (``n_shards > 1``, DESIGN.md §4c): one AGAS locality
+    per KV shard — (L, n_shards, n_rows, ps, KV, D) with `n_rows` rows
+    PER SHARD (pages_per_shard + 1; each shard carries its own local
+    null page so an idle write never crosses localities).  Axis 1 is
+    the locality axis the serving mesh shards over "kv".
     """
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(
             f"paged decode supports {PAGED_FAMILIES}, not {cfg.family!r}")
     dt = dtype or jnp.dtype(cfg.dtype)
-    shape = (cfg.n_layers, n_rows, page_size, cfg.n_kv_heads,
-             cfg.head_dim)
+    if n_shards > 1:
+        shape = (cfg.n_layers, n_shards, n_rows, page_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+    else:
+        shape = (cfg.n_layers, n_rows, page_size, cfg.n_kv_heads,
+                 cfg.head_dim)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
@@ -779,6 +790,12 @@ def decode_step_paged(params: Params, pages: Dict[str, Any],
     reads).  Sliding windows are enforced as absolute-position masks —
     pages are never trimmed, so RoPE phases baked at write time stay
     valid.  Returns (logits (B, V) f32, new pages).
+
+    Pages may be sharded across AGAS localities (DESIGN.md §4c):
+    6-d ``pages["k"]`` of (L, n_shards, R, ps, KV, D) with block-table
+    rows encoded ``locality * R + slot`` — the scatter and the gather
+    both decode (locality, slot) so every page resolves on the shard
+    that owns it.
     """
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(
@@ -808,8 +825,14 @@ def decode_step_paged(params: Params, pages: Dict[str, Any],
         q = att.apply_rope(q, cos, sin, cfg.rope_fraction)
         k = att.apply_rope(k, cos, sin, cfg.rope_fraction)
         # scatter the new token's K/V into each slot's write page
-        kp = kp.at[write_rows, write_offs].set(k[:, 0])
-        vp = vp.at[write_rows, write_offs].set(v[:, 0])
+        if kp.ndim == 5:                 # sharded: (S, R, ps, KV, D)
+            rps = kp.shape[1]
+            wloc, wslot = write_rows // rps, write_rows % rps
+            kp = kp.at[wloc, wslot, write_offs].set(k[:, 0])
+            vp = vp.at[wloc, wslot, write_offs].set(v[:, 0])
+        else:
+            kp = kp.at[write_rows, write_offs].set(k[:, 0])
+            vp = vp.at[write_rows, write_offs].set(v[:, 0])
         o = paged_attention(q, kp, vp, tables, positions,
                             window=cfg.sliding_window)
         x = x + o.reshape(b, 1, -1) @ lp["attn"]["wo"]
@@ -870,7 +893,8 @@ def prefill_chunk(params: Params, pages: Dict[str, Any],
     chunk_rows = batch["chunk_rows"]
     last_index = batch["last_index"]
     b, c = tokens.shape
-    ps = pages["k"].shape[2]
+    sharded = pages["k"].ndim == 6       # (L, S, R, ps, KV, D)
+    ps = pages["k"].shape[3 if sharded else 2]
     assert c % ps == 0, f"chunk width {c} not page-aligned (ps={ps})"
     cp = c // ps
     x = embed_lookup(params["embed"], tokens)
@@ -889,8 +913,14 @@ def prefill_chunk(params: Params, pages: Dict[str, Any],
         # tail of a partial chunk point at the null row)
         kw = k.reshape(b, cp, ps, *k.shape[2:]).astype(kp.dtype)
         vw = v.reshape(b, cp, ps, *v.shape[2:]).astype(vp.dtype)
-        kp = kp.at[chunk_rows].set(kw)
-        vp = vp.at[chunk_rows].set(vw)
+        if sharded:
+            rps = kp.shape[1]
+            cloc, cslot = chunk_rows // rps, chunk_rows % rps
+            kp = kp.at[cloc, cslot].set(kw)
+            vp = vp.at[cloc, cslot].set(vw)
+        else:
+            kp = kp.at[chunk_rows].set(kw)
+            vp = vp.at[chunk_rows].set(vw)
         o = paged_prefill_attention(q, kp, vp, tables, start,
                                     window=cfg.sliding_window)
         x = x + o.reshape(b, c, -1) @ lp["attn"]["wo"]

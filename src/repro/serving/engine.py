@@ -20,7 +20,8 @@ Three engines share that skeleton:
   rendering of the paper's Fig 3 granularity trade-off.
 
 * `PagedServingEngine` — the whole-prompt baseline over the same AGAS
-  page pool (serving/kvcache.py, DESIGN.md §4a): each admission runs
+  page pool (serving/kvcache.py, DESIGN.md §4a; sharded across
+  localities per §4c when `kv_shards > 1`): each admission runs
   one bucketed prefill for the entire prompt before any decode
   resumes.  Admission is gated on free *pages*, not free slots; when
   the pool runs dry the youngest request is preempted back to the
@@ -188,6 +189,35 @@ class _EngineBase:
         if fut is not None:
             fut.set_error(err)
 
+    def _finish_queued(self, item: dict) -> None:
+        """Finish a queued (preempted) request without re-admitting it,
+        delivering the generation it carries.  Used when re-admission
+        hits the length cap: an un-preempted request in that state is
+        truncate-finished with its tokens delivered, and a preempted
+        one must be too — its generated tokens are real work, never to
+        be discarded through an error LCO."""
+        now = time.perf_counter()
+        self._finish({"req": item["req"], "tokens": list(item["gen"]),
+                      "prefill_s": 0.0, "t0": now,
+                      "preempts": item.get("preempts", 0),
+                      **self._latency_state(item, now)})
+
+    def _fail_pending(self, err: Exception) -> None:
+        """Fail every request still queued or active (engine exiting
+        with work pending): each completion LCO carries the error, and
+        pages/slots are reclaimed so the engine stays usable."""
+        for slot in list(self.active):
+            self.active.pop(slot)
+            kvc = getattr(self, "kvc", None)
+            if kvc is not None:
+                kvc.release(slot)
+            self.free_slots.append(slot)
+        self.queue.clear()
+        for rid in list(self._futures):
+            fut = self._futures.pop(rid)
+            if not fut.done():
+                fut.set_error(err)
+
     def _finish(self, st: dict) -> None:
         tok_t = st.get("tok_t", [])
         comp = Completion(st["req"].rid, st["tokens"], st["prefill_s"],
@@ -231,10 +261,38 @@ class _EngineBase:
         raise NotImplementedError
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
+        """Drive the engine until idle.
+
+        Never exits with submitted futures unset: exhausting
+        `max_steps`, or a permanently head-of-line-blocked queue
+        (nothing active to free pages, nothing admissible), fails the
+        remaining futures instead of returning silently — a caller
+        blocked on a completion LCO must either get its value or its
+        error, never hang forever.
+        """
+        blocked_len = -1
         for _ in range(max_steps):
             if not self.active and not self.queue:
                 return
-            self.step()                  # step() admits first
+            n = self.step()              # step() admits first
+            if n == 0 and not self.active and self.queue:
+                # nothing ran and nothing is active: only a queue-head
+                # rejection (queue shrinks) can change future steps —
+                # an unchanged queue length means a permanent block
+                if len(self.queue) == blocked_len:
+                    self._fail_pending(RuntimeError(
+                        f"head-of-line blocked: {len(self.queue)} "
+                        "queued request(s) cannot be admitted and "
+                        "nothing is active to free pages"))
+                    return
+                blocked_len = len(self.queue)
+            else:
+                blocked_len = -1
+        if self.active or self.queue:
+            self._fail_pending(RuntimeError(
+                f"run_to_completion exhausted max_steps={max_steps} "
+                f"with {len(self.active)} active and "
+                f"{len(self.queue)} queued request(s)"))
 
 
 class DenseServingEngine(_EngineBase):
@@ -352,21 +410,39 @@ class DenseServingEngine(_EngineBase):
 
 class PagedServingEngine(_EngineBase):
     """KV memory as AGAS pages: demand allocation, prefix sharing,
-    page-gated admission, and preemption under pressure."""
+    page-gated admission, and preemption under pressure.
+
+    ``kv_shards > 1`` shards the page pool across AGAS localities
+    (DESIGN.md §4c): least-loaded allocation, per-shard occupancy in
+    `stats()`, and imbalance-triggered page migration between steps
+    (`rebalance_tolerance` pages of drift; pass a value < 1 to disable,
+    None for the automatic default).  ``mesh`` (with a "kv" axis of
+    size kv_shards) device-backs the shards; without it the localities
+    are simulated on one device with bit-identical results.
+    """
 
     _FULL_KV = True
 
     def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
                  max_len: int = 512, prefill_buckets=(64, 128, 256),
-                 page_size: int = 16, n_pages: Optional[int] = None):
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 kv_shards: int = 1, mesh=None,
+                 rebalance_tolerance: Optional[int] = None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets)
         if n_pages is None:
             # default: the dense engine's worst-case footprint — callers
             # shrink it to oversubscribe (kvcache preempts under
-            # pressure), or grow slots beyond what dense could afford
+            # pressure), or grow slots beyond what dense could afford —
+            # rounded up to fill every KV shard evenly
             n_pages = slots * (-(-max_len // page_size))
-        self.kvc = PagedKVCache(cfg, slots, max_len, n_pages, page_size)
+            n_pages = -(-n_pages // kv_shards) * kv_shards
+        self.kvc = PagedKVCache(cfg, slots, max_len, n_pages, page_size,
+                                n_shards=kv_shards, mesh=mesh)
+        if rebalance_tolerance is None:
+            rebalance_tolerance = max(
+                2, self.kvc.pool.pages_per_shard // 4)
+        self._rebalance_tol = int(rebalance_tolerance)
         # donate the page pool: on accelerators the step updates KV
         # pages in place instead of holding input + output copies
         self._decode = jax.jit(
@@ -398,16 +474,26 @@ class PagedServingEngine(_EngineBase):
         real = len(padded)
         if real > self.max_len:
             self.queue.pop(0)
-            self._reject(item, ValueError(
-                f"request {req.rid}: padded prompt {real} "
-                f"exceeds max_len {self.max_len}"))
+            if item["gen"]:
+                # re-admission at the length cap: finish with the
+                # partial generation (exactly what an un-preempted
+                # request in this state gets via truncation) — never
+                # error the LCO and discard generated tokens
+                self._finish_queued(item)
+            else:
+                self._reject(item, ValueError(
+                    f"request {req.rid}: padded prompt {real} "
+                    f"exceeds max_len {self.max_len}"))
             return None
         need = self.kvc.pages_needed(padded) + 1
         if need > self.kvc.pool.capacity:
             self.queue.pop(0)
-            self._reject(item, RuntimeError(
-                f"request {req.rid} needs {need} pages but the "
-                f"pool holds {self.kvc.pool.capacity}"))
+            if item["gen"]:
+                self._finish_queued(item)
+            else:
+                self._reject(item, RuntimeError(
+                    f"request {req.rid} needs {need} pages but the "
+                    f"pool holds {self.kvc.pool.capacity}"))
             return None
         return padded, real, need
 
@@ -453,6 +539,7 @@ class PagedServingEngine(_EngineBase):
                 "seq": next(self._seq),
                 "preempts": item["preempts"],
                 "bucket": item["bucket"] if item["gen"] else real,
+                "admit_step": len(self.counters),
                 **self._latency_state(item, now),
             }
             self._first_token(self.active[slot], now)
@@ -460,6 +547,23 @@ class PagedServingEngine(_EngineBase):
                 self._finish(self.active.pop(slot))
                 self.kvc.release(slot)
                 self.free_slots.append(slot)
+
+    # -- inter-shard page migration (DESIGN.md §4c) -------------------
+    def _maybe_rebalance(self) -> None:
+        """Between steps: migrate pages when per-shard occupancy has
+        drifted past the tolerance (block tables are refreshed, so the
+        next gather resolves the moved rows — outputs are unchanged,
+        which the migration-parity tests assert)."""
+        if self.kvc.pool.n_shards > 1 and self._rebalance_tol >= 1:
+            self.kvc.maybe_rebalance(self._rebalance_tol)
+
+    def force_migrate(self) -> int:
+        """Operational drill (and test hook): rotate every movable
+        page to the next shard between steps.  Returns pages moved.
+        Greedy outputs must be token-identical before and after — the
+        AGAS promise that a page's global name survives the move."""
+        moves = self.kvc.pool.plan_rotation()
+        return self.kvc.migrate(moves) if moves else 0
 
     # -- preemption under page pressure -------------------------------
     def _preempt(self, slot: int) -> None:
@@ -547,6 +651,7 @@ class PagedServingEngine(_EngineBase):
 
     def step(self) -> int:
         """One batched decode step over all active slots."""
+        self._maybe_rebalance()            # between-steps migration
         self._admit()
         # truncate requests whose next token has no cache room left
         # (bucket + generated reached max_len) instead of overflowing
@@ -595,6 +700,12 @@ class PagedServingEngine(_EngineBase):
             "page_allocs": pool.allocs,
             "page_shares": pool.shares,
             "cow_copies": pool.cow_copies,
+            # sharded-pool telemetry (length-1 lists on a single
+            # locality, so dashboards need no special case)
+            "kv_shards": pool.n_shards,
+            "shard_pages_used": pool.shard_used(),
+            "shard_occupancy": pool.shard_occupancy(),
+            "page_migrations": pool.page_migrations,
             "mean_prefill_ms": _mean(
                 [x.prefill_s for x in self.completions]) * 1e3,
             # latency split the chunked scheduler is judged on:
@@ -629,10 +740,14 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  max_len: int = 512, prefill_buckets=(64, 128, 256),
                  page_size: int = 16, n_pages: Optional[int] = None,
                  chunk_size: Optional[int] = None,
-                 step_tokens: Optional[int] = None):
+                 step_tokens: Optional[int] = None,
+                 kv_shards: int = 1, mesh=None,
+                 rebalance_tolerance: Optional[int] = None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
-                         page_size=page_size, n_pages=n_pages)
+                         page_size=page_size, n_pages=n_pages,
+                         kv_shards=kv_shards, mesh=mesh,
+                         rebalance_tolerance=rebalance_tolerance)
         if chunk_size is None:
             chunk_size = 2 * page_size
         if chunk_size <= 0 or chunk_size % page_size:
@@ -666,11 +781,22 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 continue
             padded, real, _ = layout
             # gate on the FIRST chunk plus one page of headroom (and
-            # the decode-write watermark); later chunks allocate as
-            # they are scheduled and preempt under pressure
+            # the watermark); later chunks allocate as they are
+            # scheduled and preempt under pressure
             first_end = min(self.chunk_size, real)
+            # the watermark counts EVERY allocation already committed
+            # for this step: decode writes at a page boundary/COW, AND
+            # the pages each mid-prefill slot's next chunk will take —
+            # prefill chunks run right after admission, so ignoring
+            # them (the old decode-only count) let an admission be
+            # preempted away in the very same step
             upcoming = sum(1 for s in self._decode_slots()
                            if self.kvc.needs_alloc(s))
+            for s, st in self.active.items():
+                if st.get("phase") == "prefill":
+                    nxt = min(st["pos"] + self.chunk_size, st["real"])
+                    upcoming += self.kvc.pages_needed_chunk(
+                        st["padded"], st["pos"], nxt)
             need = self.kvc.pages_needed_chunk(padded, 0, first_end) + 1
             if need + upcoming > self.kvc.pool.free_pages:
                 break                          # head-of-line blocking
@@ -687,6 +813,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 "preempts": item["preempts"],
                 "bucket": item["bucket"] if item["gen"] else real,
                 "n_gen0": len(item["gen"]),
+                "admit_step": len(self.counters),
                 **self._latency_state(item, now),
             }
 
@@ -757,6 +884,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         budget remains.  A prompt whose final chunk lands this step
         samples its first token now but starts decoding next step, so
         the step never exceeds its token budget."""
+        self._maybe_rebalance()            # between-steps migration
         self._admit()
         # truncate decoding requests whose next token has no cache room
         for slot in [s for s in self._decode_slots()
@@ -839,6 +967,7 @@ def make_engine(params: Any, cfg: ArchConfig, *,
         kwargs.pop("chunk_size", None)
         kwargs.pop("step_tokens", None)
         return PagedServingEngine(params, cfg, **kwargs)
-    for k in ("page_size", "n_pages", "chunk_size", "step_tokens"):
+    for k in ("page_size", "n_pages", "chunk_size", "step_tokens",
+              "kv_shards", "mesh", "rebalance_tolerance"):
         kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

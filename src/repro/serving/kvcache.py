@@ -1,23 +1,32 @@
-"""AGAS-managed paged KV cache (DESIGN.md §4a).
+"""AGAS-managed paged KV cache (DESIGN.md §4a, sharded in §4c).
 
 The ParalleX reading of KV memory: instead of a dense ``(slots,
 max_len)`` cache statically owned by each decode slot, KV storage is a
 pool of fixed-size *pages*, each a first-class globally-named object
 allocated and freed through the AGAS directory (`core/agas.py`).  A
-page's `GlobalAddress` is its immutable name; the AGAS slot it resolves
-to is the physical row in the device-side page arrays, so a block-table
-lookup compiles to a gather index — the same "nothing dynamic survives
-to run time" rendering used for AMR blocks.
+page's `GlobalAddress` is its immutable name; the AGAS (locality,
+slot) it resolves to is the physical row in the device-side page
+arrays, so a block-table lookup compiles to a gather index — the same
+"nothing dynamic survives to run time" rendering used for AMR blocks.
 
 Three layers live here:
 
 * `PagePool` — the allocator: AGAS-backed gid -> physical-row mapping,
   per-page refcounts, a prompt-prefix hash index enabling pages shared
   between requests (copy-on-write on first divergent append), and the
-  device arrays themselves (``pages["k"]/pages["v"]`` of shape
-  ``(L, n_pages + 1, page_size, KV, D)``; the extra trailing row is the
-  *null page*, the write target of idle decode slots — never read
-  because the per-slot masks exclude it).
+  device arrays themselves.  Single locality (``n_shards == 1``):
+  ``pages["k"]/pages["v"]`` of shape ``(L, n_pages + 1, page_size, KV,
+  D)``; the extra trailing row is the *null page*, the write target of
+  idle decode slots — never read because the per-slot masks exclude
+  it.  Sharded (``n_shards > 1``, DESIGN.md §4c): one AGAS locality
+  per KV shard, arrays of shape ``(L, n_shards, pages_per_shard + 1,
+  page_size, KV, D)`` (each shard carries its own local null page),
+  block-table rows encoded ``locality * rows_per_shard + slot``,
+  allocation least-loaded-shard-first with prefix-shared pages pinned
+  to their owner, and pool-imbalance-triggered page migration lowered
+  through `core/parcels.migration_plan` into ppermute legs — a page's
+  global name survives the move (the AGAS promise), only its
+  (locality, slot) changes.
 
 * `PagedKVCache` — the per-engine view: one block table per decode
   slot mapping token position ``p`` to the physical row of page
@@ -46,6 +55,8 @@ import numpy as np
 
 from repro.core.agas import AGAS, AGASError, GlobalAddress
 from repro.core.localities import LocalityDomain
+from repro.core.parcels import MigrationPlan, migration_plan, \
+    plan_move_arrays
 from repro.models.config import ArchConfig
 from repro.models.transformer import PAGED_FAMILIES, init_paged_cache
 
@@ -73,7 +84,9 @@ def page_keys(tokens: np.ndarray, page_size: int
 
 # Jitted + donated page mutations: on accelerators the update happens
 # in place instead of copying the whole pool per call (CPU falls back
-# to a copy with a one-time donation warning).
+# to a copy with a one-time donation warning).  The *_sharded variants
+# operate on the (L, n_shards, rows_per_shard, ...) layout with the
+# flat row already decoded into (locality, slot) index arrays.
 @partial(jax.jit, donate_argnums=(0,))
 def _scatter_rows(arr, idx, spans):
     return arr.at[:, idx].set(spans)
@@ -84,36 +97,97 @@ def _clone_row(arr, src, dst):
     return arr.at[:, dst].set(arr[:, src])
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows_sharded(arr, loc, slot, spans):
+    return arr.at[:, loc, slot].set(spans)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _clone_row_sharded(arr, src_loc, src_slot, dst_loc, dst_slot):
+    return arr.at[:, dst_loc, dst_slot].set(arr[:, src_loc, src_slot])
+
+
+# Migration payload permutation: the RHS gather is evaluated against
+# the pre-update operand, so every payload is read before any
+# destination is written regardless of move order (the snapshot
+# semantics core/parcels.plan_move_arrays documents).
+@partial(jax.jit, donate_argnums=(0,))
+def _permute_rows_sharded(arr, src_loc, src_slot, dst_loc, dst_slot):
+    return arr.at[:, dst_loc, dst_slot].set(arr[:, src_loc, src_slot])
+
+
 class PagePool:
-    """Refcounted AGAS page allocator + the device page arrays."""
+    """Refcounted AGAS page allocator + the device page arrays.
+
+    ``n_shards > 1`` shards the pool across AGAS localities (DESIGN.md
+    §4c): allocation is least-loaded-shard-first, every physical row is
+    named ``locality * rows_per_shard + slot``, and `migrate_pages`
+    moves pages between shards without changing their global names.
+    ``mesh`` (optional, with a ``kv_axis`` axis of size n_shards)
+    device-backs the localities: the page arrays are placed one shard
+    per device and migration legs execute as `lax.ppermute` under
+    `shard_map`; without a mesh the same legs lower to a single-device
+    row permutation (simulated localities — bit-identical results).
+    """
 
     def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
-                 dtype=None):
+                 dtype=None, *, n_shards: int = 1, mesh=None,
+                 kv_axis: str = "kv"):
         if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 f"paged KV cache supports {PAGED_FAMILIES}, "
                 f"not {cfg.family!r}")
+        if n_shards < 1 or n_pages % n_shards:
+            raise ValueError(
+                f"n_pages {n_pages} must be a positive multiple of "
+                f"n_shards {n_shards}")
         self.cfg = cfg
         self.capacity = int(n_pages)
         self.page_size = int(page_size)
-        self.null_row = self.capacity          # reserved garbage row
-        # One locality: the serving engine is a single-device demo; a
-        # sharded pool would use one locality per KV shard.
-        self.agas = AGAS(LocalityDomain.simulated(1), self.capacity,
-                         space="kvpage")
+        self.n_shards = int(n_shards)
+        self.sharded = self.n_shards > 1
+        self.pages_per_shard = self.capacity // self.n_shards
+        # every shard carries its own null page, so a shard's rows are
+        # pages_per_shard + 1 and the flat encoding below never
+        # collides between shards
+        self.rows_per_shard = self.pages_per_shard + 1
+        # shard 0's local null row; any shard's null works as a write
+        # sink (no mask ever reads one) and 0 * rows_per_shard +
+        # pages_per_shard keeps the single-shard value n_pages
+        self.null_row = self.pages_per_shard
+        self.mesh = mesh
+        self.kv_axis = kv_axis
+        if mesh is not None and \
+                mesh.shape.get(kv_axis) != self.n_shards:
+            raise ValueError(
+                f"mesh axis {kv_axis!r} must have size {self.n_shards}")
+        # One AGAS locality per KV shard; per-locality capacity is the
+        # shard's page count (the directory's free lists ARE the
+        # least-loaded allocation signal).
+        self.agas = AGAS(LocalityDomain.simulated(self.n_shards),
+                         self.pages_per_shard, space="kvpage")
         self._refs: Dict[int, int] = {}            # gid -> refcount
         self._prefix: Dict[Tuple[bytes, int], GlobalAddress] = {}
         self._key_of: Dict[int, Tuple[bytes, int]] = {}
         self.pages: Dict[str, Any] = init_paged_cache(
-            cfg, self.capacity + 1, self.page_size, dtype)
+            cfg, self.rows_per_shard, self.page_size, dtype,
+            n_shards=self.n_shards)
+        if mesh is not None:
+            from repro.distributed.sharding import page_pool_shardings
+            sh = page_pool_shardings(mesh, kv_axis)
+            self.pages = {k: jax.device_put(v, sh)
+                          for k, v in self.pages.items()}
         # performance counters (Fig 9 spirit: runtime overhead visible)
         self.allocs = 0
         self.shares = 0
         self.cow_copies = 0
+        self.page_migrations = 0
 
     # -- allocation / refcounting -------------------------------------
     @property
     def free_pages(self) -> int:
+        # global count: least-loaded-first allocation keeps every shard
+        # reachable, so n free pages really do admit n allocations
         return self.capacity - len(self._refs)
 
     @property
@@ -123,12 +197,31 @@ class PagePool:
     def occupancy(self) -> float:
         return self.used_pages / max(self.capacity, 1)
 
-    def alloc(self) -> GlobalAddress:
+    def shard_used(self) -> List[int]:
+        """Pages resident per shard (the load-balance signal)."""
+        return [int(n) for n in self.agas.load()]
+
+    def shard_occupancy(self) -> List[float]:
+        per = max(self.pages_per_shard, 1)
+        return [u / per for u in self.shard_used()]
+
+    def alloc(self, locality: Optional[int] = None) -> GlobalAddress:
+        """Allocate a page, least-loaded shard first.
+
+        Prefix-shared pages are pinned to their owner by construction —
+        sharing increfs an existing page wherever it lives; only FRESH
+        pages go through placement.  An explicit `locality` pins the
+        page (callers that want shard affinity); the default policy
+        keeps the shards balanced without a planner.
+        """
+        if locality is None:
+            locality = self.agas.least_loaded()
         try:
-            addr = self.agas.allocate(0)
+            addr = self.agas.allocate(locality)
         except AGASError:
             raise PageExhausted(
-                f"page pool exhausted ({self.capacity} pages)") from None
+                f"page pool exhausted ({self.capacity} pages over "
+                f"{self.n_shards} shard(s))") from None
         self._refs[addr.gid] = 1
         self.allocs += 1
         return addr
@@ -151,7 +244,15 @@ class PagePool:
         return self._refs[addr.gid]
 
     def row(self, addr: GlobalAddress) -> int:
-        return self.agas.slot_of(addr)
+        """Physical row of a page: ``locality * rows_per_shard + slot``
+        (reduces to the plain AGAS slot when n_shards == 1).  The row
+        changes when the page migrates; the global name never does."""
+        loc, slot = self.agas.lookup(addr)
+        return loc * self.rows_per_shard + slot
+
+    def _split_rows(self, rows) -> Tuple[np.ndarray, np.ndarray]:
+        r = np.asarray(rows, np.int32)
+        return r // self.rows_per_shard, r % self.rows_per_shard
 
     # -- prefix sharing ------------------------------------------------
     def lookup_prefix(self, key: Tuple[bytes, int]
@@ -171,21 +272,156 @@ class PagePool:
     def write_pages(self, rows: List[int], k_spans, v_spans) -> None:
         """One batched scatter of whole pages: spans are
         (L, len(rows), page_size, KV, D)."""
-        idx = jnp.asarray(rows, jnp.int32)
-        self.pages["k"] = _scatter_rows(self.pages["k"], idx,
-                                        k_spans.astype(
-                                            self.pages["k"].dtype))
-        self.pages["v"] = _scatter_rows(self.pages["v"], idx,
-                                        v_spans.astype(
-                                            self.pages["v"].dtype))
+        kd = k_spans.astype(self.pages["k"].dtype)
+        vd = v_spans.astype(self.pages["v"].dtype)
+        if self.sharded:
+            loc, slot = self._split_rows(rows)
+            loc, slot = jnp.asarray(loc), jnp.asarray(slot)
+            self.pages["k"] = _scatter_rows_sharded(
+                self.pages["k"], loc, slot, kd)
+            self.pages["v"] = _scatter_rows_sharded(
+                self.pages["v"], loc, slot, vd)
+        else:
+            idx = jnp.asarray(rows, jnp.int32)
+            self.pages["k"] = _scatter_rows(self.pages["k"], idx, kd)
+            self.pages["v"] = _scatter_rows(self.pages["v"], idx, vd)
 
     def copy_page(self, src_row: int, dst_row: int) -> None:
-        """COW: clone a page's contents under a fresh global name."""
-        src = jnp.int32(src_row)
-        dst = jnp.int32(dst_row)
-        self.pages["k"] = _clone_row(self.pages["k"], src, dst)
-        self.pages["v"] = _clone_row(self.pages["v"], src, dst)
+        """COW: clone a page's contents under a fresh global name (the
+        clone may land on a different shard — on a mesh that copy is a
+        parcel; GSPMD lowers the cross-shard read for us)."""
+        if self.sharded:
+            (sl, ss), (dl, ds) = (self._split_rows([src_row]),
+                                  self._split_rows([dst_row]))
+            self.pages["k"] = _clone_row_sharded(
+                self.pages["k"], jnp.int32(sl[0]), jnp.int32(ss[0]),
+                jnp.int32(dl[0]), jnp.int32(ds[0]))
+            self.pages["v"] = _clone_row_sharded(
+                self.pages["v"], jnp.int32(sl[0]), jnp.int32(ss[0]),
+                jnp.int32(dl[0]), jnp.int32(ds[0]))
+        else:
+            src = jnp.int32(src_row)
+            dst = jnp.int32(dst_row)
+            self.pages["k"] = _clone_row(self.pages["k"], src, dst)
+            self.pages["v"] = _clone_row(self.pages["v"], src, dst)
         self.cow_copies += 1
+
+    # -- inter-shard page migration (DESIGN.md §4c) -------------------
+    def plan_rebalance(self, tolerance: int
+                       ) -> Dict[GlobalAddress, int]:
+        """Moves that bring per-shard page counts within `tolerance`.
+
+        Only movable pages (refcount == 1) migrate: a prefix-shared
+        page stays pinned to its owner, so every block table pointing
+        at it stays one refresh away from consistency.  Moves are
+        simulated in commit (gid) order against the per-shard free
+        lists, so the returned dict is always feasible.
+        """
+        used = self.shard_used()
+        free = [self.pages_per_shard - u for u in used]
+        movable = {l: sorted(g for g in self.agas.residents(l)
+                             if self._refs.get(g, 0) == 1)
+                   for l in range(self.n_shards)}
+        moves: Dict[GlobalAddress, int] = {}
+        while True:
+            hi = int(np.argmax(used))
+            lo = int(np.argmin(used))
+            if used[hi] - used[lo] <= max(int(tolerance), 1):
+                break
+            if free[lo] <= 0 or not movable[hi]:
+                break
+            gid = movable[hi].pop(0)
+            moves[GlobalAddress(gid, self.agas.space)] = lo
+            used[hi] -= 1
+            used[lo] += 1
+            free[hi] += 1
+            free[lo] -= 1
+        return moves
+
+    def plan_rotation(self) -> Dict[GlobalAddress, int]:
+        """Every movable page to the next shard (round-robin): the
+        forced-migration drill that verifies a page's global name — and
+        therefore every request's output — survives relocation.
+        Feasibility is simulated in gid order, matching the order
+        `migration_plan` commits moves in."""
+        free = [self.pages_per_shard - u for u in self.shard_used()]
+        moves: Dict[GlobalAddress, int] = {}
+        where = {g: l for l in range(self.n_shards)
+                 for g in self.agas.residents(l)}
+        for gid in sorted(where):
+            if self._refs.get(gid, 0) != 1:
+                continue
+            src = where[gid]
+            dst = (src + 1) % self.n_shards
+            if dst == src or free[dst] <= 0:
+                continue
+            moves[GlobalAddress(gid, self.agas.space)] = dst
+            free[dst] -= 1
+            free[src] += 1
+        return moves
+
+    def migrate_pages(self, moves: Dict[GlobalAddress, int]
+                      ) -> MigrationPlan:
+        """Migrate pages between shards: the AGAS directory commits the
+        (locality, slot) updates — global names unchanged — and the
+        payload permutation is lowered through
+        `core/parcels.migration_plan` into ppermute legs, executed with
+        `lax.ppermute` under `shard_map` when the pool is mesh-backed
+        and as one gather-before-scatter row permutation of the same
+        legs on a single device."""
+        plan = migration_plan(self.agas, moves)
+        if plan.moves:
+            if self.mesh is not None:
+                self._apply_plan_mesh(plan)
+            else:
+                self._apply_plan_flat(plan)
+            self.page_migrations += len(plan.moves)
+        return plan
+
+    def _apply_plan_flat(self, plan: MigrationPlan) -> None:
+        # only reachable sharded: a 1-shard pool has no inter-locality
+        # moves, so migration_plan always returns an empty plan there
+        args = tuple(jnp.asarray(a) for a in plan_move_arrays(plan))
+        self.pages["k"] = _permute_rows_sharded(self.pages["k"], *args)
+        self.pages["v"] = _permute_rows_sharded(self.pages["v"], *args)
+
+    def _apply_plan_mesh(self, plan: MigrationPlan) -> None:
+        """Execute a plan's legs as `lax.ppermute` between devices.
+
+        Every leg gathers its payloads from a snapshot of the pre-plan
+        array (`orig`), so in-plan src/dst aliasing across legs cannot
+        clobber a payload before it is read — the same snapshot
+        semantics the flat lowering gets from gather-before-scatter.
+        """
+        from jax import lax
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compat import shard_map
+        legs = []
+        for perm, gs, ss in zip(plan.lowering.perms,
+                                plan.lowering.gather_slots,
+                                plan.lowering.scatter_slots):
+            recv = np.zeros(self.n_shards, bool)
+            for _, d in perm:
+                recv[d] = True
+            legs.append((tuple(perm), jnp.asarray(gs), jnp.asarray(ss),
+                         jnp.asarray(recv)))
+        spec = P(None, self.kv_axis, None, None, None, None)
+        axis = self.kv_axis
+
+        def body(cur):
+            i = lax.axis_index(axis)
+            orig = cur                   # pre-plan snapshot
+            for perm, gs, ss, recv in legs:
+                payload = jnp.take(orig[:, 0], gs[i], axis=1)
+                got = lax.ppermute(payload, axis, perm)
+                cur = jnp.where(recv[i],
+                                cur.at[:, 0, ss[i]].set(got), cur)
+            return cur
+
+        fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=spec,
+                               out_specs=spec))
+        self.pages["k"] = fn(self.pages["k"])
+        self.pages["v"] = fn(self.pages["v"])
 
 
 @dataclasses.dataclass
@@ -208,8 +444,11 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg: ArchConfig, slots: int, max_len: int,
-                 n_pages: int, page_size: int, dtype=None):
-        self.pool = PagePool(cfg, n_pages, page_size, dtype)
+                 n_pages: int, page_size: int, dtype=None, *,
+                 n_shards: int = 1, mesh=None, kv_axis: str = "kv"):
+        self.pool = PagePool(cfg, n_pages, page_size, dtype,
+                             n_shards=n_shards, mesh=mesh,
+                             kv_axis=kv_axis)
         self.slots = int(slots)
         self.max_len = int(max_len)
         self.max_pages_slot = -(-self.max_len // page_size)
@@ -428,6 +667,38 @@ class PagedKVCache:
         self.lengths[slot] = 0
         self.write_rows[slot] = null
         self.write_offs[slot] = 0
+
+    # -- inter-shard migration (DESIGN.md §4c) ------------------------
+    def refresh_tables(self) -> None:
+        """Re-resolve every block-table entry from the AGAS directory.
+
+        After a migration a page's global name is unchanged but its
+        (locality, slot) — and therefore its flat row — is not; one
+        directory walk restores table consistency.  Write rows are NOT
+        refreshed here: `prepare_decode` recomputes them before every
+        decode write and `begin_chunk` returns fresh rows per chunk, so
+        migration between steps can never race a stale write target.
+        """
+        for slot, st in enumerate(self._state):
+            for i, a in enumerate(st.addrs):
+                self.tables[slot, i] = self.pool.row(a)
+
+    def migrate(self, moves: Dict[GlobalAddress, int]) -> int:
+        """Migrate pages and restore table consistency; returns the
+        number of pages actually moved."""
+        plan = self.pool.migrate_pages(moves)
+        if plan.moves:
+            self.refresh_tables()
+        return len(plan.moves)
+
+    def maybe_rebalance(self, tolerance: int) -> int:
+        """Imbalance-triggered migration: when per-shard page counts
+        drift more than `tolerance` apart, move movable pages from the
+        fullest shard to the emptiest (between engine steps)."""
+        used = self.pool.shard_used()
+        if max(used) - min(used) <= max(int(tolerance), 1):
+            return 0
+        return self.migrate(self.pool.plan_rebalance(tolerance))
 
     # -- the compiled-step view ---------------------------------------
     def batch_inputs(self) -> Dict[str, Any]:

@@ -1,0 +1,174 @@
+"""Serving-engine liveness regressions: a preempted request re-admitted
+at the length cap delivers its partial generation (never an error LCO),
+`run_to_completion` fails pending futures instead of leaving callers
+blocked forever, and an admission is never preempted away in the very
+same step it was granted (the chunked watermark counts pending-chunk
+demand, not just decode writes)."""
+
+import numpy as np
+import pytest
+import jax
+
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.serving.engine import (ChunkedPagedServingEngine,
+                                  PagedServingEngine, Request,
+                                  make_engine)
+
+RNG = np.random.default_rng(13)
+
+
+def _cfg(name="yi-6b"):
+    return configs.get_reduced(name)
+
+
+def _params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+# -- fix 1: re-admission at the cap finishes with partial tokens -------
+
+@pytest.mark.parametrize("engine", ["paged", "chunked"])
+def test_preempted_request_at_cap_delivers_partial_tokens(engine):
+    """A preempted request whose bucket + generated tokens exceed
+    max_len must FINISH with the tokens it already generated — exactly
+    what an un-preempted request in the same state gets via
+    truncation — not be rejected through its LCO with all its work
+    discarded."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = make_engine(params, cfg, engine=engine, slots=2, max_len=64,
+                      prefill_buckets=(32,), page_size=16)
+    prompt = RNG.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    fut = eng.submit(Request(0, prompt, max_new_tokens=50))
+    # reconstruct the carried-preemption state at the head of the
+    # queue: bucket 32 + 40 generated tokens pads to 72 > max_len 64
+    item = eng.queue[0]
+    gen = [int(x) for x in RNG.integers(0, cfg.vocab_size, size=40)]
+    item["gen"] = list(gen)
+    item["bucket"] = 32
+    item["preempts"] = 2
+    eng.run_to_completion()
+    comp = fut.get()                    # must NOT raise
+    assert comp.tokens == gen
+    assert comp.preemptions == 2
+    assert eng.kvc.pool.used_pages == 0
+    # the engine stayed healthy: a follow-up request completes
+    f2 = eng.submit(Request(1, prompt[:10], max_new_tokens=4))
+    eng.run_to_completion()
+    assert len(f2.get().tokens) == 4
+
+
+def test_readmission_exceeding_pool_capacity_delivers_partial_tokens():
+    """Same principle when the re-admission's page need outgrows the
+    pool: generated tokens are delivered, not discarded."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = PagedServingEngine(params, cfg, slots=2, max_len=256,
+                            prefill_buckets=(32,), page_size=16,
+                            n_pages=4)
+    prompt = RNG.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    fut = eng.submit(Request(0, prompt, max_new_tokens=200))
+    item = eng.queue[0]
+    gen = [int(x) for x in RNG.integers(0, cfg.vocab_size, size=60)]
+    item["gen"] = list(gen)             # 32 + 60 -> 6 pages + 1 > 4
+    item["bucket"] = 32
+    item["preempts"] = 1
+    eng.run_to_completion()
+    assert fut.get().tokens == gen
+
+
+# -- fix 2: run_to_completion never strands futures --------------------
+
+def test_exhausted_max_steps_fails_futures_instead_of_hanging():
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = PagedServingEngine(params, cfg, slots=2, max_len=64,
+                            prefill_buckets=(32,), page_size=16)
+    futs = [eng.submit(Request(rid, np.arange(10, dtype=np.int32),
+                               max_new_tokens=30))
+            for rid in range(2)]
+    eng.run_to_completion(max_steps=1)
+    # every future is resolved: a caller blocked on one gets its error
+    assert all(f.done() for f in futs)
+    with pytest.raises(RuntimeError, match="max_steps"):
+        futs[0].get()
+    # pages and slots were reclaimed; the engine is reusable
+    assert eng.kvc.pool.used_pages == 0
+    assert not eng.active and not eng.queue
+    f2 = eng.submit(Request(9, np.arange(8, dtype=np.int32),
+                            max_new_tokens=4))
+    eng.run_to_completion()
+    assert len(f2.get().tokens) == 4
+
+
+def test_head_of_line_block_fails_future_instead_of_hanging():
+    """A queue head that can never be admitted (pages held elsewhere,
+    nothing active to free them) must fail its LCO, not spin silently
+    while the caller blocks forever."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = PagedServingEngine(params, cfg, slots=2, max_len=64,
+                            prefill_buckets=(32,), page_size=16,
+                            n_pages=6)
+    held = [eng.kvc.pool.alloc() for _ in range(5)]   # 1 page left
+    fut = eng.submit(Request(0, np.arange(20, dtype=np.int32),
+                             max_new_tokens=4))       # needs 3
+    eng.run_to_completion()
+    assert fut.done()
+    with pytest.raises(RuntimeError, match="head-of-line"):
+        fut.get()
+    # freeing the held pages un-wedges the engine for new work
+    for a in held:
+        eng.kvc.pool.decref(a)
+    f2 = eng.submit(Request(1, np.arange(20, dtype=np.int32),
+                            max_new_tokens=4))
+    eng.run_to_completion()
+    assert len(f2.get().tokens) == 4
+
+
+# -- fix 3: no same-step admit-then-preempt ----------------------------
+
+def test_admission_is_never_preempted_in_its_own_step():
+    """The chunked watermark must count the pages mid-prefill slots'
+    next chunks will take (they run right after admission), exactly as
+    the paged engine counts decode writes — otherwise an admission can
+    be granted and preempted away within one step() call."""
+    cfg = _cfg()
+    params = _params(cfg)
+    eng = ChunkedPagedServingEngine(params, cfg, slots=4, max_len=64,
+                                    prefill_buckets=(8, 16),
+                                    page_size=8, chunk_size=8,
+                                    n_pages=4, step_tokens=32)
+    violations = []
+    orig_preempt = eng._preempt
+
+    def spy(slot):
+        st = eng.active[slot]
+        if st.get("admit_step") == len(eng.counters):
+            violations.append(st["req"].rid)
+        orig_preempt(slot)
+    eng._preempt = spy
+
+    rng = np.random.default_rng(7)
+    L1 = Request(0, rng.integers(0, cfg.vocab_size, size=16)
+                 .astype(np.int32), max_new_tokens=4)
+    L2 = Request(1, rng.integers(0, cfg.vocab_size, size=16)
+                 .astype(np.int32), max_new_tokens=4)
+    S = Request(2, rng.integers(0, cfg.vocab_size, size=6)
+                .astype(np.int32), max_new_tokens=4)
+    futs = [eng.submit(L1), eng.submit(L2)]
+    eng.step()          # L1, L2 admitted; one chunk each (2 pages free)
+    futs.append(eng.submit(S))
+    eng.step()
+    # S must NOT have been admitted: the 2 free pages are spoken for by
+    # L1's and L2's next chunks (the old decode-only watermark admitted
+    # S here and the chunk exhaustion preempted it in this very step)
+    assert all(st["req"].rid != S.rid for st in eng.active.values())
+    eng.run_to_completion()
+    assert violations == []
+    comps = {c.rid: c for c in eng.completions}
+    assert set(comps) == {0, 1, 2}
+    assert all(len(comps[r].tokens) == 4 for r in comps)
+    assert eng.preemptions > 0          # the pressure was real
+    assert eng.kvc.pool.used_pages == 0
