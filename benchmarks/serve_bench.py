@@ -24,6 +24,20 @@ tests/test_distributed.py), simulated otherwise — with a forced
 mid-trace page migration, and asserts the greedy outputs are
 token-identical to the single-locality chunked engine.
 
+``--tiering`` serves a pressure trace (long-ish prompts, more
+requests than the device pool can hold) twice at the SAME device page
+budget: once untiered — preemptions forfeit pages and re-prefill —
+and once with the two-tier percolation pool (DESIGN.md §4d,
+``--host-pages`` sizes the host tier), where preempted KV is written
+back to host and restored on re-admission.  The tiered run must hold
+>= 2x the concurrently resident requests outside ``--smoke``, stay
+token-identical to an ample-pool reference, and reports the
+offload/promote byte counters plus the copy/compute overlap
+fraction.
+
+``--seed`` reseeds every trace generator, so mixed-trace runs are
+reproducible (and comparable) across machines.
+
 Engines are warmed up (prefill buckets, the chunk step, and the decode
 step compiled) on a throwaway trace before timing, so the latency
 split reflects scheduling, not XLA compilation.
@@ -51,7 +65,7 @@ PAGE_SIZE = 16
 DENSE_N_PAGES = SLOTS_DENSE * DENSE_MAX_LEN // PAGE_SIZE     # 24 pages
 SLOTS_PAGED = 8             # paged runs 2x the decode width, same bytes
 
-# -- whole-prompt vs chunked (this PR): mixed trace, equal pages -------
+# -- whole-prompt vs chunked (PR 2): mixed trace, equal pages ----------
 MIXED_MAX_LEN = 128
 MIXED_N_PAGES = 32          # 512 KV token rows for both paged engines
 CHUNK = 32
@@ -59,6 +73,13 @@ STEP_TOKENS = SLOTS_PAGED + 2 * CHUNK
 N_SHORT = 14
 N_LONG = 2
 MAX_NEW = 16
+
+# -- tiered percolation (DESIGN.md §4d): pressure trace, tiny device --
+TIER_DEVICE_PAGES = 16      # 256 KV token rows of HBM
+TIER_HOST_PAGES = 64        # the ~4x host DRAM tier behind it
+SLOTS_TIERED = 16           # slot count beyond what the device holds
+N_PRESSURE = 16             # long decode tails: ~6-7 pages each at
+TIER_MAX_NEW = 48           # completion, vs a 16-page device pool
 
 
 def _short_requests(cfg, n, max_new=MAX_NEW, rid0=0, seed=0):
@@ -71,16 +92,29 @@ def _short_requests(cfg, n, max_new=MAX_NEW, rid0=0, seed=0):
 
 
 def _mixed_requests(cfg, n_short=N_SHORT, n_long=N_LONG,
-                    max_new=MAX_NEW):
+                    max_new=MAX_NEW, seed=0):
     """Long prompts FIRST, shorts queued behind them."""
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     from repro.serving.engine import Request
     longs = [Request(rid, rng.integers(
         0, cfg.vocab_size, size=int(rng.integers(80, 96)))
         .astype(np.int32), max_new_tokens=max_new)
         for rid in range(n_long)]
     return longs + _short_requests(cfg, n_short, max_new=max_new,
-                                   rid0=n_long, seed=1)
+                                   rid0=n_long, seed=seed + 1)
+
+
+def _pressure_requests(cfg, n=N_PRESSURE, max_new=TIER_MAX_NEW,
+                       seed=0):
+    """Medium prompts + LONG decode tails: every request grows to 6-7
+    pages before finishing, so a 16-page device pool preempts
+    constantly mid-decode — the shape write-back offload exists for."""
+    rng = np.random.default_rng(seed + 7)
+    from repro.serving.engine import Request
+    return [Request(i, rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(40, 64)))
+        .astype(np.int32), max_new_tokens=max_new)
+        for i in range(n)]
 
 
 def _warmup(eng, cfg, lens):
@@ -99,6 +133,18 @@ def _warmup(eng, cfg, lens):
         eng.preemptions = 0
         pool = eng.kvc.pool
         pool.allocs = pool.shares = pool.cow_copies = 0
+        if getattr(pool, "tiered", False):
+            # the timed trace starts from an empty pool, an empty
+            # staging buffer, and clean percolation counters (warmup
+            # prefixes would otherwise sit cold on device, and
+            # warmup-staged promotions would clog the double buffer)
+            from repro.core.percolation import TransferEngine
+            pool.drop_all_cold()
+            pool.evictions = pool.cold_drops = 0
+            pool.offloaded = pool.promoted = 0
+            pool.xfer = TransferEngine(
+                max_inflight=pool.xfer.max_inflight)
+            eng.offloads = eng.restores = 0
 
 
 def _serve(eng, reqs):
@@ -161,7 +207,8 @@ def _serve_sharded(params, cfg, kw_mixed, warm_lens, mixed, kv_shards,
     return out
 
 
-def run(verbose=True, out_path=None, smoke=False, kv_shards=0):
+def run(verbose=True, out_path=None, smoke=False, kv_shards=0,
+        tiering=False, host_pages=0, seed=0):
     import jax
 
     import repro.configs as configs
@@ -170,11 +217,12 @@ def run(verbose=True, out_path=None, smoke=False, kv_shards=0):
 
     cfg = configs.get_reduced(ARCH)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    result = {"arch": ARCH, "page_size": PAGE_SIZE}
+    result = {"arch": ARCH, "page_size": PAGE_SIZE, "seed": seed}
 
     # -- dense vs paged on the short trace ----------------------------
     short = _short_requests(cfg, 4 if smoke else 16,
-                            max_new=4 if smoke else MAX_NEW)
+                            max_new=4 if smoke else MAX_NEW,
+                            seed=seed)
     kw_short = dict(max_len=DENSE_MAX_LEN, prefill_buckets=(32,))
     dense = make_engine(params, cfg, engine="dense",
                         slots=SLOTS_DENSE, **kw_short)
@@ -199,7 +247,8 @@ def run(verbose=True, out_path=None, smoke=False, kv_shards=0):
     # -- whole-prompt vs chunked on the mixed trace -------------------
     mixed = _mixed_requests(cfg, n_short=4 if smoke else N_SHORT,
                             n_long=1 if smoke else N_LONG,
-                            max_new=4 if smoke else MAX_NEW)
+                            max_new=4 if smoke else MAX_NEW,
+                            seed=seed)
     kw_mixed = dict(max_len=MIXED_MAX_LEN, prefill_buckets=(32,),
                     slots=SLOTS_PAGED, page_size=PAGE_SIZE,
                     n_pages=MIXED_N_PAGES)
@@ -245,6 +294,107 @@ def run(verbose=True, out_path=None, smoke=False, kv_shards=0):
         emit("serve_sharded_tok_s", sh["tok_s"], "tok_per_s")
         emit("serve_sharded_page_migrations", sh["page_migrations"],
              f"kv_shards_{kv_shards}")
+
+    # -- two-tier percolation on the pressure trace (§4d) -------------
+    if tiering:
+        hp = host_pages or TIER_HOST_PAGES
+        press = _pressure_requests(cfg, n=5 if smoke else N_PRESSURE,
+                                   max_new=8 if smoke else TIER_MAX_NEW,
+                                   seed=seed)
+        kw_tier = dict(max_len=MIXED_MAX_LEN, prefill_buckets=(32,),
+                       slots=SLOTS_TIERED, page_size=PAGE_SIZE,
+                       chunk_size=CHUNK,
+                       step_tokens=SLOTS_TIERED + 2 * CHUNK)
+        warm_tier = (97, 90, 33, 12)
+
+        def _press_run(**kw):
+            eng = make_engine(params, cfg, engine="chunked",
+                              **kw_tier, **kw)
+            _warmup(eng, cfg, warm_tier)
+            dt, tok = _serve(eng, press)
+            return eng, eng.stats(), dt, tok
+
+        def _decode_tok_s(eng):
+            """Decode throughput from the step counters: tokens the
+            decode batch produced per second of decode-batch time.
+            Unlike wall tok/s it excludes transfer stalls, which on a
+            real accelerator overlap compute — this is the number the
+            <= 15% tiering-penalty budget is about."""
+            tok = sum(c.get("decode_tokens", c["active"])
+                      for c in eng.counters)
+            ms = sum(c["decode_ms"] for c in eng.counters)
+            return tok / (ms / 1e3) if ms else 0.0
+
+        # token ground truth: an ample pool that never preempts
+        ample_pages = SLOTS_TIERED * MIXED_MAX_LEN // PAGE_SIZE
+        ample_eng, _, _, _ = _press_run(n_pages=ample_pages)
+        truth = {c.rid: c.tokens for c in ample_eng.completions}
+
+        # same tiny device budget, tiering off vs on
+        base_eng, bst, base_s, base_tok = _press_run(
+            n_pages=TIER_DEVICE_PAGES)
+        tier_eng, tst, tier_s, tier_tok = _press_run(
+            n_pages=TIER_DEVICE_PAGES, tiering=True, host_pages=hp)
+        got = {c.rid: c.tokens for c in tier_eng.completions}
+        assert got == truth, (
+            "tiered outputs diverge from the ample-pool reference — "
+            "restore is supposed to be byte-exact")
+        resident_x = tst["peak_resident"] / max(bst["peak_resident"], 1)
+        if not smoke:
+            assert resident_x >= 2.0, (
+                f"tiering holds only {resident_x:.2f}x the resident "
+                f"requests ({tst['peak_resident']} vs "
+                f"{bst['peak_resident']}) at {TIER_DEVICE_PAGES} "
+                "device pages")
+        result["tiered_trace"] = {
+            "device_pages": TIER_DEVICE_PAGES, "host_pages": hp,
+            "n_requests": len(press),
+            "untiered": dict(
+                _eng_stats(bst, SLOTS_TIERED, base_tok, base_s),
+                peak_resident=bst["peak_resident"],
+                mean_resident=bst["mean_resident"]),
+            "tiered": dict(
+                _eng_stats(tst, SLOTS_TIERED, tier_tok, tier_s),
+                peak_resident=tst["peak_resident"],
+                mean_resident=tst["mean_resident"],
+                offloads=tst["offloads"], restores=tst["restores"],
+                offload_bytes=tst["offload_bytes"],
+                promote_bytes=tst["promote_bytes"],
+                prefetch_hits=tst["prefetch_hits"],
+                demand_promotes=tst["demand_promotes"],
+                copy_compute_overlap=tst["copy_compute_overlap"],
+                evictions=tst["evictions"]),
+            "resident_ratio": resident_x,
+            "decode_tok_s_untiered": _decode_tok_s(base_eng),
+            "decode_tok_s_tiered": _decode_tok_s(tier_eng),
+            "decode_penalty": 1.0 - _decode_tok_s(tier_eng)
+            / max(_decode_tok_s(base_eng), 1e-9),
+        }
+        if verbose:
+            t = result["tiered_trace"]
+            print(f"# serve_bench tiered  {tier_tok / tier_s:8.1f} tok/s "
+                  f"(pressure, {TIER_DEVICE_PAGES}+{hp} pages) "
+                  f"resident={tst['peak_resident']} "
+                  f"({resident_x:.1f}x untiered) "
+                  f"offload={tst['offload_bytes']}B "
+                  f"promote={tst['promote_bytes']}B "
+                  f"overlap={tst['copy_compute_overlap']:.2f} "
+                  f"penalty={t['decode_penalty'] * 100:+.1f}% "
+                  "token-identical to ample pool")
+        emit("serve_tiered_tok_s", tier_tok / tier_s, "tok_per_s")
+        emit("serve_untiered_tok_s", base_tok / base_s, "tok_per_s")
+        emit("serve_tiered_decode_tok_s", _decode_tok_s(tier_eng),
+             "tok_per_s")
+        emit("serve_untiered_decode_tok_s", _decode_tok_s(base_eng),
+             "tok_per_s")
+        emit("serve_tiered_peak_resident", tst["peak_resident"],
+             f"untiered_{bst['peak_resident']}")
+        emit("serve_tiered_offload_bytes", tst["offload_bytes"],
+             "bytes")
+        emit("serve_tiered_promote_bytes", tst["promote_bytes"],
+             "bytes")
+        emit("serve_tiered_overlap", tst["copy_compute_overlap"],
+             "fraction")
     if verbose:
         print(f"# serve_bench dense   {dense_tok / dense_s:8.1f} tok/s "
               f"(short trace, peak_active={SLOTS_DENSE})")
@@ -288,5 +438,20 @@ if __name__ == "__main__":
                          "sharded over N AGAS localities (with a "
                          "forced migration) and assert token parity "
                          "with the single-locality engine")
+    ap.add_argument("--tiering", action="store_true",
+                    help="also serve the pressure trace untiered vs "
+                         "two-tier (DESIGN.md §4d): write-back "
+                         "offload, restore-not-reprefill, percolation "
+                         "overlap; asserts token parity with an "
+                         "ample-pool reference")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host-tier pages for --tiering "
+                         f"(0 = {TIER_HOST_PAGES})")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace-generation seed: every trace "
+                         "(short/mixed/pressure) derives from it, so "
+                         "runs are reproducible across machines")
     args = ap.parse_args()
-    run(out_path=args.out, smoke=args.smoke, kv_shards=args.kv_shards)
+    run(out_path=args.out, smoke=args.smoke, kv_shards=args.kv_shards,
+        tiering=args.tiering, host_pages=args.host_pages,
+        seed=args.seed)

@@ -13,6 +13,13 @@ and a "migration" compiles to a permutation (gather/scatter or
 ppermute) — nothing dynamic survives to run time, which is this
 framework's analogue of the paper's Sec. V proposal to accelerate AGAS
 lookups in hardware.
+
+Localities need not be homogeneous: `pool_capacity` may be a
+per-locality sequence, and each locality can carry an integer *tier*
+tag (`core/percolation.py` uses 0 = device HBM, 1 = host DRAM).  An
+object's global name is stable across a move between tiers exactly as
+it is across a move between same-tier localities — percolation
+(DESIGN.md §4d) is AGAS migration along the vertical memory axis.
 """
 
 from __future__ import annotations
@@ -49,25 +56,49 @@ class AGAS:
     first-class checkpointable object (needed for elastic restart).
     """
 
-    def __init__(self, domain: LocalityDomain, pool_capacity: int,
-                 space: str = "default"):
+    def __init__(self, domain: LocalityDomain, pool_capacity,
+                 space: str = "default",
+                 tiers: Optional[Sequence[int]] = None):
         self.domain = domain
-        self.capacity = int(pool_capacity)
+        if isinstance(pool_capacity, (int, np.integer)):
+            self.capacities = [int(pool_capacity)] * len(domain)
+        else:
+            if len(pool_capacity) != len(domain):
+                raise ValueError(
+                    f"{len(pool_capacity)} capacities for "
+                    f"{len(domain)} localities")
+            self.capacities = [int(c) for c in pool_capacity]
+        # uniform-pool compat: `capacity` is THE per-locality capacity
+        # when the pools are homogeneous, the largest otherwise
+        self.capacity = max(self.capacities, default=0)
+        if tiers is None:
+            tiers = [0] * len(domain)
+        if len(tiers) != len(domain):
+            raise ValueError(
+                f"{len(tiers)} tier tags for {len(domain)} localities")
+        self.tiers = [int(t) for t in tiers]
         self.space = space
         self._gids = itertools.count()
         self._where: Dict[int, Tuple[int, int]] = {}
         self._free: List[List[int]] = [
-            list(range(self.capacity)) for _ in range(len(domain))
+            list(range(c)) for c in self.capacities
         ]
         self._residents: List[set] = [set() for _ in range(len(domain))]
         self.migrations = 0  # counter surfaced as a performance counter
+
+    # -- tiers -------------------------------------------------------------
+    def tier_of(self, locality: int) -> int:
+        return self.tiers[locality]
+
+    def localities_in_tier(self, tier: int) -> List[int]:
+        return [l for l, t in enumerate(self.tiers) if t == tier]
 
     # -- allocation --------------------------------------------------------
     def allocate(self, locality: int) -> GlobalAddress:
         if not self._free[locality]:
             raise AGASError(
                 f"locality {locality} pool exhausted "
-                f"(capacity {self.capacity})"
+                f"(capacity {self.capacities[locality]})"
             )
         slot = self._free[locality].pop()
         gid = next(self._gids)
@@ -108,16 +139,21 @@ class AGAS:
         """Free pool slots on one locality (the allocator's load signal)."""
         return len(self._free[locality])
 
-    def least_loaded(self) -> int:
+    def least_loaded(self, tier: Optional[int] = None) -> int:
         """Locality with the most free slots (ties -> lowest id).
 
         The locality-aware allocation policy: new objects land where
         capacity is, which keeps the per-locality pools balanced without
         a central planner (the HPX local-first/least-loaded placement
-        the sharded KV page pool uses).
+        the sharded KV page pool uses).  `tier` restricts the choice to
+        one memory tier — a tiered pool allocates fresh objects in fast
+        memory only; the slow tier is reached by explicit percolation.
         """
-        return max(range(len(self.domain)),
-                   key=lambda l: (self.free_count(l), -l))
+        cands = range(len(self.domain)) if tier is None \
+            else self.localities_in_tier(tier)
+        if not cands:
+            raise AGASError(f"no locality in tier {tier}")
+        return max(cands, key=lambda l: (self.free_count(l), -l))
 
     # -- migration -----------------------------------------------------------
     def migrate(self, addr: GlobalAddress, new_locality: int) -> Tuple[int, int]:
@@ -157,6 +193,8 @@ class AGAS:
     def checkpoint_state(self) -> dict:
         return {
             "capacity": self.capacity,
+            "capacities": list(self.capacities),
+            "tiers": list(self.tiers),
             "space": self.space,
             "n_localities": len(self.domain),
             "where": dict(self._where),
@@ -170,9 +208,16 @@ class AGAS:
 
         `remap` supports elastic restore: a checkpoint taken on P
         localities can be restored onto P' by providing old->new ids
-        (defaults to `old % P'`, the round-robin fold).
+        (defaults to `old % P'`, the round-robin fold).  Restoring onto
+        a different locality count keeps the UNIFORM capacity (tier
+        tags do not survive a fold across counts).
         """
-        agas = AGAS(domain, state["capacity"], state["space"])
+        caps = state.get("capacities")
+        tiers = state.get("tiers")
+        if caps is None or len(caps) != len(domain):
+            caps = state["capacity"]
+            tiers = None
+        agas = AGAS(domain, caps, state["space"], tiers=tiers)
         n_new = len(domain)
         for gid, (loc, _slot) in sorted(state["where"].items()):
             new_loc = remap[loc] if remap else loc % n_new

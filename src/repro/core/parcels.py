@@ -232,7 +232,23 @@ def _lower_moves(recs, n_loc) -> HaloLowering:
                         n_parcels=len(recs))
 
 
-def plan_move_arrays(plan: MigrationPlan
+def canonical_size(n: int) -> int:
+    """Smallest power of two >= n (and >= 1).
+
+    Permutation and transfer programs are compiled at canonical batch
+    sizes: padding a move list up to the next power of two with
+    identity moves onto a scratch slot means one compiled program per
+    size class instead of one per exact count — the production-pool
+    fix DESIGN.md §9.4 called for.
+    """
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def plan_move_arrays(plan: MigrationPlan, pad_to: Optional[int] = None,
+                     pad_move: Tuple[int, int] = (0, 0)
                      ) -> Tuple[np.ndarray, np.ndarray,
                                 np.ndarray, np.ndarray]:
     """(src_loc, src_slot, dst_loc, dst_slot) int32 arrays of a plan.
@@ -244,9 +260,20 @@ def plan_move_arrays(plan: MigrationPlan
     destination is written, so the move order inside the legs cannot
     matter — exactly the semantics the legged ppermute execution has
     when each leg gathers from a snapshot of the source pool.
+
+    `pad_to` pads the arrays to a canonical length with identity
+    self-moves of `pad_move` = (locality, slot) — point it at a
+    scratch slot (the page pool's null row) and the padded entries
+    copy that slot onto itself, so one compiled permutation program
+    serves every plan in the size class.
     """
     moves = np.array([m[1:] for m in plan.moves],
                      np.int32).reshape(-1, 4)
+    if pad_to is not None and pad_to > len(moves):
+        loc, slot = pad_move
+        fill = np.tile(np.array([loc, slot, loc, slot], np.int32),
+                       (pad_to - len(moves), 1))
+        moves = np.concatenate([moves, fill], axis=0)
     return moves[:, 0], moves[:, 1], moves[:, 2], moves[:, 3]
 
 

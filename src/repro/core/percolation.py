@@ -1,0 +1,239 @@
+"""Percolation: pre-staged data movement between memory tiers.
+
+The paper's answer to accelerator-equipped nodes (Sec. V) is
+*percolation* — the runtime moves data and work to the fast-memory
+locality AHEAD of need instead of blocking on demand misses, and AGAS
+exists precisely so an object's global name survives that physical
+move.  This module renders the mechanism (DESIGN.md §4d):
+
+* **Tiers.**  Memory tiers are integer tags on AGAS localities
+  (`Tier.DEVICE` = accelerator HBM, `Tier.HOST` = host DRAM).
+  `tiered_domain` builds a LocalityDomain of N device localities (one
+  per KV shard) plus one host locality whose pool is ~10x larger —
+  demotion and promotion are ordinary `AGAS.migrate` calls, so a
+  page's `GlobalAddress` is stable across the vertical move exactly as
+  it is across a horizontal one (§4c).
+
+* **Copy parcels.**  A `CopyParcel` is the percolation unit: a batch
+  of same-sized payloads moving one direction between tiers.  Parcels
+  are *staged* into a `PercolationQueue` — the queue is the runtime's
+  visible record of copies in flight, and its counters (bytes moved
+  each way, prefetch hits vs demand misses) are the Fig 9 practice of
+  making the runtime's own data motion measurable.
+
+* **The transfer engine.**  `TransferEngine` executes parcels as
+  double-buffered asynchronous device<->host copies built on
+  `jax.device_put`: staging a promotion issues the host->device copy
+  immediately and returns without blocking, so the transfer overlaps
+  whatever compiled step runs next; committing it is a donated
+  scatter into the pool arrays.  Demotions issue
+  ``copy_to_host_async`` before materializing, so a batch of
+  offloaded pages streams out while the caller keeps scheduling.  At
+  most `max_inflight` promotions are staged at once (double
+  buffering): the prefetcher works one admission ahead of the
+  scheduler, never unboundedly far.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.localities import Locality, LocalityDomain
+
+
+class Tier(enum.IntEnum):
+    """Memory tiers, fast to slow.  Values are the AGAS locality tier
+    tags (`core/agas.py`), so ``agas.least_loaded(tier=Tier.DEVICE)``
+    is the fast-tier allocation policy."""
+
+    DEVICE = 0
+    HOST = 1
+
+
+def tiered_domain(n_device: int, n_host: int = 1) -> LocalityDomain:
+    """Device localities 0..n_device-1 followed by host localities.
+
+    The device localities are the KV shards of DESIGN.md §4c; the host
+    localities are simulated (they live in process memory whatever the
+    backend).  Pair with per-locality capacities and
+    ``tiers=domain_tiers(...)`` when building the AGAS directory.
+    """
+    locs = [Locality(i, (), "sim") for i in range(n_device)]
+    locs += [Locality(n_device + i, (), "host") for i in range(n_host)]
+    return LocalityDomain(tuple(locs))
+
+
+def domain_tiers(n_device: int, n_host: int = 1) -> List[int]:
+    return [int(Tier.DEVICE)] * n_device + [int(Tier.HOST)] * n_host
+
+
+@dataclasses.dataclass(frozen=True)
+class CopyParcel:
+    """One staged tier-crossing copy: a batch of page payloads moving
+    DEMOTE (device -> host) or PROMOTE (host -> device).  `key` names
+    the consumer (the request whose pages these are, or a prefix
+    digest), so a later commit can find its staged payload."""
+
+    key: Any
+    gids: Tuple[int, ...]
+    direction: str                    # "demote" | "promote"
+    nbytes: int
+
+
+class PercolationQueue:
+    """FIFO of staged copy parcels + the tier-traffic counters.
+
+    The queue holds parcels whose payloads are in flight; `pop(key)`
+    removes the parcel when its copy is committed (or abandoned).
+    Counters survive pops — they are cumulative for the life of the
+    pool and feed the serving engine's `stats()`.
+    """
+
+    def __init__(self) -> None:
+        self._q: "OrderedDict[Any, CopyParcel]" = OrderedDict()
+        self.demote_parcels = 0
+        self.promote_parcels = 0
+        self.demote_pages = 0
+        self.promote_pages = 0
+        self.demote_bytes = 0
+        self.promote_bytes = 0
+        # promotion latency split: a prefetch hit was staged before the
+        # consumer needed it (the copy ran under compute); a demand
+        # promote blocked the consumer for the full copy
+        self.prefetch_hits = 0
+        self.demand_promotes = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._q
+
+    def push(self, parcel: CopyParcel) -> None:
+        """Stage a parcel whose copy is in flight.  Staging does NOT
+        count toward the traffic totals — a staged promotion may be
+        abandoned (its consumer finished while queued); only `record`
+        at commit time moves the counters, so the byte totals measure
+        copies that actually landed."""
+        self._q[parcel.key] = parcel
+
+    def record(self, parcel: CopyParcel) -> None:
+        """Count a completed copy (demotions at materialization,
+        promotions at commit)."""
+        if parcel.direction == "demote":
+            self.demote_parcels += 1
+            self.demote_pages += len(parcel.gids)
+            self.demote_bytes += parcel.nbytes
+        else:
+            self.promote_parcels += 1
+            self.promote_pages += len(parcel.gids)
+            self.promote_bytes += parcel.nbytes
+
+    def pop(self, key: Any) -> Optional[CopyParcel]:
+        return self._q.pop(key, None)
+
+    def oldest_key(self) -> Optional[Any]:
+        return next(iter(self._q), None)
+
+    def record_promote_commit(self, prefetched: bool) -> None:
+        if prefetched:
+            self.prefetch_hits += 1
+        else:
+            self.demand_promotes += 1
+
+    def overlap(self) -> float:
+        """Fraction of promotions whose copy overlapped compute (was
+        staged ahead of need) — the percolation win, measurably."""
+        total = self.prefetch_hits + self.demand_promotes
+        return self.prefetch_hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "staged_parcels": len(self._q),
+            "demote_parcels": self.demote_parcels,
+            "promote_parcels": self.promote_parcels,
+            "demote_pages": self.demote_pages,
+            "promote_pages": self.promote_pages,
+            "offload_bytes": self.demote_bytes,
+            "promote_bytes": self.promote_bytes,
+            "prefetch_hits": self.prefetch_hits,
+            "demand_promotes": self.demand_promotes,
+            "copy_compute_overlap": self.overlap(),
+        }
+
+
+class TransferEngine:
+    """Double-buffered async device<->host transfers for copy parcels.
+
+    Promotions: `stage(key, gids, payload)` calls `jax.device_put` on
+    the host payload and returns immediately — JAX's async dispatch
+    runs the copy in the background, so the payload lands on device
+    while the current compiled step computes.  `take(key)` hands the
+    staged device arrays to the committer (a donated scatter into the
+    pool).  At most `max_inflight` promotions are staged (double
+    buffering); `stage` refuses further ones so the prefetcher cannot
+    run away from the scheduler.
+
+    Demotions: `to_host(arrays)` issues ``copy_to_host_async`` on
+    every array before materializing any of them, so a multi-array
+    offload streams out in one wave.
+    """
+
+    def __init__(self, max_inflight: int = 2) -> None:
+        self.max_inflight = int(max_inflight)
+        self.queue = PercolationQueue()
+        # key -> (gids, device arrays): gids recorded so a committer
+        # can verify the staged payload still matches what it needs
+        self._staged: "OrderedDict[Any, Tuple[tuple, Dict[str, Any]]]" \
+            = OrderedDict()
+
+    # -- promotion staging (host -> device, ahead of need) ------------
+    def stage(self, key: Any, gids: Sequence[int],
+              payload: Dict[str, np.ndarray]) -> bool:
+        """Begin the host->device copy of `payload` now; False if the
+        double buffer is full (or the key is already staged — staging
+        is idempotent and returns True)."""
+        import jax
+        if key in self._staged:
+            return True
+        if len(self._staged) >= self.max_inflight:
+            return False
+        gids = tuple(int(g) for g in gids)
+        self._staged[key] = (gids, {n: jax.device_put(a)
+                                    for n, a in payload.items()})
+        nbytes = sum(int(a.nbytes) for a in payload.values())
+        self.queue.push(CopyParcel(key, gids, "promote", nbytes))
+        return True
+
+    def take(self, key: Any
+             ) -> Optional[Tuple[tuple, Dict[str, Any]]]:
+        """(gids, staged device arrays) for `key`, or None (demand
+        miss).  Removes the parcel from the queue either way; the
+        committer records hit/miss via
+        `queue.record_promote_commit`."""
+        self.queue.pop(key)
+        return self._staged.pop(key, None)
+
+    def drop(self, key: Any) -> None:
+        """Abandon a staged promotion (its consumer left the queue)."""
+        self.queue.pop(key)
+        self._staged.pop(key, None)
+
+    def staged_keys(self) -> List[Any]:
+        return list(self._staged)
+
+    # -- demotion (device -> host) ------------------------------------
+    @staticmethod
+    def to_host(arrays: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Materialize device arrays on host, issuing every transfer
+        before blocking on any (one wave of DMA, not a chain)."""
+        for a in arrays.values():
+            start = getattr(a, "copy_to_host_async", None)
+            if start is not None:
+                start()
+        return {n: np.asarray(a) for n, a in arrays.items()}

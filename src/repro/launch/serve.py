@@ -9,6 +9,10 @@ Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
       --kv-shards 4          # sharded AGAS page pool (DESIGN.md §4c)
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --pages 16 --tiering --host-pages 64   # two-tier percolation:
+                             # preempted KV offloads to host DRAM and
+                             # restores on re-admission (DESIGN.md §4d)
 """
 
 from __future__ import annotations
@@ -41,6 +45,14 @@ def main():
                     help="AGAS localities the page pool is sharded "
                          "over (device-backed when the runtime has "
                          "one device per shard, simulated otherwise)")
+    ap.add_argument("--tiering", action="store_true",
+                    help="two-tier page pool (DESIGN.md §4d): cold "
+                         "prefix pages spill to host DRAM and a "
+                         "preempted request's KV is written back and "
+                         "restored instead of re-prefilled")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host-tier capacity in pages "
+                         "(0 = 4x the device pool)")
     args = ap.parse_args()
 
     import repro.configs as configs
@@ -58,7 +70,13 @@ def main():
                       n_pages=args.pages or None,
                       chunk_size=args.chunk_size or None,
                       step_tokens=args.step_tokens or None,
-                      kv_shards=args.kv_shards, mesh=mesh, **kw)
+                      kv_shards=args.kv_shards, mesh=mesh,
+                      tiering=args.tiering,
+                      host_pages=args.host_pages, **kw)
+    if args.tiering and hasattr(eng, "kvc"):
+        pool = eng.kvc.pool
+        print(f"[serve] two-tier pool: {pool.capacity} device pages "
+              f"+ {pool.host_pages} host pages (percolation on)")
     if args.kv_shards > 1 and hasattr(eng, "kvc"):
         backing = "mesh" if mesh is not None else "simulated"
         print(f"[serve] kv page pool: {args.kv_shards} shards "
@@ -97,6 +115,12 @@ def main():
             print(f"[serve] shards={s['kv_shards']} "
                   f"occupancy=[{occ}] "
                   f"page_migrations={s['page_migrations']}")
+        if s.get("tiering"):
+            print(f"[serve] tiering: resident={s['peak_resident']} "
+                  f"offloads={s['offloads']} restores={s['restores']} "
+                  f"offload_bytes={s['offload_bytes']} "
+                  f"promote_bytes={s['promote_bytes']} "
+                  f"overlap={s['copy_compute_overlap']:.2f}")
         print(f"[serve] ttft_p50={s['ttft_p50_ms']:.0f}ms "
               f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
               f"itl_p50={s['itl_p50_ms']:.1f}ms "

@@ -196,11 +196,17 @@ class _EngineBase:
         truncate-finished with its tokens delivered, and a preempted
         one must be too — its generated tokens are real work, never to
         be discarded through an error LCO."""
+        self._drop_item_kv(item)
         now = time.perf_counter()
         self._finish({"req": item["req"], "tokens": list(item["gen"]),
                       "prefill_s": 0.0, "t0": now,
                       "preempts": item.get("preempts", 0),
                       **self._latency_state(item, now)})
+
+    def _drop_item_kv(self, item: dict) -> None:
+        """Release any KV a queue item still owns (offloaded pages of
+        a written-back preemption).  No-op for engines without a
+        tiered pool."""
 
     def _fail_pending(self, err: Exception) -> None:
         """Fail every request still queued or active (engine exiting
@@ -212,6 +218,8 @@ class _EngineBase:
             if kvc is not None:
                 kvc.release(slot)
             self.free_slots.append(slot)
+        for item in self.queue:
+            self._drop_item_kv(item)
         self.queue.clear()
         for rid in list(self._futures):
             fut = self._futures.pop(rid)
@@ -419,6 +427,15 @@ class PagedServingEngine(_EngineBase):
     None for the automatic default).  ``mesh`` (with a "kv" axis of
     size kv_shards) device-backs the shards; without it the localities
     are simulated on one device with bit-identical results.
+
+    ``tiering=True`` adds the host DRAM tier (DESIGN.md §4d,
+    serving/tiering.py; ``host_pages`` sizes it, default 4x the device
+    pool): a preempted request's pages are written back to host and
+    restored on re-admission instead of re-prefilled, cold prefix
+    pages spill to host instead of dropping, and the step scheduler
+    stages the next admission's host->device copies while the current
+    batch computes.  Greedy outputs are token-identical with tiering
+    on or off.
     """
 
     _FULL_KV = True
@@ -427,7 +444,8 @@ class PagedServingEngine(_EngineBase):
                  max_len: int = 512, prefill_buckets=(64, 128, 256),
                  page_size: int = 16, n_pages: Optional[int] = None,
                  kv_shards: int = 1, mesh=None,
-                 rebalance_tolerance: Optional[int] = None):
+                 rebalance_tolerance: Optional[int] = None,
+                 tiering: bool = False, host_pages: int = 0):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets)
         if n_pages is None:
@@ -437,8 +455,13 @@ class PagedServingEngine(_EngineBase):
             # rounded up to fill every KV shard evenly
             n_pages = slots * (-(-max_len // page_size))
             n_pages = -(-n_pages // kv_shards) * kv_shards
+        if tiering and host_pages <= 0:
+            host_pages = 4 * n_pages       # host DRAM ~several x HBM
+        self._tiering = bool(tiering) and host_pages > 0
         self.kvc = PagedKVCache(cfg, slots, max_len, n_pages, page_size,
-                                n_shards=kv_shards, mesh=mesh)
+                                n_shards=kv_shards, mesh=mesh,
+                                host_pages=host_pages
+                                if self._tiering else 0)
         if rebalance_tolerance is None:
             rebalance_tolerance = max(
                 2, self.kvc.pool.pages_per_shard // 4)
@@ -450,6 +473,8 @@ class PagedServingEngine(_EngineBase):
             donate_argnums=(1,))
         self._seq = itertools.count()          # admission order
         self.preemptions = 0
+        self.offloads = 0       # preemptions that wrote KV back to host
+        self.restores = 0       # re-admissions that skipped prefill
         self.counters: List[dict] = []         # per-step telemetry
 
     # -- page-gated admission -----------------------------------------
@@ -497,10 +522,21 @@ class PagedServingEngine(_EngineBase):
             return None
         return padded, real, need
 
+    def _upcoming_allocs(self) -> int:
+        """Pages the CURRENT step's committed work will still take
+        (decode writes at a page boundary or COW) — the admission
+        watermark, so an admission can never be preempted away in the
+        very same step."""
+        return sum(1 for s in self.active if self.kvc.needs_alloc(s))
+
     def _admit(self) -> None:
         while self.queue and self.free_slots:
             item = self.queue[0]
             req = item["req"]
+            if item.get("snap") is not None:
+                if self._try_restore(item):
+                    continue
+                break                          # head-of-line blocking
             layout = self._admission_layout(item)
             if layout is None:
                 continue
@@ -510,8 +546,7 @@ class PagedServingEngine(_EngineBase):
             # watermark for active slots whose next write takes a page
             # (boundary alloc or COW) — otherwise an admission can be
             # preempted away in the very same step
-            upcoming = sum(1 for s in self.active
-                           if self.kvc.needs_alloc(s))
+            upcoming = self._upcoming_allocs()
             if need + upcoming > self.kvc.pool.free_pages:
                 break                          # head-of-line blocking
             self.queue.pop(0)
@@ -565,22 +600,123 @@ class PagedServingEngine(_EngineBase):
         moves = self.kvc.pool.plan_rotation()
         return self.kvc.migrate(moves) if moves else 0
 
+    # -- percolation: offload / restore / prefetch (DESIGN.md §4d) ----
+    def _try_restore(self, item: dict) -> bool:
+        """Re-admit an offloaded request by promoting its written-back
+        pages — KV restored byte-for-byte, no re-prefill.  False means
+        the device tier cannot hold it yet (head-of-line blocking,
+        exactly like a page-gated fresh admission)."""
+        snap = item["snap"]
+        req = item["req"]
+        need = self.kvc.restore_pages_needed(snap) + 1
+        if need + self._upcoming_allocs() > self.kvc.pool.free_pages:
+            return False
+        self.queue.pop(0)
+        slot = self.free_slots.pop(0)
+        try:
+            self.kvc.restore_slot(slot, snap,
+                                  staged_key=("restore", req.rid))
+        except PageExhausted:
+            # the free-page estimate raced a pinned page; the snapshot
+            # is still consistent — put everything back and wait
+            self.free_slots.append(slot)
+            self.queue.insert(0, item)
+            return False
+        self.restores += 1
+        now = time.perf_counter()
+        st = {
+            "req": req, "tokens": list(item["gen"]),
+            "phase": "decode",      # overridden for mid-prefill below
+            "prefill_s": item.get("prefill_s", 0.0),
+            "t0": now,
+            "seq": next(self._seq),
+            "preempts": item["preempts"],
+            "bucket": item["bucket"],
+            "admit_step": len(self.counters),
+            **self._latency_state(item, now),
+        }
+        resume = item.get("resume")
+        if resume is not None:          # offloaded mid-prefill: keep
+            st.update(phase="prefill",  # chunking where it stopped
+                      padded=resume["padded"], real=resume["real"],
+                      pos=resume["pos"], n_gen0=len(item["gen"]))
+        self.active[slot] = st
+        return True
+
+    def _drop_item_kv(self, item: dict) -> None:
+        snap = item.get("snap")
+        if snap is not None:
+            pool = self.kvc.pool
+            pool.xfer.drop(("restore", item["req"].rid))
+            self.kvc.drop_snapshot(snap)
+            item["snap"] = None
+
+    def _prefetch_percolation(self) -> None:
+        """Stage the next admissions' host->device copies NOW, so they
+        run while this step's batch computes (the §4d overlap model:
+        `jax.device_put` dispatches asynchronously; the double buffer
+        caps how far ahead the prefetcher works)."""
+        if not self._tiering:
+            return
+        for item in self.queue[:2]:
+            snap = item.get("snap")
+            if snap is not None and \
+                    self.kvc.restore_pages_needed(snap):
+                self.kvc.stage_restore(("restore", item["req"].rid),
+                                       snap)
+
+    def force_demote(self) -> int:
+        """Forced-eviction drill (and test hook): demote every
+        evictable cold device page to host between steps.  Everything
+        still decoding must be token-identical afterwards — evictable
+        pages are refcount-0 by construction (refcount pinning)."""
+        pool = self.kvc.pool
+        if not getattr(pool, "tiered", False):
+            return 0
+        moved = pool.demote_all_cold()
+        return moved
+
     # -- preemption under page pressure -------------------------------
     def _preempt(self, slot: int) -> None:
-        """Evict a request: free its pages, requeue it at the front
-        with its progress AND its original padded bucket, so
-        re-admission reconstructs the identical context layout and
-        resumes where it left off."""
+        """Evict a request: requeue it at the front with its progress
+        AND its original padded bucket.  With tiering on, its pages
+        are written back to the host tier (`KVSnapshot` in the queue
+        item) so re-admission restores the KV instead of re-running
+        prefill; otherwise — or when the host tier is full — they are
+        freed and re-admission reconstructs the identical context
+        layout by re-prefilling."""
         st = self.active.pop(slot)
-        self.kvc.release(slot)
+        snap = self.kvc.offload_slot(slot) if self._tiering else None
+        if snap is None:
+            self.kvc.release(slot)
+        else:
+            self.offloads += 1
         self.free_slots.append(slot)
         self.preemptions += 1
-        self.queue.insert(0, {"req": st["req"], "gen": st["tokens"],
-                              "preempts": st["preempts"] + 1,
-                              "bucket": st["bucket"],
-                              "t_submit": st["t_submit"],
-                              "ttft_s": st.get("ttft_s"),
-                              "tok_t": st.get("tok_t", [])})
+        item = {"req": st["req"], "gen": st["tokens"],
+                "preempts": st["preempts"] + 1,
+                "bucket": st["bucket"],
+                "snap": snap,
+                "prefill_s": st.get("prefill_s", 0.0),
+                "t_submit": st["t_submit"],
+                "ttft_s": st.get("ttft_s"),
+                "tok_t": st.get("tok_t", [])}
+        if snap is not None and st.get("phase") == "prefill":
+            item["resume"] = {"padded": st["padded"],
+                              "real": st["real"], "pos": st["pos"]}
+        if snap is None:
+            # pages forfeited: re-prefill is the costly path, so the
+            # victim goes back to the queue FRONT and reclaims its
+            # context at the first opportunity
+            self.queue.insert(0, item)
+        else:
+            # KV written back: preemption is cheap now, so the victim
+            # yields to fresh admissions (their first token is the
+            # latency that matters; this one's restore is one staged
+            # copy away whenever capacity returns) — the percolation
+            # dividend: many more requests stay concurrently resident
+            # than the device tier alone could hold
+            self.queue.append(item)
 
     def _decode_slots(self) -> List[int]:
         """Slots currently in the decode phase (every active slot for
@@ -649,10 +785,18 @@ class PagedServingEngine(_EngineBase):
             self.free_slots.append(slot)
         return done
 
+    def _offloaded_queued(self) -> int:
+        """Queued requests whose KV is resident in the host tier."""
+        return sum(1 for it in self.queue
+                   if it.get("snap") is not None)
+
     def step(self) -> int:
         """One batched decode step over all active slots."""
         self._maybe_rebalance()            # between-steps migration
         self._admit()
+        # stage the next admissions' host->device copies: they run
+        # under this step's compute (percolation, DESIGN.md §4d)
+        self._prefetch_percolation()
         # truncate requests whose next token has no cache room left
         # (bucket + generated reached max_len) instead of overflowing
         for slot in [s for s in self.active
@@ -672,6 +816,11 @@ class PagedServingEngine(_EngineBase):
             "t": time.perf_counter(),
             "queue_depth": len(self.queue),
             "active": len(self.active) + len(done),
+            # concurrently RESIDENT requests: decoding slots plus
+            # offloaded requests whose KV survives in the host tier —
+            # the capacity the tiered pool grows beyond HBM
+            "resident": len(self.active) + len(done)
+            + self._offloaded_queued(),
             "pages_used": pool.used_pages,
             "page_occupancy": pool.occupancy(),
             "preemptions": self.preemptions,
@@ -690,9 +839,13 @@ class PagedServingEngine(_EngineBase):
         ttfts = [x.ttft_s * 1e3 for x in self.completions
                  if x.ttft_s > 0.0]
         itls = [d * 1e3 for x in self.completions for d in x.itl_s]
-        return {
+        out = {
             "steps": len(c),
             "peak_active": max((x["active"] for x in c), default=0),
+            "peak_resident": max(
+                (x.get("resident", x["active"]) for x in c), default=0),
+            "mean_resident": _mean(
+                [x.get("resident", x["active"]) for x in c]),
             "peak_page_occupancy": max(
                 (x["page_occupancy"] for x in c), default=0.0),
             "mean_decode_ms": _mean([x["decode_ms"] for x in c]),
@@ -717,6 +870,14 @@ class PagedServingEngine(_EngineBase):
             "itl_p50_ms": _pct(itls, 50),
             "itl_p95_ms": _pct(itls, 95),
         }
+        # two-tier percolation telemetry (DESIGN.md §4d): offload /
+        # promote traffic, prefetch overlap, write-back effectiveness
+        out["tiering"] = bool(getattr(pool, "tiered", False))
+        if out["tiering"]:
+            out["offloads"] = self.offloads
+            out["restores"] = self.restores
+            out.update(pool.tier_stats())
+        return out
 
 
 class ChunkedPagedServingEngine(PagedServingEngine):
@@ -742,12 +903,14 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  chunk_size: Optional[int] = None,
                  step_tokens: Optional[int] = None,
                  kv_shards: int = 1, mesh=None,
-                 rebalance_tolerance: Optional[int] = None):
+                 rebalance_tolerance: Optional[int] = None,
+                 tiering: bool = False, host_pages: int = 0):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
                          page_size=page_size, n_pages=n_pages,
                          kv_shards=kv_shards, mesh=mesh,
-                         rebalance_tolerance=rebalance_tolerance)
+                         rebalance_tolerance=rebalance_tolerance,
+                         tiering=tiering, host_pages=host_pages)
         if chunk_size is None:
             chunk_size = 2 * page_size
         if chunk_size <= 0 or chunk_size % page_size:
@@ -772,10 +935,30 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             donate_argnums=(1,))
 
     # -- admission: gated on the first chunk, not the whole prompt ----
+    def _upcoming_allocs(self) -> int:
+        """The watermark counts EVERY allocation already committed for
+        this step: decode writes at a page boundary/COW, AND the pages
+        each mid-prefill slot's next chunk will take — prefill chunks
+        run right after admission, so ignoring them (a decode-only
+        count) would let an admission be preempted away in the very
+        same step."""
+        upcoming = sum(1 for s in self._decode_slots()
+                       if self.kvc.needs_alloc(s))
+        for s, st in self.active.items():
+            if st.get("phase") == "prefill":
+                nxt = min(st["pos"] + self.chunk_size, st["real"])
+                upcoming += self.kvc.pages_needed_chunk(
+                    st["padded"], st["pos"], nxt)
+        return upcoming
+
     def _admit(self) -> None:
         while self.queue and self.free_slots:
             item = self.queue[0]
             req = item["req"]
+            if item.get("snap") is not None:
+                if self._try_restore(item):
+                    continue
+                break                          # head-of-line blocking
             layout = self._admission_layout(item)
             if layout is None:
                 continue
@@ -784,19 +967,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             # the watermark); later chunks allocate as they are
             # scheduled and preempt under pressure
             first_end = min(self.chunk_size, real)
-            # the watermark counts EVERY allocation already committed
-            # for this step: decode writes at a page boundary/COW, AND
-            # the pages each mid-prefill slot's next chunk will take —
-            # prefill chunks run right after admission, so ignoring
-            # them (the old decode-only count) let an admission be
-            # preempted away in the very same step
-            upcoming = sum(1 for s in self._decode_slots()
-                           if self.kvc.needs_alloc(s))
-            for s, st in self.active.items():
-                if st.get("phase") == "prefill":
-                    nxt = min(st["pos"] + self.chunk_size, st["real"])
-                    upcoming += self.kvc.pages_needed_chunk(
-                        st["padded"], st["pos"], nxt)
+            upcoming = self._upcoming_allocs()
             need = self.kvc.pages_needed_chunk(padded, 0, first_end) + 1
             if need + upcoming > self.kvc.pool.free_pages:
                 break                          # head-of-line blocking
@@ -816,6 +987,21 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 "admit_step": len(self.counters),
                 **self._latency_state(item, now),
             }
+
+    def _prefetch_percolation(self) -> None:
+        """Chunked engines also percolate spilled PREFIX pages ahead
+        of the chunk that will share them: stage this chunk's and the
+        next chunk's host-resident prefix hits, so by the time
+        `begin_chunk` resolves them the copy has been running under
+        decode compute."""
+        super()._prefetch_percolation()
+        if not self._tiering:
+            return
+        for s, st in self.active.items():
+            if st.get("phase") == "prefill":
+                end = min(st["pos"] + 2 * self.chunk_size, st["real"])
+                self.kvc.prefetch_chunk(s, st["padded"], st["pos"],
+                                        end)
 
     # -- one prefill chunk as a schedulable task ----------------------
     def _run_chunk(self, slot: int, take: int) -> bool:
@@ -886,6 +1072,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         the step never exceeds its token budget."""
         self._maybe_rebalance()            # between-steps migration
         self._admit()
+        self._prefetch_percolation()
         # truncate decoding requests whose next token has no cache room
         for slot in [s for s in self._decode_slots()
                      if self.kvc.lengths[s] >= self.max_len]:
@@ -935,6 +1122,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             "t": time.perf_counter(),
             "queue_depth": len(self.queue),
             "active": len(self.active) + len(done),
+            "resident": len(self.active) + len(done)
+            + self._offloaded_queued(),
             "pages_used": pool.used_pages,
             "page_occupancy": pool.occupancy(),
             "preemptions": self.preemptions,
@@ -968,6 +1157,7 @@ def make_engine(params: Any, cfg: ArchConfig, *,
         kwargs.pop("step_tokens", None)
         return PagedServingEngine(params, cfg, **kwargs)
     for k in ("page_size", "n_pages", "chunk_size", "step_tokens",
-              "kv_shards", "mesh", "rebalance_tolerance"):
+              "kv_shards", "mesh", "rebalance_tolerance", "tiering",
+              "host_pages"):
         kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

@@ -55,8 +55,8 @@ import numpy as np
 
 from repro.core.agas import AGAS, AGASError, GlobalAddress
 from repro.core.localities import LocalityDomain
-from repro.core.parcels import MigrationPlan, migration_plan, \
-    plan_move_arrays
+from repro.core.parcels import MigrationPlan, canonical_size, \
+    migration_plan, plan_move_arrays
 from repro.models.config import ArchConfig
 from repro.models.transformer import PAGED_FAMILIES, init_paged_cache
 
@@ -182,6 +182,12 @@ class PagePool:
         self.shares = 0
         self.cow_copies = 0
         self.page_migrations = 0
+        # canonical migration programs (DESIGN.md §9.4): the flat path
+        # pads move lists to power-of-two size classes; the mesh path
+        # caches one compiled shard_map program per ppermute leg
+        # structure with the slot indices as traced operands
+        self._mig_cache: Dict[tuple, Any] = {}
+        self._mig_sizes: set = set()
 
     # -- allocation / refcounting -------------------------------------
     @property
@@ -215,7 +221,10 @@ class PagePool:
         keeps the shards balanced without a planner.
         """
         if locality is None:
-            locality = self.agas.least_loaded()
+            # tier 0 = device: fresh pages always land in fast memory;
+            # the host tier (tiered pools only) is reached exclusively
+            # by percolation, never by allocation
+            locality = self.agas.least_loaded(tier=0)
         try:
             addr = self.agas.allocate(locality)
         except AGASError:
@@ -242,6 +251,25 @@ class PagePool:
 
     def refcount(self, addr: GlobalAddress) -> int:
         return self._refs[addr.gid]
+
+    def discard(self, addr: GlobalAddress) -> None:
+        """Rollback decref for pages whose content was never written
+        (attach/begin_chunk exception paths).  Identical to `decref`
+        here; the tiered pool overrides it to bypass prefix-cache
+        retention — a retained-but-unwritten page would serve garbage
+        to a later prefix hit."""
+        self.decref(addr)
+
+    def ensure_device(self, addr: GlobalAddress) -> None:
+        """Guarantee a page is resident in fast memory before its row
+        is resolved.  Single-tier pools have nowhere else a page could
+        be; the tiered pool (serving/tiering.py) promotes here."""
+
+    def page_cost(self, key: Tuple[bytes, int]) -> int:
+        """Fast-tier rows acquiring this prefix key will consume: 0 on
+        a hit, 1 on a miss.  The tiered pool also charges 1 for a hit
+        on a host-resident page (promotion takes a device row)."""
+        return 0 if self.lookup_prefix(key) is not None else 1
 
     def row(self, addr: GlobalAddress) -> int:
         """Physical row of a page: ``locality * rows_per_shard + slot``
@@ -380,10 +408,50 @@ class PagePool:
 
     def _apply_plan_flat(self, plan: MigrationPlan) -> None:
         # only reachable sharded: a 1-shard pool has no inter-locality
-        # moves, so migration_plan always returns an empty plan there
-        args = tuple(jnp.asarray(a) for a in plan_move_arrays(plan))
+        # moves, so migration_plan always returns an empty plan there.
+        # Moves are padded to a canonical power-of-two count with
+        # null-row self-copies, so `_permute_rows_sharded` compiles
+        # once per size class, not once per exact move count.
+        pad = canonical_size(len(plan.moves))
+        self._mig_sizes.add(pad)
+        args = tuple(jnp.asarray(a) for a in plan_move_arrays(
+            plan, pad_to=pad, pad_move=(0, self.null_row)))
         self.pages["k"] = _permute_rows_sharded(self.pages["k"], *args)
         self.pages["v"] = _permute_rows_sharded(self.pages["v"], *args)
+
+    def _mesh_plan_fn(self, perms: tuple):
+        """The compiled ppermute program for one leg structure.
+
+        `perms` (the per-leg (src, dst) pairs) must be compile-time
+        constants — they become the ppermute wiring — but the slot
+        indices are TRACED operands, so every plan with the same leg
+        structure reuses one cached program: repeated drills and
+        rebalances stop paying a recompile per call (DESIGN.md §9.4).
+        """
+        fn = self._mig_cache.get(perms)
+        if fn is not None:
+            return fn
+        from jax import lax
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compat import shard_map
+        spec = P(None, self.kv_axis, None, None, None, None)
+        axis = self.kv_axis
+
+        def body(cur, gs, ss, recv):
+            i = lax.axis_index(axis)
+            orig = cur                   # pre-plan snapshot
+            for leg, perm in enumerate(perms):
+                payload = jnp.take(orig[:, 0], gs[leg, i], axis=1)
+                got = lax.ppermute(payload, axis, perm)
+                cur = jnp.where(recv[leg, i],
+                                cur.at[:, 0, ss[leg, i]].set(got), cur)
+            return cur
+
+        fn = jax.jit(shard_map(body, mesh=self.mesh,
+                               in_specs=(spec, P(), P(), P()),
+                               out_specs=spec))
+        self._mig_cache[perms] = fn
+        return fn
 
     def _apply_plan_mesh(self, plan: MigrationPlan) -> None:
         """Execute a plan's legs as `lax.ppermute` between devices.
@@ -393,35 +461,17 @@ class PagePool:
         clobber a payload before it is read — the same snapshot
         semantics the flat lowering gets from gather-before-scatter.
         """
-        from jax import lax
-        from jax.sharding import PartitionSpec as P
-        from repro.distributed.compat import shard_map
-        legs = []
-        for perm, gs, ss in zip(plan.lowering.perms,
-                                plan.lowering.gather_slots,
-                                plan.lowering.scatter_slots):
-            recv = np.zeros(self.n_shards, bool)
+        perms = tuple(tuple(p) for p in plan.lowering.perms)
+        gs = jnp.asarray(np.stack(plan.lowering.gather_slots))
+        ss = jnp.asarray(np.stack(plan.lowering.scatter_slots))
+        recv = np.zeros((len(perms), self.n_shards), bool)
+        for leg, perm in enumerate(perms):
             for _, d in perm:
-                recv[d] = True
-            legs.append((tuple(perm), jnp.asarray(gs), jnp.asarray(ss),
-                         jnp.asarray(recv)))
-        spec = P(None, self.kv_axis, None, None, None, None)
-        axis = self.kv_axis
-
-        def body(cur):
-            i = lax.axis_index(axis)
-            orig = cur                   # pre-plan snapshot
-            for perm, gs, ss, recv in legs:
-                payload = jnp.take(orig[:, 0], gs[i], axis=1)
-                got = lax.ppermute(payload, axis, perm)
-                cur = jnp.where(recv[i],
-                                cur.at[:, 0, ss[i]].set(got), cur)
-            return cur
-
-        fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=spec,
-                               out_specs=spec))
-        self.pages["k"] = fn(self.pages["k"])
-        self.pages["v"] = fn(self.pages["v"])
+                recv[leg, d] = True
+        recv = jnp.asarray(recv)
+        fn = self._mesh_plan_fn(perms)
+        self.pages["k"] = fn(self.pages["k"], gs, ss, recv)
+        self.pages["v"] = fn(self.pages["v"], gs, ss, recv)
 
 
 @dataclasses.dataclass
@@ -431,6 +481,20 @@ class _SlotState:
     # running blake2b prefix chain for chunked prefill: hashes exactly
     # the tokens already resident, so each chunk hashes only its own
     # tokens instead of re-walking the prefix (None = not chunking)
+    chain: Optional[Any] = None
+
+
+@dataclasses.dataclass
+class KVSnapshot:
+    """A preempted slot's KV, written back to the host tier
+    (DESIGN.md §4d).  Holds one refcount on every page — the pages'
+    global names — plus the position clock and the chunked-prefill
+    hash chain, so `PagedKVCache.restore_slot` rebuilds the slot
+    exactly as preemption found it: re-admission resumes decoding (or
+    mid-prompt chunking) without re-running prefill."""
+
+    addrs: List[GlobalAddress]
+    length: int
     chain: Optional[Any] = None
 
 
@@ -445,10 +509,17 @@ class PagedKVCache:
 
     def __init__(self, cfg: ArchConfig, slots: int, max_len: int,
                  n_pages: int, page_size: int, dtype=None, *,
-                 n_shards: int = 1, mesh=None, kv_axis: str = "kv"):
-        self.pool = PagePool(cfg, n_pages, page_size, dtype,
-                             n_shards=n_shards, mesh=mesh,
-                             kv_axis=kv_axis)
+                 n_shards: int = 1, mesh=None, kv_axis: str = "kv",
+                 host_pages: int = 0):
+        if host_pages > 0:
+            from repro.serving.tiering import TieredPagePool
+            self.pool: PagePool = TieredPagePool(
+                cfg, n_pages, page_size, dtype, n_shards=n_shards,
+                mesh=mesh, kv_axis=kv_axis, host_pages=host_pages)
+        else:
+            self.pool = PagePool(cfg, n_pages, page_size, dtype,
+                                 n_shards=n_shards, mesh=mesh,
+                                 kv_axis=kv_axis)
         self.slots = int(slots)
         self.max_len = int(max_len)
         self.max_pages_slot = -(-self.max_len // page_size)
@@ -465,8 +536,8 @@ class PagedKVCache:
     def pages_needed(self, padded_tokens: np.ndarray) -> int:
         """Fresh pages a prefill would allocate (prefix hits excluded)."""
         ps = self.pool.page_size
-        return sum(1 for key in page_keys(padded_tokens, ps)
-                   if self.pool.lookup_prefix(key) is None)
+        return sum(self.pool.page_cost(key)
+                   for key in page_keys(padded_tokens, ps))
 
     def pages_needed_chunk(self, padded_tokens: np.ndarray,
                            start: int, end: int) -> int:
@@ -479,8 +550,7 @@ class PagedKVCache:
         """
         ps = self.pool.page_size
         keys = page_keys(padded_tokens[:end], ps)[start // ps:]
-        return sum(1 for key in keys
-                   if self.pool.lookup_prefix(key) is None)
+        return sum(self.pool.page_cost(key) for key in keys)
 
     # -- prefill attach ------------------------------------------------
     def attach(self, slot: int, padded_tokens: np.ndarray,
@@ -501,21 +571,34 @@ class PagedKVCache:
         keys = page_keys(padded_tokens, ps)
         acquired: List[GlobalAddress] = []
         fresh: List[int] = []               # page indices to write
+        fresh_gids: set = set()
         try:
             for i, key in enumerate(keys):
                 shared = self.pool.lookup_prefix(key)
                 if shared is not None:
+                    # incref first (pin, and into `acquired` so a
+                    # failed promotion rolls it back), THEN promote: a
+                    # spilled page being promoted must not be
+                    # eviction's candidate
                     self.pool.incref(shared)
-                    self.pool.shares += 1
                     acquired.append(shared)
+                    self.pool.ensure_device(shared)
+                    self.pool.shares += 1
                 else:
                     addr = self.pool.alloc()
                     self.pool.register_prefix(key, addr)
                     acquired.append(addr)
                     fresh.append(i)
+                    fresh_gids.add(addr.gid)
         except PageExhausted:
+            # rollback: only THIS call's fresh (never-written) pages
+            # must bypass retention; shared hits hold valid content
+            # and go back to the cache via plain decref
             for a in acquired:
-                self.pool.decref(a)
+                if a.gid in fresh_gids:
+                    self.pool.discard(a)
+                else:
+                    self.pool.decref(a)
             raise
         if fresh:
             # one batched whole-page scatter (zero-padded tail on the
@@ -581,22 +664,30 @@ class PagedKVCache:
             keys.append((chain.digest(), len(span)))
         acquired: List[GlobalAddress] = []
         rows: List[int] = []
+        fresh_gids: set = set()
         try:
             for key in keys:
                 shared = self.pool.lookup_prefix(key)
                 if shared is not None:
-                    self.pool.incref(shared)
-                    self.pool.shares += 1
+                    self.pool.incref(shared)        # pin, then promote
                     acquired.append(shared)
+                    self.pool.ensure_device(shared)
+                    self.pool.shares += 1
                     rows.append(self.pool.null_row)
                 else:
                     addr = self.pool.alloc()
                     self.pool.register_prefix(key, addr)
                     acquired.append(addr)
+                    fresh_gids.add(addr.gid)
                     rows.append(self.pool.row(addr))
         except PageExhausted:
+            # fresh (unwritten) pages bypass retention; shared hits
+            # return to the prefix cache with their content intact
             for a in acquired:
-                self.pool.decref(a)
+                if a.gid in fresh_gids:
+                    self.pool.discard(a)
+                else:
+                    self.pool.decref(a)
             raise
         base = start // ps
         for i, a in enumerate(acquired):
@@ -667,6 +758,110 @@ class PagedKVCache:
         self.lengths[slot] = 0
         self.write_rows[slot] = null
         self.write_offs[slot] = 0
+
+    # -- percolation: offload / restore (DESIGN.md §4d) ---------------
+    def offload_slot(self, slot: int) -> Optional[KVSnapshot]:
+        """Write back a preempted slot's KV to the host tier instead
+        of freeing it.
+
+        Exclusively-owned pages demote to host as one copy parcel;
+        prefix-shared pages stay on device, pinned by their other
+        holders — either way the snapshot keeps this slot's refcount
+        on every page.  Returns None when the pool is untiered or the
+        host tier cannot hold the write-back (the caller falls back to
+        `release` + re-prefill).  The slot is left empty and reusable.
+        """
+        pool = self.pool
+        st = self._state[slot]
+        if not getattr(pool, "tiered", False) or not st.addrs:
+            return None
+        if pool.offload_pages(st.addrs, key=("offload", slot,
+                                             st.length)) is None:
+            return None
+        snap = KVSnapshot(list(st.addrs), st.length,
+                          st.chain.copy() if st.chain is not None
+                          else None)
+        st.addrs = []
+        st.length = 0
+        st.chain = None
+        null = pool.null_row
+        self.tables[slot, :] = null
+        self.lengths[slot] = 0
+        self.write_rows[slot] = null
+        self.write_offs[slot] = 0
+        return snap
+
+    def restore_pages_needed(self, snap: KVSnapshot) -> int:
+        """Device rows restoring this snapshot will consume (its
+        host-resident pages; device-resident shared ones are free)."""
+        return sum(1 for a in snap.addrs
+                   if not self.pool.on_device(a))
+
+    def stage_restore(self, key: Any, snap: KVSnapshot) -> bool:
+        """Begin the host->device copy of a snapshot's pages NOW
+        (double-buffered), so a later `restore_slot` commits a copy
+        that already ran under compute."""
+        return self.pool.stage_promote(key, snap.addrs)
+
+    def restore_slot(self, slot: int, snap: KVSnapshot,
+                     staged_key: Any = None) -> None:
+        """Re-admit an offloaded request: promote its pages back to
+        device (using the staged payload when one matches) and rebuild
+        the slot — block table, position clock, hash chain — exactly
+        as preemption left it.  Raises `PageExhausted` (snapshot still
+        valid, retry later) when the device tier cannot hold it."""
+        st = self._state[slot]
+        assert not st.addrs, f"slot {slot} already attached"
+        self.pool.promote_pages(snap.addrs, staged_key=staged_key)
+        st.addrs = list(snap.addrs)
+        st.length = snap.length
+        st.chain = snap.chain.copy() if snap.chain is not None else None
+        self.lengths[slot] = snap.length
+        for i, a in enumerate(st.addrs):
+            self.tables[slot, i] = self.pool.row(a)
+
+    def drop_snapshot(self, snap: KVSnapshot) -> None:
+        """Release a snapshot's refcounts (its request finished or
+        failed while still queued) — host-resident pages free their
+        host rows; prefix-owned ones may be retained cold."""
+        for a in snap.addrs:
+            self.pool.decref(a)
+        snap.addrs = []
+
+    def prefetch_chunk(self, slot: int, padded_tokens: np.ndarray,
+                       start: int, end: int) -> int:
+        """Stage the promotion of any spilled prefix pages chunk
+        [start, end) will share — percolation ahead of the chunk that
+        needs them.  Returns pages staged (best effort: the double
+        buffer may be full).
+
+        Hashes only [start, end) by extending a copy of the slot's
+        running chain (the begin_chunk trick), and bails immediately
+        when nothing lives on the host tier — the common no-spill case
+        costs one integer compare, not a prefix walk.
+        """
+        pool = self.pool
+        if not getattr(pool, "tiered", False) or pool.host_used == 0:
+            return 0
+        ps = pool.page_size
+        st = self._state[slot]
+        if st.chain is not None:
+            chain = st.chain.copy()
+        else:
+            chain = hashlib.blake2b(digest_size=16)
+            if start:
+                chain.update(np.asarray(padded_tokens[:start],
+                                        np.int32).tobytes())
+        staged = 0
+        for pstart in range(start, end, ps):
+            span = np.asarray(
+                padded_tokens[pstart:min(pstart + ps, end)], np.int32)
+            chain.update(span.tobytes())
+            addr = pool.lookup_prefix((chain.digest(), len(span)))
+            if addr is not None and not pool.on_device(addr):
+                if pool.stage_promote(("page", addr.gid), [addr]):
+                    staged += 1
+        return staged
 
     # -- inter-shard migration (DESIGN.md §4c) ------------------------
     def refresh_tables(self) -> None:

@@ -1,0 +1,482 @@
+"""Two-tier AGAS page pool: device HBM + host DRAM (DESIGN.md §4d).
+
+`TieredPagePool` extends the sharded pool of §4c with the vertical
+memory axis the paper calls *percolation*: device HBM is the scarce
+tier, host DRAM is ~10x larger, and pages move between them without
+their `GlobalAddress` changing — demotion and promotion are ordinary
+`AGAS.migrate` calls onto a host locality appended to the directory's
+device shards (`core/percolation.tiered_domain`).  Block tables only
+ever resolve device-resident rows; the pool's contract is that every
+page referenced by an *active* decode slot is device-resident, and
+everything else is fair game for the slow tier.
+
+Three mechanisms live here:
+
+* **LRU eviction with refcount pinning.**  A page whose refcount
+  drops to 0 while it is still the prefix index's owner is *retained*
+  cold instead of freed (prefix-cache spill): a later request with
+  the same prefix shares it by refcount revival, skipping both the
+  page write and — once compute-skip lands — the prefill work.  Cold
+  pages form an LRU list; when allocation finds no free device row,
+  the least-recently-used cold device page is demoted to host (or
+  dropped outright when the host tier is full too).  Pages with
+  refcount > 0 are pinned: eviction never touches them.
+
+* **Write-back offload.**  A preempted request's exclusively-owned
+  pages (`refcount == 1`) demote to host as one batched copy parcel;
+  the request's queue item keeps the refcounts through a `KVSnapshot`
+  (serving/kvcache.py), so re-admission *restores* the KV byte-for-
+  byte instead of re-running prefill.  Prefix pages it shared with
+  still-active requests stay on device, pinned by their refcounts.
+
+* **Staged promotion.**  `stage_promote` gathers a snapshot's
+  host-resident payloads and hands them to the percolation
+  `TransferEngine`, whose `jax.device_put` begins the host->device
+  copy immediately; the engine's step scheduler stages the next
+  admission's pages while the current decode batch runs, and
+  `promote_pages` commits the staged payload with a donated scatter —
+  a prefetch hit means the copy ran entirely under compute.
+
+Transfers are padded to canonical power-of-two batch sizes (extra
+gather rows read the null page, extra scatter rows write it), so the
+compiled transfer programs are reused across arbitrary batch sizes
+instead of recompiling per count — the same trick
+`PagePool.migrate_pages` uses for its permutation programs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agas import AGAS, GlobalAddress
+from repro.core.parcels import canonical_size as canon_batch
+from repro.core.percolation import (CopyParcel, Tier, TransferEngine,
+                                    domain_tiers, tiered_domain)
+from repro.models.config import ArchConfig
+from repro.serving.kvcache import (PageExhausted, PagePool,
+                                   _scatter_rows, _scatter_rows_sharded)
+
+
+@jax.jit
+def _gather_rows(arr, idx):
+    return arr[:, idx]
+
+
+@jax.jit
+def _gather_rows_sharded(arr, loc, slot):
+    return arr[:, loc, slot]
+
+
+class TieredPagePool(PagePool):
+    """PagePool with a host DRAM tier behind the device shards.
+
+    ``host_pages`` sizes the slow tier.  The AGAS directory gains one
+    host locality (id ``n_shards``, tier `Tier.HOST`) with its own
+    capacity; `alloc` still places fresh pages on the least-loaded
+    DEVICE shard — the host tier is reached only by explicit
+    percolation (demote/promote), never by allocation.
+    """
+
+    tiered = True
+
+    def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
+                 dtype=None, *, n_shards: int = 1, mesh=None,
+                 kv_axis: str = "kv", host_pages: int = 0):
+        super().__init__(cfg, n_pages, page_size, dtype,
+                         n_shards=n_shards, mesh=mesh, kv_axis=kv_axis)
+        if host_pages <= 0:
+            raise ValueError(
+                f"host_pages {host_pages} must be positive "
+                "(use PagePool for a single-tier pool)")
+        self.host_pages = int(host_pages)
+        self.host_locality = self.n_shards
+        # rebuild the directory tiered: device shards 0..n_shards-1
+        # keep their per-shard capacity, locality n_shards is the host
+        # pool (nothing is allocated yet, so the swap is safe)
+        self.agas = AGAS(
+            tiered_domain(self.n_shards),
+            [self.pages_per_shard] * self.n_shards + [self.host_pages],
+            space="kvpage", tiers=domain_tiers(self.n_shards))
+        dt = self.pages["k"].dtype
+        shape = (cfg.n_layers, self.host_pages, self.page_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+        # the host tier's payload store: plain process memory, written
+        # by demotions and read by (staged) promotions
+        self.host: Dict[str, np.ndarray] = {
+            "k": np.zeros(shape, dt), "v": np.zeros(shape, dt)}
+        self.xfer = TransferEngine(max_inflight=2)
+        # LRU of retained refcount-0 pages (gid -> None, oldest first);
+        # residency (device vs host) is the directory's to answer
+        self._cold: Dict[int, None] = {}
+        self.evictions = 0       # cold pages demoted under pressure
+        self.cold_drops = 0      # retained pages dropped entirely
+        self.offloaded = 0       # pages written back at preemption
+        self.promoted = 0        # pages brought back to device
+
+    # -- residency ----------------------------------------------------
+    def tier_of(self, addr: GlobalAddress) -> Tier:
+        return Tier(self.agas.tier_of(self.agas.locality_of(addr)))
+
+    def on_device(self, addr: GlobalAddress) -> bool:
+        return self.agas.locality_of(addr) < self.n_shards
+
+    def host_slot(self, addr: GlobalAddress) -> int:
+        loc, slot = self.agas.lookup(addr)
+        assert loc == self.host_locality, \
+            f"gid {addr.gid} is not host-resident"
+        return slot
+
+    # -- accounting (per tier) ----------------------------------------
+    @property
+    def device_free_rows(self) -> int:
+        return sum(self.agas.free_count(l)
+                   for l in range(self.n_shards))
+
+    @property
+    def host_free_rows(self) -> int:
+        return self.agas.free_count(self.host_locality)
+
+    @property
+    def host_used(self) -> int:
+        return len(self.agas.residents(self.host_locality))
+
+    def cold_count(self, tier: Optional[Tier] = None) -> int:
+        if tier is None:
+            return len(self._cold)
+        return sum(1 for g in self._cold
+                   if self.tier_of(GlobalAddress(g, self.agas.space))
+                   == tier)
+
+    @property
+    def free_pages(self) -> int:
+        """The admission signal: device rows available now plus cold
+        device pages an allocation may evict (refcount-0, unpinned)."""
+        return self.device_free_rows + self.cold_count(Tier.DEVICE)
+
+    def occupancy(self) -> float:
+        """Fraction of DEVICE rows in use (live or cold) — the HBM
+        pressure gauge; host-resident pages do not count."""
+        return (self.capacity - self.device_free_rows) \
+            / max(self.capacity, 1)
+
+    def shard_used(self) -> List[int]:
+        # device shards only: the host locality is not a load-balance
+        # target (plan_rebalance/plan_rotation iterate this)
+        return [int(n) for n in self.agas.load()[:self.n_shards]]
+
+    def page_bytes(self) -> int:
+        """Bytes one page occupies (k + v, all layers)."""
+        k = self.pages["k"]
+        per_row = int(np.prod(k.shape[-3:])) * k.shape[0] * k.dtype.itemsize
+        return 2 * per_row
+
+    # -- refcount lifecycle: retention + revival ----------------------
+    def refcount(self, addr: GlobalAddress) -> int:
+        return self._refs.get(addr.gid, 0)      # cold pages answer 0
+
+    def incref(self, addr: GlobalAddress) -> None:
+        if addr.gid in self._cold:              # revive a cold page
+            del self._cold[addr.gid]
+            self._refs[addr.gid] = 1
+        else:
+            self._refs[addr.gid] += 1
+
+    def decref(self, addr: GlobalAddress) -> None:
+        self._refs[addr.gid] -= 1
+        if self._refs[addr.gid] > 0:
+            return
+        del self._refs[addr.gid]
+        key = self._key_of.get(addr.gid)
+        if key is not None and \
+                self._prefix.get(key) is not None and \
+                self._prefix[key].gid == addr.gid:
+            # prefix-cache spill: the index still owns this page —
+            # retain it cold (LRU tail = most recently used) instead
+            # of freeing; a later identical prefix revives it
+            self._cold[addr.gid] = None
+            return
+        self._key_of.pop(addr.gid, None)
+        self.agas.free(addr)
+
+    def discard(self, addr: GlobalAddress) -> None:
+        """Rollback decref: never retain (the page's content may not
+        have been written — attach/begin_chunk register the prefix key
+        before the batched page write lands)."""
+        self._refs[addr.gid] -= 1
+        if self._refs[addr.gid] > 0:
+            return
+        del self._refs[addr.gid]
+        key = self._key_of.pop(addr.gid, None)
+        if key is not None:
+            cur = self._prefix.get(key)
+            if cur is not None and cur.gid == addr.gid:
+                del self._prefix[key]
+        self.agas.free(addr)
+
+    def _drop_cold(self, gid: int) -> None:
+        """Drop a retained page entirely (either tier)."""
+        addr = GlobalAddress(gid, self.agas.space)
+        self.xfer.drop(("page", gid))    # gids never recycle: a
+        del self._cold[gid]              # staged copy can't be claimed
+        key = self._key_of.pop(gid, None)
+        if key is not None:
+            cur = self._prefix.get(key)
+            if cur is not None and cur.gid == gid:
+                del self._prefix[key]
+        self.agas.free(addr)
+        self.cold_drops += 1
+
+    # -- allocation with eviction -------------------------------------
+    def alloc(self, locality: Optional[int] = None) -> GlobalAddress:
+        """Allocate a fresh device page, evicting LRU cold pages when
+        every device row is taken.  Pages with refcount > 0 are never
+        evicted, so exhaustion with no cold pages still raises
+        `PageExhausted` (the engine's preemption signal)."""
+        while True:
+            try:
+                return super().alloc(locality)
+            except PageExhausted:
+                if not self._evict_one():
+                    raise
+
+    def _evict_one(self) -> bool:
+        """Demote (or drop) the LRU cold DEVICE page; False if no
+        device page is evictable."""
+        for gid in self._cold:                  # oldest first
+            addr = GlobalAddress(gid, self.agas.space)
+            if self.on_device(addr):
+                if self.host_free_rows > 0:
+                    self._demote([addr], key=("evict", gid))
+                    self.evictions += 1
+                else:
+                    self._drop_cold(gid)
+                return True
+        return False
+
+    # -- demote: device -> host ---------------------------------------
+    def _demote(self, addrs: Sequence[GlobalAddress], key: Any) -> None:
+        """One batched copy parcel device->host; directory moves are
+        `AGAS.migrate`, so every global name survives.  All `addrs`
+        must be device-resident and the host tier must have room."""
+        if not addrs:
+            return
+        n = len(addrs)
+        rows = [self.row(a) for a in addrs]
+        pad = canon_batch(n)
+        if self.sharded:
+            loc, slot = self._split_rows(
+                rows + [self.null_row] * (pad - n))
+            loc, slot = jnp.asarray(loc), jnp.asarray(slot)
+            spans = {nm: _gather_rows_sharded(self.pages[nm], loc, slot)
+                     for nm in ("k", "v")}
+        else:
+            idx = jnp.asarray(rows + [self.null_row] * (pad - n),
+                              jnp.int32)
+            spans = {nm: _gather_rows(self.pages[nm], idx)
+                     for nm in ("k", "v")}
+        payload = self.xfer.to_host(spans)      # one DMA wave out
+        self.xfer.queue.record(CopyParcel(
+            key, tuple(a.gid for a in addrs), "demote",
+            n * self.page_bytes()))
+        for i, a in enumerate(addrs):
+            self.agas.migrate(a, self.host_locality)
+            hs = self.host_slot(a)
+            self.host["k"][:, hs] = payload["k"][:, i]
+            self.host["v"][:, hs] = payload["v"][:, i]
+
+    def _make_host_room(self, n: int) -> bool:
+        """Free host rows by dropping LRU cold HOST pages; False if
+        even that cannot make room for `n` demotions."""
+        while self.host_free_rows < n:
+            victim = next((g for g in self._cold
+                           if not self.on_device(
+                               GlobalAddress(g, self.agas.space))),
+                          None)
+            if victim is None:
+                return False
+            self._drop_cold(victim)
+        return True
+
+    # -- write-back offload (preemption path) -------------------------
+    def offloadable(self, addrs: Sequence[GlobalAddress]
+                    ) -> List[GlobalAddress]:
+        """The subset of a slot's pages write-back would demote:
+        exclusively owned (refcount 1) and device-resident.  Shared
+        pages stay put, pinned by their other holders."""
+        return [a for a in addrs
+                if self._refs.get(a.gid, 0) == 1 and self.on_device(a)]
+
+    def offload_pages(self, addrs: Sequence[GlobalAddress],
+                      key: Any) -> Optional[int]:
+        """Write back a preempted slot's exclusive pages to host as
+        one copy parcel; returns pages demoted, or None when the host
+        tier cannot hold them (the caller falls back to freeing)."""
+        demote = self.offloadable(addrs)
+        if not self._make_host_room(len(demote)):
+            return None
+        self._demote(demote, key=key)
+        self.offloaded += len(demote)
+        return len(demote)
+
+    # -- promote: host -> device --------------------------------------
+    def _host_payload(self, addrs: Sequence[GlobalAddress], pad: int
+                      ) -> Dict[str, np.ndarray]:
+        slots = [self.host_slot(a) for a in addrs]
+        out = {}
+        for nm in ("k", "v"):
+            span = self.host[nm][:, slots]
+            if pad > len(slots):
+                w = [(0, 0)] * span.ndim
+                w[1] = (0, pad - len(slots))
+                span = np.pad(span, w)
+            out[nm] = span
+        return out
+
+    def stage_promote(self, key: Any,
+                      addrs: Sequence[GlobalAddress]) -> bool:
+        """Begin the host->device copy of every host-resident page in
+        `addrs` now (double-buffered; the copy overlaps whatever runs
+        next).  True if staged (or nothing needs promoting)."""
+        todo = [a for a in addrs if not self.on_device(a)]
+        if not todo:
+            return True
+        pad = canon_batch(len(todo))
+        return self.xfer.stage(key, [a.gid for a in todo],
+                               self._host_payload(todo, pad))
+
+    def _device_row_for(self, addr: GlobalAddress) -> None:
+        """Migrate one host page onto the least-loaded device shard,
+        evicting cold device pages as needed."""
+        while True:
+            loc = self.agas.least_loaded(tier=int(Tier.DEVICE))
+            if self.agas.free_count(loc) > 0:
+                self.agas.migrate(addr, loc)
+                return
+            if not self._evict_one():
+                raise PageExhausted(
+                    f"device tier full promoting gid {addr.gid} "
+                    f"({self.capacity} device pages, none evictable)")
+
+    def promote_pages(self, addrs: Sequence[GlobalAddress],
+                      staged_key: Any = None) -> int:
+        """Ensure every page in `addrs` is device-resident.
+
+        Uses the staged payload under `staged_key` when it matches
+        (prefetch hit: the copy already ran under compute); otherwise
+        issues the copy on demand.  Returns pages promoted.  Raises
+        `PageExhausted` when the device tier cannot hold them even
+        after evicting every cold page — already-promoted pages stay
+        promoted (the snapshot remains consistent; a retry finishes
+        the rest).
+        """
+        todo = [a for a in addrs if not self.on_device(a)]
+        if not todo:
+            if staged_key is not None:
+                self.xfer.drop(staged_key)
+            self._drop_page_staging(addrs)
+            return 0
+        pad = canon_batch(len(todo))
+        staged = self.xfer.take(staged_key) \
+            if staged_key is not None else None
+        prefetched = staged is not None and \
+            staged[0] == tuple(a.gid for a in todo)
+        if prefetched:
+            payload = staged[1]
+        else:
+            payload = {nm: jax.device_put(a) for nm, a in
+                       self._host_payload(todo, pad).items()}
+        for a in todo:
+            self._device_row_for(a)
+        rows = [self.row(a) for a in todo]
+        if self.sharded:
+            loc, slot = self._split_rows(
+                rows + [self.null_row] * (pad - len(rows)))
+            loc, slot = jnp.asarray(loc), jnp.asarray(slot)
+            self.pages["k"] = _scatter_rows_sharded(
+                self.pages["k"], loc, slot, payload["k"])
+            self.pages["v"] = _scatter_rows_sharded(
+                self.pages["v"], loc, slot, payload["v"])
+        else:
+            idx = jnp.asarray(rows + [self.null_row] * (pad - len(rows)),
+                              jnp.int32)
+            self.pages["k"] = _scatter_rows(self.pages["k"], idx,
+                                            payload["k"])
+            self.pages["v"] = _scatter_rows(self.pages["v"], idx,
+                                            payload["v"])
+        self.xfer.queue.record_promote_commit(prefetched)
+        # traffic counted at COMMIT with the unpadded payload size, so
+        # the totals measure copies that landed, demand or staged
+        self.xfer.queue.record(CopyParcel(
+            staged_key, tuple(a.gid for a in todo), "promote",
+            len(todo) * self.page_bytes()))
+        self.promoted += len(todo)
+        # every page in `addrs` is device-resident now: retire any
+        # per-page staging that arrived by another path, or the stale
+        # entries would clog the double buffer forever
+        self._drop_page_staging(addrs)
+        return len(todo)
+
+    def _drop_page_staging(self, addrs: Sequence[GlobalAddress]
+                           ) -> None:
+        for a in addrs:
+            self.xfer.drop(("page", a.gid))
+
+    def ensure_device(self, addr: GlobalAddress) -> None:
+        """Demand path for a single page (a prefix hit on a spilled
+        page): promote it before anything resolves its row.  Checks
+        the per-page staging key the chunk prefetcher uses."""
+        if not self.on_device(addr):
+            self.promote_pages([addr], staged_key=("page", addr.gid))
+        else:
+            self.xfer.drop(("page", addr.gid))
+
+    # -- cost model for admission -------------------------------------
+    def page_cost(self, key: Tuple[bytes, int]) -> int:
+        """Device rows one prefix key will consume: 0 for a device-
+        resident hit, 1 for a miss OR a host-resident hit (promotion
+        needs a device row too)."""
+        addr = self.lookup_prefix(key)
+        if addr is None:
+            return 1
+        return 0 if self.on_device(addr) else 1
+
+    # -- drills and telemetry -----------------------------------------
+    def demote_all_cold(self) -> int:
+        """Forced-eviction drill: demote every evictable (cold,
+        device-resident) page to host in one sweep; returns pages
+        moved.  Outputs of everything still decoding must be unchanged
+        — cold pages are refcount-0 by construction."""
+        addrs = [GlobalAddress(g, self.agas.space) for g in self._cold]
+        addrs = [a for a in addrs if self.on_device(a)]
+        addrs = addrs[:self.host_free_rows]
+        if addrs:
+            self._demote(addrs, key=("drill", self.evictions))
+            self.evictions += len(addrs)
+        return len(addrs)
+
+    def drop_all_cold(self) -> int:
+        """Drop every retained cold page, both tiers (bench warmup
+        reset: the timed trace starts from an empty pool)."""
+        gids = list(self._cold)
+        for gid in gids:
+            self._drop_cold(gid)
+        self.cold_drops -= len(gids)          # resets don't count
+        return len(gids)
+
+    def tier_stats(self) -> Dict[str, Any]:
+        s = {
+            "host_pages": self.host_pages,
+            "host_used": self.host_used,
+            "device_cold": self.cold_count(Tier.DEVICE),
+            "host_cold": self.cold_count(Tier.HOST),
+            "evictions": self.evictions,
+            "cold_drops": self.cold_drops,
+            "offloaded_pages": self.offloaded,
+            "promoted_pages": self.promoted,
+        }
+        s.update(self.xfer.queue.stats())
+        return s

@@ -1,0 +1,140 @@
+"""Percolation core (DESIGN.md §4d): tiered AGAS directories, the
+copy-parcel queue, and the double-buffered transfer engine."""
+
+import numpy as np
+import pytest
+
+from repro.core.agas import AGAS, AGASError, GlobalAddress
+from repro.core.localities import LocalityDomain
+from repro.core.percolation import (CopyParcel, PercolationQueue, Tier,
+                                    TransferEngine, domain_tiers,
+                                    tiered_domain)
+
+
+# -- tier-aware AGAS ---------------------------------------------------
+
+def _tiered_agas(n_dev=2, dev_cap=4, host_cap=16):
+    return AGAS(tiered_domain(n_dev),
+                [dev_cap] * n_dev + [host_cap],
+                space="kvpage", tiers=domain_tiers(n_dev))
+
+
+def test_per_locality_capacities_and_tiers():
+    agas = _tiered_agas()
+    assert agas.capacities == [4, 4, 16]
+    assert agas.localities_in_tier(int(Tier.DEVICE)) == [0, 1]
+    assert agas.localities_in_tier(int(Tier.HOST)) == [2]
+    assert agas.free_count(2) == 16
+    # least_loaded unfiltered would pick the big host pool; the
+    # device-tier filter must not
+    assert agas.least_loaded() == 2
+    assert agas.least_loaded(tier=int(Tier.DEVICE)) in (0, 1)
+
+
+def test_capacity_mismatch_rejected():
+    with pytest.raises(ValueError):
+        AGAS(tiered_domain(2), [4, 4], space="x",
+             tiers=domain_tiers(2))
+    with pytest.raises(ValueError):
+        AGAS(tiered_domain(2), [4, 4, 8], space="x", tiers=[0, 1])
+
+
+def test_name_stable_across_tier_migration():
+    """The AGAS promise, vertically: demotion/promotion are migrate
+    calls that never change the gid."""
+    agas = _tiered_agas()
+    a = agas.allocate(0)
+    gid = a.gid
+    agas.migrate(a, 2)              # demote
+    assert agas.lookup(a)[0] == 2
+    assert agas.tier_of(agas.locality_of(a)) == int(Tier.HOST)
+    agas.migrate(a, 1)              # promote onto the other shard
+    assert agas.lookup(a)[0] == 1
+    assert a.gid == gid
+    # device pool exhaustion raises per-locality
+    for _ in range(4):
+        agas.allocate(0)
+    with pytest.raises(AGASError):
+        agas.allocate(0)
+    # ... while the host locality still has room
+    assert agas.free_count(2) == 16
+
+
+def test_checkpoint_roundtrip_keeps_capacities():
+    agas = _tiered_agas()
+    a = agas.allocate(0)
+    agas.migrate(a, 2)
+    state = agas.checkpoint_state()
+    back = AGAS.restore_state(state, tiered_domain(2))
+    assert back.capacities == [4, 4, 16]
+    assert back.tiers == agas.tiers
+    assert back.lookup(a)[0] == 2
+
+
+def test_uniform_restore_onto_different_count_still_works():
+    """The elastic-restore fold (§8) predates tiers and must keep
+    working: restoring onto a different locality count falls back to
+    the uniform capacity."""
+    agas = AGAS(LocalityDomain.simulated(4), 8, space="blk")
+    addrs = [agas.allocate(i % 4) for i in range(8)]
+    state = agas.checkpoint_state()
+    back = AGAS.restore_state(state, LocalityDomain.simulated(2))
+    for a in addrs:
+        loc, _ = back.lookup(a)
+        assert 0 <= loc < 2
+
+
+# -- the percolation queue --------------------------------------------
+
+def test_queue_counters_and_overlap():
+    q = PercolationQueue()
+    q.record(CopyParcel("d0", (1, 2, 3), "demote", 300))
+    # staging enqueues WITHOUT counting: only committed copies move
+    # the traffic totals (an abandoned staging never landed)
+    q.push(CopyParcel("p0", (1, 2), "promote", 200))
+    assert len(q) == 1 and "p0" in q
+    assert q.demote_pages == 3 and q.promote_pages == 0
+    q.pop("p0")
+    assert len(q) == 0
+    q.record(CopyParcel("p0", (1, 2), "promote", 200))   # commit
+    assert q.promote_pages == 2 and q.promote_bytes == 200
+    assert q.demote_bytes == 300
+    q.record_promote_commit(prefetched=True)
+    q.record_promote_commit(prefetched=True)
+    q.record_promote_commit(prefetched=False)
+    assert q.prefetch_hits == 2 and q.demand_promotes == 1
+    assert q.overlap() == pytest.approx(2 / 3)
+    s = q.stats()
+    assert s["offload_bytes"] == 300
+    assert s["copy_compute_overlap"] == pytest.approx(2 / 3)
+
+
+# -- the transfer engine ----------------------------------------------
+
+def test_double_buffered_staging():
+    eng = TransferEngine(max_inflight=2)
+    pay = {"k": np.ones((2, 3)), "v": np.zeros((2, 3))}
+    assert eng.stage("a", [1], pay)
+    assert eng.stage("a", [1], pay)          # idempotent
+    assert eng.stage("b", [2], pay)
+    assert not eng.stage("c", [3], pay)      # double buffer full
+    assert eng.staged_keys() == ["a", "b"]
+    gids, arrays = eng.take("a")
+    assert gids == (1,)
+    np.testing.assert_array_equal(np.asarray(arrays["k"]), pay["k"])
+    assert eng.take("a") is None             # taken once
+    eng.drop("b")
+    assert eng.staged_keys() == []
+    assert eng.stage("c", [3], pay)          # room again
+    assert len(eng.queue) == 1               # only c still in flight
+    assert eng.queue.promote_parcels == 0    # nothing committed yet
+
+
+def test_to_host_materializes_device_arrays():
+    import jax.numpy as jnp
+    eng = TransferEngine()
+    arrays = {"k": jnp.arange(6.0).reshape(2, 3)}
+    out = eng.to_host(arrays)
+    assert isinstance(out["k"], np.ndarray)
+    np.testing.assert_array_equal(out["k"],
+                                  np.arange(6.0).reshape(2, 3))

@@ -1,0 +1,382 @@
+"""Two-tier percolation serving (DESIGN.md §4d): offload/restore
+round-trips, greedy parity with tiering on vs off, the forced-eviction
+torture drill, prefix-cache spill, and copy/compute overlap."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.serving.engine import Request, make_engine
+from repro.serving.kvcache import PagedKVCache, PageExhausted
+from repro.serving.tiering import TieredPagePool
+
+RNG = np.random.default_rng(23)
+
+
+def _cfg(name="yi-6b"):
+    return configs.get_reduced(name)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, lens, max_new=10, rid0=0, prefix=None):
+    out = []
+    for i, n in enumerate(lens):
+        toks = RNG.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+        if prefix is not None:
+            toks = np.concatenate([prefix, toks]).astype(np.int32)
+        out.append(Request(rid0 + i, toks, max_new_tokens=max_new))
+    return out
+
+
+def _serve(eng, reqs, **rtc):
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(**rtc)
+    return {c.rid: c.tokens for c in eng.completions}
+
+
+# -- kvcache offload / restore round trip ------------------------------
+
+def test_offload_restore_roundtrip_bytes_and_state():
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=4,
+                       page_size=16, host_pages=8)
+    padded = RNG.integers(0, 100, size=40).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    k = jnp.asarray(RNG.normal(size=(L, 40, kvh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(L, 40, kvh, hd)), jnp.float32)
+    kvc.attach(0, padded, k, v)
+    rows_before = [kvc.pool.row(a) for a in kvc._state[0].addrs]
+    content = np.asarray(kvc.pool.pages["k"])[:, rows_before].copy()
+    tables_before = kvc.tables[0].copy()
+
+    snap = kvc.offload_slot(0)
+    assert snap is not None and len(snap.addrs) == 3
+    assert snap.length == 40
+    # slot is empty and reusable; the pages live on host, refcounted
+    assert kvc.lengths[0] == 0
+    assert all(not kvc.pool.on_device(a) for a in snap.addrs)
+    assert all(kvc.pool.refcount(a) == 1 for a in snap.addrs)
+    assert kvc.pool.host_used == 3
+    assert kvc.pool.device_free_rows == 4
+
+    kvc.restore_slot(0, snap)
+    assert kvc.lengths[0] == 40
+    rows_after = [kvc.pool.row(a) for a in kvc._state[0].addrs]
+    got = np.asarray(kvc.pool.pages["k"])[:, rows_after]
+    np.testing.assert_array_equal(got, content)   # byte-identical
+    # names never changed, so the block table re-resolves consistently
+    assert [a.gid for a in snap.addrs] == \
+        [a.gid for a in kvc._state[0].addrs]
+    np.testing.assert_array_equal(
+        kvc.tables[0][:3],
+        [kvc.pool.row(a) for a in snap.addrs])
+    assert len(tables_before) == len(kvc.tables[0])
+    kvc.release(0)
+
+
+def test_offload_keeps_shared_pages_on_device():
+    """A preempted request's prefix-shared pages stay put (pinned by
+    the other holder); only exclusive pages are written back."""
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=6,
+                       page_size=16, host_pages=8)
+    padded = RNG.integers(0, 100, size=32).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((L, 32, kvh, hd), jnp.float32)
+    kvc.attach(0, padded, z, z)
+    kvc.attach(1, padded, z, z)          # shares both pages
+    assert kvc.pool.shares == 2
+    snap = kvc.offload_slot(0)
+    assert snap is not None
+    # nothing demoted: every page is refcount-2
+    assert kvc.pool.host_used == 0
+    assert all(kvc.pool.on_device(a) for a in snap.addrs)
+    kvc.restore_slot(0, snap)            # no promotion needed either
+    assert kvc.pool.tier_stats()["promoted_pages"] == 0
+    kvc.release(0)
+    kvc.release(1)
+
+
+def test_offload_declines_when_host_full():
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=4,
+                       page_size=16, host_pages=1)
+    padded = RNG.integers(0, 100, size=40).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((L, 40, kvh, hd), jnp.float32)
+    kvc.attach(0, padded, z, z)          # 3 pages > 1 host row
+    assert kvc.offload_slot(0) is None   # caller falls back to release
+    assert kvc.lengths[0] == 40          # slot untouched
+    kvc.release(0)
+
+
+# -- engine-level parity: tiering on vs off ---------------------------
+
+@pytest.mark.parametrize("engine", ["chunked", "paged"])
+def test_greedy_parity_tiering_on_vs_off(setup, engine):
+    """Token-identical with tiering on vs off on a no-pressure trace
+    (same pool size, no preemption): the tiers must be invisible."""
+    cfg, params = setup
+    reqs = _requests(cfg, (12, 30, 45, 9), max_new=8)
+    kw = dict(slots=4, max_len=128, prefill_buckets=(32,),
+              page_size=16, n_pages=32)
+    off = _serve(make_engine(params, cfg, engine=engine, **kw),
+                 reqs)
+    on_eng = make_engine(params, cfg, engine=engine, tiering=True,
+                         host_pages=32, **kw)
+    on = _serve(on_eng, reqs)
+    assert on == off
+    assert on_eng.stats()["tiering"] is True
+
+
+def test_preempt_offload_restore_skips_prefill(setup):
+    """The §4d headline: under page pressure a preempted request's KV
+    is written back and RESTORED — greedy continuation identical to an
+    ample pool that never preempted, with zero re-prefill work after
+    the restore."""
+    cfg, params = setup
+    reqs = _requests(cfg, (40, 50, 60, 45), max_new=24)
+    kw = dict(slots=4, max_len=128, prefill_buckets=(32,),
+              page_size=16, chunk_size=32, step_tokens=68)
+    truth = _serve(make_engine(params, cfg, engine="chunked",
+                               n_pages=32, **kw), reqs)
+    eng = make_engine(params, cfg, engine="chunked", n_pages=12,
+                      tiering=True, host_pages=48, **kw)
+    got = _serve(eng, reqs, max_steps=100000)
+    st = eng.stats()
+    assert st["preemptions"] > 0
+    assert st["offloads"] > 0 and st["restores"] > 0
+    assert st["offloads"] == st["restores"]
+    assert st["offload_bytes"] > 0 and st["promote_bytes"] > 0
+    assert got == truth
+    # restored requests really did skip prefill: every offload was a
+    # decode-phase write-back and the only prefill chunks ever run
+    # cover each prompt exactly once
+    chunk_tok = sum(c.get("prefill_chunk_tokens", 0)
+                    for c in eng.counters)
+    total_prompt = sum(-(-len(r.prompt) // 32) * 32 for r in reqs)
+    assert chunk_tok <= total_prompt
+
+
+def test_whole_prompt_engine_offload_restore(setup):
+    """The whole-prompt paged engine rides the same restore path."""
+    cfg, params = setup
+    reqs = _requests(cfg, (40, 50, 60), max_new=24)
+    kw = dict(slots=3, max_len=128, prefill_buckets=(32,),
+              page_size=16)
+    truth = _serve(make_engine(params, cfg, engine="paged",
+                               n_pages=24, **kw), reqs)
+    eng = make_engine(params, cfg, engine="paged", n_pages=10,
+                      tiering=True, host_pages=40, **kw)
+    got = _serve(eng, reqs, max_steps=100000)
+    st = eng.stats()
+    assert st["restores"] > 0
+    assert got == truth
+
+
+def test_forced_eviction_torture_mid_decode(setup):
+    """Demote every evictable page mid-decode, repeatedly, then let
+    new requests promote what they share back — outputs identical to
+    an undisturbed run (cold pages are refcount-0, so refcount
+    pinning guarantees active slots never lose a page)."""
+    cfg, params = setup
+    # same-length prompts with a common head: identical left-pad, so
+    # the first three pages of every padded prompt hash identically
+    prefix = RNG.integers(0, cfg.vocab_size, size=32).astype(np.int32)
+    wave1 = _requests(cfg, (8, 8), max_new=6, rid0=0, prefix=prefix)
+    wave2 = _requests(cfg, (8, 8), max_new=8, rid0=10, prefix=prefix)
+    kw = dict(slots=4, max_len=128, prefill_buckets=(32,),
+              page_size=16, chunk_size=32, step_tokens=68,
+              n_pages=32)
+
+    def trace(eng, drill):
+        for r in wave1:
+            eng.submit(r)
+        eng.run_to_completion()      # wave-1 prefix pages now cold
+        for r in wave2:              # shares the spilled prefix
+            eng.submit(r)
+        if drill:
+            eng.force_demote()       # spill BEFORE wave 2 admits: its
+        steps = 0                    # prefix hits must promote
+        while (eng.active or eng.queue) and steps < 10000:
+            eng.step()
+            if drill:
+                eng.force_demote()   # every evictable page, every step
+            steps += 1
+        return {c.rid: c.tokens for c in eng.completions}
+
+    plain = trace(make_engine(params, cfg, engine="chunked", **kw),
+                  drill=False)
+    eng = make_engine(params, cfg, engine="chunked", tiering=True,
+                      host_pages=32, **kw)
+    tortured = trace(eng, drill=True)
+    assert tortured == plain
+    st = eng.stats()
+    assert st["evictions"] > 0           # the drill actually demoted
+    assert st["promoted_pages"] > 0      # and wave 2 promoted shares
+    assert st["page_shares"] > 0
+
+
+def test_prefix_spill_revival_and_lru_pinning():
+    """Prefix-cache spill: pages retained cold at refcount 0 are
+    revived by a later identical prefix; LRU eviction touches only
+    refcount-0 pages."""
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=4,
+                       page_size=16, host_pages=8)
+    pool = kvc.pool
+    padded = RNG.integers(0, 100, size=32).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    z = jnp.asarray(RNG.normal(size=(L, 32, kvh, hd)), jnp.float32)
+    kvc.attach(0, padded, z, z)
+    kvc.release(0)                       # spill: retained cold
+    assert pool.used_pages == 0
+    assert pool.cold_count() == 2
+    assert kvc.pages_needed(padded) == 0  # still a full prefix hit
+    # an identical attach revives both pages without any page write
+    allocs_before = pool.allocs
+    kvc.attach(1, padded, z, z)
+    assert pool.allocs == allocs_before
+    assert pool.shares >= 2
+    assert pool.cold_count() == 0
+    assert all(pool.refcount(a) == 1 for a in kvc._state[1].addrs)
+    kvc.release(1)
+
+
+def test_copy_compute_overlap_reported(setup):
+    """The overlap model: staged restores committed as prefetch hits
+    show up in stats() as copy_compute_overlap > 0."""
+    cfg, params = setup
+    reqs = _requests(cfg, (40, 50, 60, 45, 55), max_new=24)
+    eng = make_engine(params, cfg, engine="chunked", slots=4,
+                      max_len=128, prefill_buckets=(32,),
+                      page_size=16, chunk_size=32, step_tokens=68,
+                      n_pages=12, tiering=True, host_pages=48)
+    _serve(eng, reqs, max_steps=100000)
+    st = eng.stats()
+    assert st["restores"] > 0
+    assert st["prefetch_hits"] + st["demand_promotes"] > 0
+    assert 0.0 <= st["copy_compute_overlap"] <= 1.0
+    assert st["prefetch_hits"] > 0       # staging really front-ran
+
+
+def test_page_staging_never_clogs_the_double_buffer():
+    """A page staged under its per-page key and then promoted by a
+    DIFFERENT path (a snapshot restore, a cold drop) must retire its
+    staging entry — otherwise two such events fill max_inflight=2 and
+    disable prefetch for the life of the pool.  Promote bytes count
+    committed copies, demand or staged."""
+    cfg = _cfg()
+    pool = TieredPagePool(cfg, n_pages=4, page_size=4, host_pages=8)
+    addrs = []
+    for i in range(3):
+        a = pool.alloc()
+        pool.register_prefix((b"k%d" % i, 4), a)
+        addrs.append(a)
+    for a in addrs:
+        pool.decref(a)                   # cold, then spill them all
+    pool.demote_all_cold()
+    assert pool.host_used == 3
+    for a in addrs[:2]:                  # fill the double buffer
+        assert pool.stage_promote(("page", a.gid), [a])
+    assert not pool.stage_promote(("page", addrs[2].gid), [addrs[2]])
+    for a in addrs[:2]:
+        pool.incref(a)
+    pool.promote_pages(addrs[:2], staged_key=("restore", 99))
+    # the per-page entries were retired: the buffer has room again
+    assert pool.stage_promote(("page", addrs[2].gid), [addrs[2]])
+    pool.incref(addrs[2])
+    pool.ensure_device(addrs[2])
+    assert pool.xfer.staged_keys() == []
+    assert pool.tier_stats()["promote_bytes"] == \
+        3 * pool.page_bytes()
+
+
+def test_rollback_returns_shared_pages_to_the_cache():
+    """attach rollback under exhaustion: fresh (unwritten) pages are
+    freed outright, but prefix-shared hits return to the cache with
+    their content — one failed admission must not evict the prefix."""
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=96, n_pages=3,
+                       page_size=16, host_pages=4)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    head = RNG.integers(0, 100, size=32).astype(np.int32)
+    z = jnp.asarray(RNG.normal(size=(L, 32, kvh, hd)), jnp.float32)
+    kvc.attach(0, head, z, z)
+    kvc.release(0)                       # 2 pages retained cold
+    long = np.concatenate(
+        [head, RNG.integers(0, 100, size=48).astype(np.int32)])
+    zl = jnp.zeros((L, 80, kvh, hd), jnp.float32)
+    with pytest.raises(PageExhausted):
+        kvc.attach(1, long, zl, zl)      # shares 2, needs 3 fresh > 1
+    # the shared prefix survived the rollback, still revivable
+    assert kvc.pool.cold_count() == 2
+    assert kvc.pages_needed(head) == 0
+    kvc.attach(1, head, z, z)            # revives, no new alloc
+    assert kvc.pool.shares >= 2
+    kvc.release(1)
+
+
+def test_sharded_pool_with_host_tier(setup):
+    """§4c x §4d: the host tier behind a 2-shard device pool —
+    offload/restore across simulated localities stays token-identical
+    and shard accounting excludes the host locality."""
+    cfg, params = setup
+    reqs = _requests(cfg, (30, 45, 55, 38, 50, 42), max_new=16,
+                     rid0=40)
+    kw = dict(slots=4, max_len=128, prefill_buckets=(32,),
+              page_size=16, chunk_size=32, step_tokens=68)
+    truth = _serve(make_engine(params, cfg, engine="chunked",
+                               n_pages=32, **kw), reqs)
+    eng = make_engine(params, cfg, engine="chunked", n_pages=12,
+                      kv_shards=2, tiering=True, host_pages=48, **kw)
+    got = _serve(eng, reqs, max_steps=100000)
+    st = eng.stats()
+    assert got == truth
+    assert st["restores"] > 0
+    assert st["kv_shards"] == 2
+    assert len(st["shard_pages_used"]) == 2   # host locality excluded
+
+
+def test_migration_programs_cached_canonically():
+    """DESIGN.md §9.4 closure: different migration plans in the same
+    size class share one canonical permutation program (padded with
+    null-row self-moves), and a page's content survives the padded
+    permutation."""
+    cfg = _cfg()
+    from repro.serving.kvcache import PagePool
+    pool = PagePool(cfg, n_pages=8, page_size=4, n_shards=2)
+
+    def val(a):                          # sharded layout (L,S,R,...)
+        loc, slot = pool.agas.lookup(a)
+        return float(np.asarray(
+            pool.pages["k"])[0, loc, slot, 0, 0, 0])
+
+    addrs = [pool.alloc(locality=0) for _ in range(3)]
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    for i, a in enumerate(addrs):
+        span = jnp.full((L, 1, 4, kvh, hd), float(i + 1),
+                        pool.pages["k"].dtype)
+        pool.write_pages([pool.row(a)], span, span)
+    # plan 1: three moves 0 -> 1 (canonical size 4)
+    pool.migrate_pages({a: 1 for a in addrs})
+    assert pool._mig_sizes == {4}
+    for i, a in enumerate(addrs):        # payload followed the name
+        assert val(a) == i + 1
+    # plan 2: three moves back — same size class, no new program
+    pool.migrate_pages({a: 0 for a in addrs})
+    assert pool._mig_sizes == {4}
+    for i, a in enumerate(addrs):
+        assert val(a) == i + 1
+    for a in addrs:
+        pool.decref(a)

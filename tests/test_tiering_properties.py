@@ -1,0 +1,173 @@
+"""Hypothesis property tests for the two-tier page pool (DESIGN.md
+§4d).
+
+Random interleaved alloc / incref / decref / demote-evict / promote /
+prefix-register / drill sequences must preserve the tier invariants:
+
+* every live (refcounted) page resides in exactly one tier, and its
+  global name never changes across demotion/promotion;
+* pages with refcount > 0 on device are never evicted (refcount
+  pinning) — eviction and the demote drill only ever touch
+  refcount-0 retained pages;
+* a demote -> promote round trip is byte-identical;
+* per-tier accounting stays consistent: free rows + resident pages
+  == capacity on every locality, and `free_pages` (device rows +
+  evictable cold) never exceeds the device capacity.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.core.agas import GlobalAddress
+from repro.core.percolation import Tier
+from repro.serving.kvcache import PageExhausted
+from repro.serving.tiering import TieredPagePool
+
+N_PAGES = 4
+HOST_PAGES = 6
+PAGE_SIZE = 4
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "incref", "decref", "share",
+                               "promote", "drill", "evict"]),
+              st.integers(0, 7)),
+    min_size=1, max_size=60)
+
+
+def _stamp(pool, row, value):
+    shape = pool.pages["k"].shape              # (L, N, ps, KV, D)
+    span = jnp.full((shape[0], 1) + shape[2:], float(value),
+                    pool.pages["k"].dtype)
+    pool.write_pages([row], span, span)
+
+
+def _content(pool, addr):
+    """The stamp of a page wherever it lives (device or host)."""
+    if pool.on_device(addr):
+        return float(np.asarray(
+            pool.pages["k"][0, pool.row(addr), 0, 0, 0]))
+    return float(pool.host["k"][0, pool.host_slot(addr), 0, 0, 0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=OPS)
+def test_tier_invariants_under_random_interleaving(ops):
+    cfg = configs.get_reduced("yi-6b")
+    pool = TieredPagePool(cfg, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                          host_pages=HOST_PAGES)
+    held = []                   # (addr, stamp): refs we hold
+    stamps = {}                 # gid -> stamped content
+    next_stamp = 1
+    next_key = 0
+
+    def check_invariants():
+        # 1. exactly-one-tier: the directory answers one locality per
+        # live or cold gid, and the tier split covers everything
+        live = set(pool._refs)
+        cold = set(pool._cold)
+        assert not live & cold, "a page cannot be live AND cold"
+        resident = set()
+        for l in range(pool.n_shards + 1):
+            r = pool.agas.residents(l)
+            assert not resident & r, "a page resides in two localities"
+            resident |= r
+        assert resident == live | cold
+        # 2. per-tier accounting
+        for l in range(pool.n_shards):
+            assert pool.agas.free_count(l) + \
+                len(pool.agas.residents(l)) == pool.pages_per_shard
+        assert pool.host_free_rows + pool.host_used == pool.host_pages
+        assert 0 <= pool.free_pages <= pool.capacity
+        # 3. refcount pinning: everything we hold is live and its
+        # content is wherever the directory says, intact
+        for addr, s in held:
+            assert pool.refcount(addr) >= 1
+            assert _content(pool, addr) == s
+
+    for kind, param in ops:
+        if kind == "alloc":
+            try:
+                addr = pool.alloc()
+            except PageExhausted:
+                # only legal when nothing on device was evictable
+                assert pool.free_pages == 0
+                continue
+            assert pool.on_device(addr)
+            _stamp(pool, pool.row(addr), next_stamp)
+            stamps[addr.gid] = next_stamp
+            held.append((addr, next_stamp))
+            next_stamp += 1
+            # fresh pages registered so decref retains them cold
+            pool.register_prefix((b"t%d" % next_key, PAGE_SIZE), addr)
+            next_key += 1
+        elif kind == "incref" and held:
+            addr, s = held[param % len(held)]
+            pool.incref(addr)
+            held.append((addr, s))
+        elif kind == "decref" and held:
+            addr, _ = held.pop(param % len(held))
+            pool.decref(addr)
+        elif kind == "share" and next_key:
+            key = (b"t%d" % (param % next_key), PAGE_SIZE)
+            addr = pool.lookup_prefix(key)
+            if addr is not None:
+                was_host = not pool.on_device(addr)
+                pool.incref(addr)           # pin first,
+                try:
+                    pool.ensure_device(addr)    # then promote
+                except PageExhausted:
+                    pool.discard(addr)
+                    continue
+                assert pool.on_device(addr)
+                # demote -> promote round trip is byte-identical
+                assert _content(pool, addr) == stamps[addr.gid]
+                if was_host:
+                    assert pool.promoted >= 1
+                held.append((addr, stamps[addr.gid]))
+        elif kind == "promote" and held:
+            # promoting an already-device page is a no-op
+            addr, s = held[param % len(held)]
+            pool.promote_pages([addr])
+            assert pool.on_device(addr) and _content(pool, addr) == s
+        elif kind == "drill":
+            pinned = {a.gid for a, _ in held}
+            moved = pool.demote_all_cold()
+            assert moved >= 0
+            # refcount>0 pages were never touched by the drill
+            for addr, s in held:
+                assert pool.on_device(addr)
+                assert _content(pool, addr) == s
+            assert not pinned & {g for g in pool._cold
+                                 if not pool.on_device(
+                                     GlobalAddress(g, pool.agas.space))}
+        elif kind == "evict":
+            before = {a.gid for a, _ in held
+                      if pool.on_device(a)}
+            if pool._evict_one():
+                # the evicted page was NOT one we hold a ref on
+                assert {a.gid for a, _ in held
+                        if pool.on_device(a)} == before
+        check_invariants()
+
+    # drain: everything restorable, accounting returns to empty
+    for addr, s in held:
+        assert _content(pool, addr) == s
+        pool.decref(addr)
+    held.clear()
+    pool.drop_all_cold()
+    assert pool.used_pages == 0
+    assert pool.device_free_rows == pool.capacity
+    assert pool.host_free_rows == pool.host_pages
+    # the pool is fully reusable after the storm
+    again = [pool.alloc() for _ in range(pool.capacity)]
+    assert len({pool.row(a) for a in again}) == pool.capacity
+    for a in again:
+        pool.discard(a)
+    assert pool.free_pages == pool.capacity
