@@ -35,6 +35,17 @@ token-identical to an ample-pool reference, and reports the
 offload/promote byte counters plus the copy/compute overlap
 fraction.
 
+``--prefix-heavy`` serves the dominant production shape — a long
+shared system prompt with short per-request user suffixes — twice at
+the SAME page budget on the tiered chunked engine: once with the
+prefix cache saving memory only, and once with
+``prefix_cache_compute=True`` (DESIGN.md §4e), where covered prompts
+skip the covered prefill compute and fully-covered repeats admit
+straight to decode from their cached activation checkpoint.  Outside
+``--smoke`` the warm wave must show >= 5x lower p50 TTFT and >= 80%
+of its prefill tokens skipped; greedy outputs are asserted
+token-identical between the two runs.
+
 ``--seed`` reseeds every trace generator, so mixed-trace runs are
 reproducible (and comparable) across machines.
 
@@ -81,6 +92,22 @@ SLOTS_TIERED = 16           # slot count beyond what the device holds
 N_PRESSURE = 16             # long decode tails: ~6-7 pages each at
 TIER_MAX_NEW = 48           # completion, vs a 16-page device pool
 
+# -- prefix-heavy shared-system-prompt trace (DESIGN.md §4e) ----------
+PREFIX_SYS = 104            # shared system prompt; with the 8-token
+                            # left-pad it fills exactly 7 pages, so
+                            # every warm request covers 112 of its 128
+PREFIX_USER = 16            # per-request user suffix — FIXED length:
+                            # equal totals keep the left-padded layout
+                            # (and therefore the page hashes) of the
+                            # shared head identical across the wave
+PREFIX_N = 12               # warm wave (incl. PREFIX_REPEATS)
+PREFIX_REPEATS = 2          # exact repeats of the seed prompt: fully
+                            # covered, admit straight to decode
+PREFIX_MAX_NEW = 8
+PREFIX_PAGES = 64           # same page budget for both runs
+PREFIX_HOST_PAGES = 64
+PREFIX_MAX_LEN = 160
+
 
 def _short_requests(cfg, n, max_new=MAX_NEW, rid0=0, seed=0):
     rng = np.random.default_rng(seed)
@@ -117,6 +144,29 @@ def _pressure_requests(cfg, n=N_PRESSURE, max_new=TIER_MAX_NEW,
         for i in range(n)]
 
 
+def _prefix_traces(cfg, n=PREFIX_N, repeats=PREFIX_REPEATS,
+                   max_new=PREFIX_MAX_NEW, seed=0):
+    """(seed request, warm wave): one cold request carrying the shared
+    system prompt, then a wave of partial covers (same system prompt,
+    fresh user suffixes) plus `repeats` exact repeats of the seed
+    prompt (full covers)."""
+    rng = np.random.default_rng(seed + 29)
+    from repro.serving.engine import Request
+    sys_p = rng.integers(0, cfg.vocab_size,
+                         size=PREFIX_SYS).astype(np.int32)
+
+    def req(rid, user):
+        return Request(rid, np.concatenate([sys_p, user])
+                       .astype(np.int32), max_new_tokens=max_new)
+
+    seed_user = rng.integers(0, cfg.vocab_size, size=PREFIX_USER)
+    seed_req = req(900, seed_user)
+    wave = [req(i, rng.integers(0, cfg.vocab_size, size=PREFIX_USER))
+            for i in range(n - repeats)]
+    wave += [req(800 + j, seed_user) for j in range(repeats)]
+    return seed_req, wave
+
+
 def _warmup(eng, cfg, lens):
     """Compile every executable the timed trace will hit, then wipe
     the engine's telemetry so timings reflect scheduling only."""
@@ -131,6 +181,8 @@ def _warmup(eng, cfg, lens):
     if hasattr(eng, "counters"):
         eng.counters.clear()
         eng.preemptions = 0
+        eng.prefix_skips = 0
+        eng.prefill_tokens_skipped = 0
         pool = eng.kvc.pool
         pool.allocs = pool.shares = pool.cow_copies = 0
         if getattr(pool, "tiered", False):
@@ -207,8 +259,49 @@ def _serve_sharded(params, cfg, kw_mixed, warm_lens, mixed, kv_shards,
     return out
 
 
+def _prefix_run(params, cfg, seed_req, wave, skip):
+    """One warm shared-system-prompt wave at the standard page budget:
+    seed the prefix cache with one cold request, then measure the wave
+    with compute skip on or off.  Returns (metrics, rid -> tokens)."""
+    from repro.serving.engine import Request, make_engine
+    eng = make_engine(params, cfg, engine="chunked",
+                      slots=SLOTS_PAGED, max_len=PREFIX_MAX_LEN,
+                      prefill_buckets=(32,), page_size=PAGE_SIZE,
+                      n_pages=PREFIX_PAGES, chunk_size=CHUNK,
+                      step_tokens=STEP_TOKENS, tiering=True,
+                      host_pages=PREFIX_HOST_PAGES,
+                      prefix_cache_compute=skip)
+    _warmup(eng, cfg, (120, 33, 12))
+    # seed the cache (the cold request the wave shares), then one
+    # throwaway warm repeat so the resume executable compiles outside
+    # the timed wave; telemetry resets but the cold pages STAY — warm
+    # is the point
+    eng.submit(seed_req)
+    eng.run_to_completion()
+    cold_ttft_ms = eng.completions[0].ttft_s * 1e3
+    eng.submit(Request(901, seed_req.prompt, max_new_tokens=2))
+    eng.run_to_completion()
+    eng.completions.clear()
+    eng.counters.clear()
+    eng.prefix_skips = 0
+    eng.prefill_tokens_skipped = 0
+    dt, tok = _serve(eng, wave)
+    st = eng.stats()
+    run_tok = sum(c.get("prefill_chunk_tokens", 0)
+                  for c in eng.counters)
+    skipped = st["prefill_tokens_skipped"]
+    out = dict(_eng_stats(st, eng.slots, tok, dt),
+               compute_skip=skip,
+               cold_ttft_ms=cold_ttft_ms,
+               prefix_skips=st["prefix_skips"],
+               prefill_tokens_skipped=skipped,
+               prefill_tokens_run=run_tok,
+               skip_fraction=skipped / max(skipped + run_tok, 1))
+    return out, {c.rid: c.tokens for c in eng.completions}
+
+
 def run(verbose=True, out_path=None, smoke=False, kv_shards=0,
-        tiering=False, host_pages=0, seed=0):
+        tiering=False, host_pages=0, prefix_heavy=False, seed=0):
     import jax
 
     import repro.configs as configs
@@ -395,6 +488,55 @@ def run(verbose=True, out_path=None, smoke=False, kv_shards=0,
              "bytes")
         emit("serve_tiered_overlap", tst["copy_compute_overlap"],
              "fraction")
+
+    # -- prefix-heavy shared-system-prompt trace (DESIGN.md §4e) ------
+    if prefix_heavy:
+        seed_req, wave = _prefix_traces(
+            cfg, n=4 if smoke else PREFIX_N,
+            repeats=1 if smoke else PREFIX_REPEATS,
+            max_new=4 if smoke else PREFIX_MAX_NEW, seed=seed)
+        off, off_toks = _prefix_run(params, cfg, seed_req, wave, False)
+        on, on_toks = _prefix_run(params, cfg, seed_req, wave, True)
+        assert on_toks == off_toks, (
+            "compute-skip outputs diverge from the skip-off reference "
+            "— the skipped prefill is supposed to be exact")
+        ttft_x = off["ttft_p50_ms"] / max(on["ttft_p50_ms"], 1e-9)
+        if not smoke:
+            assert on["skip_fraction"] >= 0.8, (
+                f"warm wave skipped only {on['skip_fraction']:.0%} of "
+                "its prefill tokens")
+            assert ttft_x >= 5.0, (
+                f"compute skip cut warm p50 TTFT only {ttft_x:.1f}x "
+                f"({off['ttft_p50_ms']:.1f}ms -> "
+                f"{on['ttft_p50_ms']:.1f}ms)")
+            assert on["prefix_skips"] >= PREFIX_REPEATS, (
+                "the exact-repeat requests did not admit straight to "
+                "decode")
+        result["prefix_trace"] = {
+            "pages": PREFIX_PAGES, "host_pages": PREFIX_HOST_PAGES,
+            "sys_tokens": PREFIX_SYS, "user_tokens": PREFIX_USER,
+            "n_requests": len(wave),
+            "skip_off": off, "skip_on": on,
+            "ttft_p50_reduction_x": ttft_x,
+        }
+        if verbose:
+            print(f"# serve_bench prefix  {on['tok_s']:8.1f} tok/s "
+                  f"(warm shared-prefix, {PREFIX_PAGES} pages) "
+                  f"ttft_p50={on['ttft_p50_ms']:.1f}ms "
+                  f"vs {off['ttft_p50_ms']:.1f}ms skip-off "
+                  f"({ttft_x:.1f}x) "
+                  f"skipped={on['skip_fraction']:.0%} "
+                  f"full_skips={on['prefix_skips']} "
+                  "token-identical to skip-off")
+        emit("serve_prefix_warm_tok_s", on["tok_s"], "tok_per_s")
+        emit("serve_prefix_ttft_p50_on", on["ttft_p50_ms"] * 1e3, "us")
+        emit("serve_prefix_ttft_p50_off", off["ttft_p50_ms"] * 1e3,
+             "us")
+        emit("serve_prefix_ttft_reduction", ttft_x, "x_p50")
+        emit("serve_prefix_skip_fraction", on["skip_fraction"],
+             "fraction")
+        emit("serve_prefix_full_skips", on["prefix_skips"],
+             "requests")
     if verbose:
         print(f"# serve_bench dense   {dense_tok / dense_s:8.1f} tok/s "
               f"(short trace, peak_active={SLOTS_DENSE})")
@@ -447,11 +589,19 @@ if __name__ == "__main__":
     ap.add_argument("--host-pages", type=int, default=0,
                     help="host-tier pages for --tiering "
                          f"(0 = {TIER_HOST_PAGES})")
+    ap.add_argument("--prefix-heavy", action="store_true",
+                    help="also serve the warm shared-system-prompt "
+                         "wave with compute skip off vs on (DESIGN.md "
+                         "§4e) at the same page budget: asserts >= 5x "
+                         "p50 TTFT reduction and >= 80% prefill "
+                         "tokens skipped outside --smoke, plus token "
+                         "parity always")
     ap.add_argument("--seed", type=int, default=0,
                     help="trace-generation seed: every trace "
-                         "(short/mixed/pressure) derives from it, so "
-                         "runs are reproducible across machines")
+                         "(short/mixed/pressure/prefix) derives from "
+                         "it, so runs are reproducible across "
+                         "machines")
     args = ap.parse_args()
     run(out_path=args.out, smoke=args.smoke, kv_shards=args.kv_shards,
         tiering=args.tiering, host_pages=args.host_pages,
-        seed=args.seed)
+        prefix_heavy=args.prefix_heavy, seed=args.seed)

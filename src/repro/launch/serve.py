@@ -13,6 +13,11 @@ Usage:
       --pages 16 --tiering --host-pages 64   # two-tier percolation:
                              # preempted KV offloads to host DRAM and
                              # restores on re-admission (DESIGN.md §4d)
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --tiering --prefix-cache-compute   # prefix-cache compute skip
+                             # (DESIGN.md §4e): covered prompts admit
+                             # straight to decode off cached
+                             # activation checkpoints
 """
 
 from __future__ import annotations
@@ -53,6 +58,12 @@ def main():
     ap.add_argument("--host-pages", type=int, default=0,
                     help="host-tier capacity in pages "
                          "(0 = 4x the device pool)")
+    ap.add_argument("--prefix-cache-compute", action="store_true",
+                    help="prefix-cache compute skip (DESIGN.md §4e): "
+                         "prompts covered by cached prefix pages skip "
+                         "the covered prefill compute; fully-covered "
+                         "prompts admit straight to decode from the "
+                         "cached activation checkpoint")
     args = ap.parse_args()
 
     import repro.configs as configs
@@ -72,7 +83,9 @@ def main():
                       step_tokens=args.step_tokens or None,
                       kv_shards=args.kv_shards, mesh=mesh,
                       tiering=args.tiering,
-                      host_pages=args.host_pages, **kw)
+                      host_pages=args.host_pages,
+                      prefix_cache_compute=args.prefix_cache_compute,
+                      **kw)
     if args.tiering and hasattr(eng, "kvc"):
         pool = eng.kvc.pool
         print(f"[serve] two-tier pool: {pool.capacity} device pages "
@@ -121,6 +134,11 @@ def main():
                   f"offload_bytes={s['offload_bytes']} "
                   f"promote_bytes={s['promote_bytes']} "
                   f"overlap={s['copy_compute_overlap']:.2f}")
+        if s.get("prefix_cache_compute"):
+            print(f"[serve] compute skip: "
+                  f"full_skips={s['prefix_skips']} "
+                  f"prefill_tokens_skipped="
+                  f"{s['prefill_tokens_skipped']}")
         print(f"[serve] ttft_p50={s['ttft_p50_ms']:.0f}ms "
               f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
               f"itl_p50={s['itl_p50_ms']:.1f}ms "

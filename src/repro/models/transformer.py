@@ -29,7 +29,19 @@ Entry points:
                                             one page-aligned chunk of a
                                             prompt attends the pages of
                                             earlier chunks and extends
-                                            the paged cache, §4b)
+                                            the paged cache, §4b;
+                                            all_hidden=True returns the
+                                            chunk's post-norm hidden
+                                            states instead of logits —
+                                            the activation checkpoints
+                                            compute skip stores, §4e)
+  resume_prefill(params, hidden)            -> logits
+                                            (prefix-cache compute skip,
+                                            §4e: first-token logits
+                                            from a cached last-position
+                                            activation checkpoint — a
+                                            fully-covered prompt runs
+                                            no transformer pass at all)
 
 `batch` is a dict: tokens (B,S) int32; labels (B,S) for train;
 patch_embeds (B,Nimg,Df) for vlm; frame_embeds (B,S,D) for audio;
@@ -404,7 +416,8 @@ def logits_fn(params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
 
 def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
             use_pallas: bool = False, tp: int = 1,
-            full_kv: bool = False, last_index=None
+            full_kv: bool = False, last_index=None,
+            all_hidden: bool = False
             ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Full-sequence forward that also builds the decode cache.
 
@@ -416,6 +429,9 @@ def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
     which position's hidden state is returned instead of the final
     one — used by right-padded prefills, where the real sequence ends
     before the padded buffer does, without recompiling per length.
+    `all_hidden=True` returns the full post-norm hidden (B, S, D)
+    instead (`last_index` ignored) — callers index it themselves and
+    checkpoint page-boundary positions for compute skip (§4e).
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -521,6 +537,8 @@ def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
         raise ValueError(fam)
 
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if all_hidden:
+        return x, cache
     if last_index is None:
         return x[:, -1], cache
     out = jax.lax.dynamic_index_in_dim(x, last_index, axis=1,
@@ -853,7 +871,8 @@ def decode_step_paged(params: Params, pages: Dict[str, Any],
 
 def prefill_chunk(params: Params, pages: Dict[str, Any],
                   batch: Dict[str, Any], cfg: ArchConfig,
-                  tp: int = 1, use_pallas: bool = False
+                  tp: int = 1, use_pallas: bool = False,
+                  all_hidden: bool = False
                   ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
     """Resumable chunked prefill: one page-aligned chunk of a prompt
     consumes and extends the paged KV cache (DESIGN.md §4b).
@@ -877,7 +896,10 @@ def prefill_chunk(params: Params, pages: Dict[str, Any],
     the final partial page beyond the slot's clock; masks never read
     it, and the first decode write overwrites it (same invariant as
     the whole-prompt attach path).  Returns (logits (B, V) f32, new
-    pages).
+    pages); with ``all_hidden=True`` the post-norm hidden (B, C, D)
+    replaces the logits (`last_index` ignored) — callers index the
+    last position themselves and checkpoint the chunk's page-boundary
+    activations for compute skip (§4e).
     """
     if cfg.family not in PAGED_FAMILIES:
         raise ValueError(
@@ -935,7 +957,26 @@ def prefill_chunk(params: Params, pages: Dict[str, Any],
     x, (k_new, v_new) = jax.lax.scan(
         layer, x, (params["layers"], pages["k"], pages["v"]))
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if all_hidden:
+        return x, dict(pages, k=k_new, v=v_new)
     out = jax.lax.dynamic_index_in_dim(x, last_index, axis=1,
                                        keepdims=False)
     logits = logits_fn(params, out)
     return logits, dict(pages, k=k_new, v=v_new)
+
+
+def resume_prefill(params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
+    """First-token logits from a cached last-position activation
+    checkpoint (prefix-cache compute skip, DESIGN.md §4e).
+
+    ``hidden`` (B, D) is the post-final-norm hidden state of a
+    prompt's last position, checkpointed by an earlier prefill of the
+    identical padded prefix and stored in the page pool's prefix index
+    alongside the KV pages.  A fully-covered prompt needs no
+    transformer pass at all: its KV is resident in shared pages, and
+    this one vocab projection reproduces the logits its own prefill
+    would have computed.  Partial covers need no checkpoint —
+    `prefill_chunk` is resumable from any page-aligned position given
+    only the prefix KV pages.
+    """
+    return logits_fn(params, hidden)

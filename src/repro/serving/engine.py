@@ -436,6 +436,17 @@ class PagedServingEngine(_EngineBase):
     stages the next admission's host->device copies while the current
     batch computes.  Greedy outputs are token-identical with tiering
     on or off.
+
+    ``prefix_cache_compute=True`` turns the prefix cache's memory
+    savings into COMPUTE savings (DESIGN.md §4e): every prefill
+    checkpoints the post-norm hidden state at each page's last
+    position into the prefix index, and a later prompt fully covered
+    by cached pages admits straight to decode — its first token is
+    sampled from the cached checkpoint (`T.resume_prefill`), zero
+    transformer passes.  This whole-prompt engine skips full covers
+    only; the chunked engine also resumes partially covered prompts
+    at the cover's end.  Greedy outputs are token-identical with the
+    flag on or off.
     """
 
     _FULL_KV = True
@@ -445,7 +456,8 @@ class PagedServingEngine(_EngineBase):
                  page_size: int = 16, n_pages: Optional[int] = None,
                  kv_shards: int = 1, mesh=None,
                  rebalance_tolerance: Optional[int] = None,
-                 tiering: bool = False, host_pages: int = 0):
+                 tiering: bool = False, host_pages: int = 0,
+                 prefix_cache_compute: bool = False):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets)
         if n_pages is None:
@@ -476,6 +488,85 @@ class PagedServingEngine(_EngineBase):
         self.offloads = 0       # preemptions that wrote KV back to host
         self.restores = 0       # re-admissions that skipped prefill
         self.counters: List[dict] = []         # per-step telemetry
+        # prefix-cache compute skip (DESIGN.md §4e)
+        self._prefix_skip = bool(prefix_cache_compute)
+        self.prefix_skips = 0            # fully-covered admissions
+        self.prefill_tokens_skipped = 0  # prompt tokens never recomputed
+        self._resume_logits = jax.jit(
+            lambda p, h: T.resume_prefill(p, h))
+
+    def _prefill_fn(self, bucket: int):
+        """One compiled prefill per bucket, like the base engine's, but
+        also returning the post-norm hidden at every page boundary plus
+        the true last position — the activation checkpoints the prefix
+        index stores for compute skip (DESIGN.md §4e).  The extra
+        outputs are one tiny gather; the host copy that stores them is
+        gated on `prefix_cache_compute` (the pool is per-engine, so a
+        skip-off engine could never read them back)."""
+        if bucket not in self._prefills:
+            cfg = self.cfg
+            ps = self.kvc.pool.page_size
+
+            def fn(params, tokens, last_index):
+                batch = {"tokens": tokens}
+                hidden, cache = T.prefill(params, batch, cfg,
+                                          full_kv=True, all_hidden=True)
+                last = jax.lax.dynamic_index_in_dim(
+                    hidden, last_index, axis=1, keepdims=False)
+                return (T.logits_fn(params, last), cache,
+                        hidden[:, ps - 1::ps], last)
+            self._prefills[bucket] = jax.jit(fn)
+        return self._prefills[bucket]
+
+    # -- prefix-cache compute skip (DESIGN.md §4e) --------------------
+    def _admit_skip(self, item: dict, padded: np.ndarray, real: int,
+                    cov) -> bool:
+        """Admit the queue head's fully-covered prompt straight to
+        decode: attach the cached pages by refcount and sample the
+        first token from the stored activation checkpoint — zero
+        prefill compute, TTFT of one resume step.  False leaves the
+        item at the queue head (pages or a promotion row not available
+        yet — head-of-line blocking, like any page-gated admission)."""
+        kvc = self.kvc
+        need = sum(kvc.pool.page_cost(k) for k in cov.keys) + 1
+        if need + self._upcoming_allocs() > kvc.pool.free_pages:
+            return False
+        self.queue.pop(0)
+        slot = self.free_slots.pop(0)
+        t0 = time.perf_counter()
+        try:
+            kvc.attach_covered(slot, padded, cov.keys)
+        except PageExhausted:
+            # a covered page spilled and its promotion lost the race
+            # for a device row; everything was rolled back — retry
+            self.free_slots.append(slot)
+            self.queue.insert(0, item)
+            return False
+        req = item["req"]
+        logits = self._resume_logits(self.params,
+                                     jnp.asarray(cov.hidden)[None])
+        first = self._sample(logits[0], req, len(item["gen"]))
+        now = time.perf_counter()
+        self.prefix_skips += 1
+        self.prefill_tokens_skipped += real
+        self.active[slot] = {
+            "req": req, "tokens": item["gen"] + [int(first)],
+            "phase": "decode",       # no prefill phase at all (§4e)
+            "n_gen0": len(item["gen"]),
+            "prefill_s": now - t0,
+            "t0": now,
+            "seq": next(self._seq),
+            "preempts": item["preempts"],
+            "bucket": item["bucket"] if item["gen"] else real,
+            "admit_step": len(self.counters),
+            **self._latency_state(item, now),
+        }
+        self._first_token(self.active[slot], now)
+        if self._stopped(req, self.active[slot]["tokens"]):
+            self._finish(self.active.pop(slot))
+            kvc.release(slot)
+            self.free_slots.append(slot)
+        return True
 
     # -- page-gated admission -----------------------------------------
     def _admission_layout(self, item: dict) -> Optional[tuple]:
@@ -541,6 +632,12 @@ class PagedServingEngine(_EngineBase):
             if layout is None:
                 continue
             padded, real, need = layout
+            if self._prefix_skip:
+                cov = self.kvc.covered_prefix(padded)
+                if cov.full:
+                    if self._admit_skip(item, padded, real, cov):
+                        continue
+                    break                      # head-of-line blocking
             # admit on PAGES, not slots: prefill pages (prefix-shared
             # ones are free), one decode page of headroom, plus a
             # watermark for active slots whose next write takes a page
@@ -559,12 +656,16 @@ class PagedServingEngine(_EngineBase):
             bucket = self._bucket(real)
             toks = np.zeros(bucket, np.int32)
             toks[:real] = padded
-            logits, pcache = self._prefill_fn(bucket)(
+            logits, pcache, bh, hlast = self._prefill_fn(bucket)(
                 self.params, jnp.asarray(toks[None]),
                 jnp.int32(real - 1))
             self.kvc.attach(slot, padded,
                             pcache["k"][:, 0, :real],
                             pcache["v"][:, 0, :real])
+            if self._prefix_skip:
+                self.kvc.store_hidden_prefill(slot, real,
+                                              np.asarray(bh[0]),
+                                              np.asarray(hlast[0]))
             first = self._sample(logits[0], req, len(item["gen"]))
             now = time.perf_counter()
             self.active[slot] = {
@@ -869,6 +970,11 @@ class PagedServingEngine(_EngineBase):
             "mean_itl_ms": _mean(itls),
             "itl_p50_ms": _pct(itls, 50),
             "itl_p95_ms": _pct(itls, 95),
+            # prefix-cache compute skip (DESIGN.md §4e): covered
+            # admissions and the prompt tokens never recomputed
+            "prefix_cache_compute": self._prefix_skip,
+            "prefix_skips": self.prefix_skips,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
         }
         # two-tier percolation telemetry (DESIGN.md §4d): offload /
         # promote traffic, prefetch overlap, write-back effectiveness
@@ -895,6 +1001,15 @@ class ChunkedPagedServingEngine(PagedServingEngine):
     like exhaustion mid-decode (the preempted request re-enters the
     queue and re-prefills from scratch on re-admission — deterministic,
     since an identical padded layout reproduces identical pages).
+
+    With ``prefix_cache_compute=True`` (DESIGN.md §4e) admission first
+    measures the prompt's covered prefix: fully-covered prompts skip
+    prefill entirely (first token off the cached activation
+    checkpoint), and partially-covered ones attach the cached pages
+    by refcount and start chunking at the cover's end — the step
+    budget is charged only for uncovered tokens, so a warm
+    shared-system-prompt wave prefills at a fraction of its cold cost
+    (`serve_bench --prefix-heavy` measures the TTFT dividend).
     """
 
     def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
@@ -904,13 +1019,15 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  step_tokens: Optional[int] = None,
                  kv_shards: int = 1, mesh=None,
                  rebalance_tolerance: Optional[int] = None,
-                 tiering: bool = False, host_pages: int = 0):
+                 tiering: bool = False, host_pages: int = 0,
+                 prefix_cache_compute: bool = False):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
                          page_size=page_size, n_pages=n_pages,
                          kv_shards=kv_shards, mesh=mesh,
                          rebalance_tolerance=rebalance_tolerance,
-                         tiering=tiering, host_pages=host_pages)
+                         tiering=tiering, host_pages=host_pages,
+                         prefix_cache_compute=prefix_cache_compute)
         if chunk_size is None:
             chunk_size = 2 * page_size
         if chunk_size <= 0 or chunk_size % page_size:
@@ -926,13 +1043,21 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 f"step_tokens {self.step_tokens} must cover at least "
                 f"one chunk of {self.chunk_size}")
         # ONE compiled chunk step (fixed chunk width; the true last
-        # position and start offset are traced operands)
-        self._chunk_step = jax.jit(
-            lambda p, pages, toks, tables, start, rows, last:
-            T.prefill_chunk(p, pages, {
+        # position and start offset are traced operands).  Besides the
+        # logits it returns the post-norm hidden at the true last
+        # position and at every page boundary — the activation
+        # checkpoints the prefix index stores for compute skip (§4e)
+        ps = page_size
+
+        def chunk_fn(p, pages, toks, tables, start, rows, last):
+            x, pages = T.prefill_chunk(p, pages, {
                 "tokens": toks, "block_tables": tables, "start": start,
-                "chunk_rows": rows, "last_index": last}, cfg),
-            donate_argnums=(1,))
+                "chunk_rows": rows, "last_index": last}, cfg,
+                all_hidden=True)
+            out = jax.lax.dynamic_index_in_dim(x, last, axis=1,
+                                               keepdims=False)
+            return T.logits_fn(p, out), out, x[:, ps - 1::ps], pages
+        self._chunk_step = jax.jit(chunk_fn, donate_argnums=(1,))
 
     # -- admission: gated on the first chunk, not the whole prompt ----
     def _upcoming_allocs(self) -> int:
@@ -963,21 +1088,49 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             if layout is None:
                 continue
             padded, real, _ = layout
-            # gate on the FIRST chunk plus one page of headroom (and
-            # the watermark); later chunks allocate as they are
-            # scheduled and preempt under pressure
-            first_end = min(self.chunk_size, real)
+            # compute skip (§4e): a fully-covered prompt admits
+            # straight to decode off its cached checkpoint; a partial
+            # cover starts chunking at the cover's end, charging only
+            # uncovered tokens against the step budget
+            start = 0
+            cov = None
+            if self._prefix_skip:
+                cov = self.kvc.covered_prefix(padded)
+                if cov.full:
+                    if self._admit_skip(item, padded, real, cov):
+                        continue
+                    break                      # head-of-line blocking
+                start = cov.covered
+            # gate on the first UNCOVERED chunk plus one page of
+            # headroom (and the watermark), plus any device rows the
+            # covered pages' promotions will take; later chunks
+            # allocate as they are scheduled and preempt under pressure
+            first_end = min(start + self.chunk_size, real)
             upcoming = self._upcoming_allocs()
-            need = self.kvc.pages_needed_chunk(padded, 0, first_end) + 1
+            need = self.kvc.pages_needed_chunk(padded, start,
+                                               first_end) + 1
+            if cov is not None:
+                need += sum(self.kvc.pool.page_cost(k)
+                            for k in cov.keys)
             if need + upcoming > self.kvc.pool.free_pages:
                 break                          # head-of-line blocking
             self.queue.pop(0)
             slot = self.free_slots.pop(0)
+            if start:
+                try:
+                    self.kvc.attach_covered(slot, padded, cov.keys)
+                except PageExhausted:
+                    # a covered page's promotion lost its device row;
+                    # rolled back — retry from the queue head later
+                    self.free_slots.append(slot)
+                    self.queue.insert(0, item)
+                    break
+                self.prefill_tokens_skipped += start
             now = time.perf_counter()
             self.active[slot] = {
                 "req": req, "tokens": list(item["gen"]),
                 "phase": "prefill",
-                "padded": padded, "real": real, "pos": 0,
+                "padded": padded, "real": real, "pos": start,
                 "prefill_s": 0.0,
                 "t0": now,                      # reset at first token
                 "seq": next(self._seq),
@@ -1013,8 +1166,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         end = start + take
         while True:
             try:
-                rows = self.kvc.begin_chunk(slot, st["padded"],
-                                            start, end)
+                rows, _ = self.kvc.begin_chunk(slot, st["padded"],
+                                               start, end)
                 break
             except PageExhausted:
                 if len(self.active) <= 1:
@@ -1038,7 +1191,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         rows_arr = np.full(self.chunk_size // ps,
                            self.kvc.pool.null_row, np.int32)
         rows_arr[:len(rows)] = rows
-        logits, pages = self._chunk_step(
+        logits, hlast, bh, pages = self._chunk_step(
             self.params, self.kvc.pool.pages,
             jnp.asarray(toks[None]),
             jnp.asarray(self.kvc.tables[slot][None]),
@@ -1046,6 +1199,13 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             jnp.asarray(rows_arr[None]),
             jnp.int32(take - 1))
         self.kvc.pool.pages = pages
+        if self._prefix_skip:
+            # checkpoint the chunk's page-boundary activations into
+            # the prefix index (one small host copy) — later identical
+            # prefixes resume from them instead of recomputing (§4e)
+            self.kvc.store_hidden_chunk(slot, start, end,
+                                        np.asarray(bh[0]),
+                                        np.asarray(hlast[0]))
         st["pos"] = end
         st["prefill_s"] += time.perf_counter() - t0
         if end == st["real"]:
@@ -1158,6 +1318,6 @@ def make_engine(params: Any, cfg: ArchConfig, *,
         return PagedServingEngine(params, cfg, **kwargs)
     for k in ("page_size", "n_pages", "chunk_size", "step_tokens",
               "kv_shards", "mesh", "rebalance_tolerance", "tiering",
-              "host_pages"):
+              "host_pages", "prefix_cache_compute"):
         kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

@@ -13,8 +13,11 @@ Three layers live here:
 
 * `PagePool` — the allocator: AGAS-backed gid -> physical-row mapping,
   per-page refcounts, a prompt-prefix hash index enabling pages shared
-  between requests (copy-on-write on first divergent append), and the
-  device arrays themselves.  Single locality (``n_shards == 1``):
+  between requests (copy-on-write on first divergent append) — and,
+  alongside each indexed page, the post-norm hidden state of the
+  page's last position (the activation checkpoint prefix-cache
+  compute skip resumes from, DESIGN.md §4e) — and the device arrays
+  themselves.  Single locality (``n_shards == 1``):
   ``pages["k"]/pages["v"]`` of shape ``(L, n_pages + 1, page_size, KV,
   D)``; the extra trailing row is the *null page*, the write target of
   idle decode slots — never read because the per-slot masks exclude
@@ -169,6 +172,9 @@ class PagePool:
         self._refs: Dict[int, int] = {}            # gid -> refcount
         self._prefix: Dict[Tuple[bytes, int], GlobalAddress] = {}
         self._key_of: Dict[int, Tuple[bytes, int]] = {}
+        # gid -> last-position activation checkpoint (np, (D,)): lives
+        # and dies with the page's prefix-index membership (§4e)
+        self._hidden: Dict[int, np.ndarray] = {}
         self.pages: Dict[str, Any] = init_paged_cache(
             cfg, self.rows_per_shard, self.page_size, dtype,
             n_shards=self.n_shards)
@@ -242,6 +248,7 @@ class PagePool:
         self._refs[addr.gid] -= 1
         if self._refs[addr.gid] == 0:
             del self._refs[addr.gid]
+            self._hidden.pop(addr.gid, None)
             key = self._key_of.pop(addr.gid, None)
             if key is not None:
                 cur = self._prefix.get(key)
@@ -295,6 +302,35 @@ class PagePool:
         if key not in self._prefix and addr.gid not in self._key_of:
             self._prefix[key] = addr
             self._key_of[addr.gid] = key
+
+    # -- activation checkpoints (compute skip, DESIGN.md §4e) ---------
+    def store_hidden(self, addr: GlobalAddress, hidden) -> None:
+        """Attach the post-norm hidden state of a page's last position
+        to a prefix-indexed page.  First write wins: the checkpoint is
+        always the value the page's first writer computed, so repeated
+        shares can never swap in a bit-different recomputation.  Pages
+        outside the prefix index carry no checkpoint (nothing could
+        ever look it up)."""
+        gid = addr.gid
+        if gid in self._key_of and gid not in self._hidden:
+            self._hidden[gid] = np.asarray(hidden)
+
+    def hidden_for(self, key: Tuple[bytes, int]
+                   ) -> Optional[np.ndarray]:
+        """The activation checkpoint cached under a prefix key, or
+        None (key unknown, or its page was written before compute
+        skip could checkpoint it)."""
+        addr = self._prefix.get(key)
+        if addr is None:
+            return None
+        return self._hidden.get(addr.gid)
+
+    def hidden_nbytes(self, addrs) -> int:
+        """Bytes of activation checkpoints riding these pages — the
+        tiered pool adds them to its percolation parcel byte counts,
+        since a checkpoint moves (and dies) with its page chain."""
+        return sum(self._hidden[a.gid].nbytes for a in addrs
+                   if a.gid in self._hidden)
 
     # -- device-side page content -------------------------------------
     def write_pages(self, rows: List[int], k_spans, v_spans) -> None:
@@ -485,6 +521,25 @@ class _SlotState:
 
 
 @dataclasses.dataclass
+class PrefixCover:
+    """The longest cached prefix run of a padded prompt (DESIGN.md
+    §4e): `keys` are the covered pages' chain keys (each currently a
+    prefix-index hit), `covered` the tokens they hold.  `full` means
+    every page of the prompt hit AND the final page carries an
+    activation checkpoint (`hidden`, the post-norm last-position
+    hidden state) — the prompt can admit straight to decode with zero
+    prefill compute.  Partial covers are page-aligned by construction
+    (a partially-filled page key can only ever be a prompt's final
+    page, so matching one implies a full cover), which is exactly
+    what lets chunked prefill resume at `covered`."""
+
+    covered: int
+    keys: List[Tuple[bytes, int]]
+    full: bool
+    hidden: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
 class KVSnapshot:
     """A preempted slot's KV, written back to the host tier
     (DESIGN.md §4d).  Holds one refcount on every page — the pages'
@@ -554,13 +609,16 @@ class PagedKVCache:
 
     # -- prefill attach ------------------------------------------------
     def attach(self, slot: int, padded_tokens: np.ndarray,
-               k, v) -> None:
+               k, v) -> int:
         """Install a prefilled prompt into `slot`.
 
         k/v: (L, S, KV, D) full-prompt KV (padded bucket included, so
         the paged path attends exactly what the dense path would).
         Shared pages (prefix-hash hits) are reused by refcount instead
-        of rewritten.
+        of rewritten.  Returns the covered-token count of the longest
+        cached prefix run (leading pages served by hits) — the memory
+        the prefix cache saved, and the span compute skip could have
+        skipped (DESIGN.md §4e).
         """
         ps = self.pool.page_size
         s = len(padded_tokens)
@@ -572,6 +630,8 @@ class PagedKVCache:
         acquired: List[GlobalAddress] = []
         fresh: List[int] = []               # page indices to write
         fresh_gids: set = set()
+        covered = 0
+        leading = True
         try:
             for i, key in enumerate(keys):
                 shared = self.pool.lookup_prefix(key)
@@ -584,7 +644,10 @@ class PagedKVCache:
                     acquired.append(shared)
                     self.pool.ensure_device(shared)
                     self.pool.shares += 1
+                    if leading:
+                        covered += key[1]
                 else:
+                    leading = False
                     addr = self.pool.alloc()
                     self.pool.register_prefix(key, addr)
                     acquired.append(addr)
@@ -617,10 +680,107 @@ class PagedKVCache:
         self.lengths[slot] = s
         for i, a in enumerate(acquired):
             self.tables[slot, i] = self.pool.row(a)
+        return covered
+
+    # -- prefix-cache compute skip (DESIGN.md §4e) --------------------
+    def covered_prefix(self, padded_tokens: np.ndarray) -> PrefixCover:
+        """The longest cached prefix run of a padded prompt.
+
+        Walks the chained page keys until the first prefix-index miss.
+        A full-cover result additionally requires the final page's
+        activation checkpoint; when the KV is all cached but the
+        checkpoint is missing (the pages were attached by a path that
+        never computed hidden states), the final page is dropped from
+        the cover so a resumed chunk recomputes it — the cover is then
+        page-aligned and strictly inside the prompt, exactly what
+        `begin_chunk` needs to resume.
+        """
+        keys = page_keys(padded_tokens, self.pool.page_size)
+        ck: List[Tuple[bytes, int]] = []
+        covered = 0
+        for key in keys:
+            if self.pool.lookup_prefix(key) is None:
+                break
+            ck.append(key)
+            covered += key[1]
+        if covered == len(padded_tokens) and ck:
+            hidden = self.pool.hidden_for(ck[-1])
+            if hidden is not None:
+                return PrefixCover(covered, ck, True, hidden)
+            last = ck.pop()
+            covered -= last[1]
+        return PrefixCover(covered, ck, False)
+
+    def attach_covered(self, slot: int, padded_tokens: np.ndarray,
+                       keys: List[Tuple[bytes, int]]) -> None:
+        """Install a covered prefix's cached pages into `slot` with
+        ZERO prefill compute and zero KV writes: every key must
+        currently hit the prefix index (the caller just computed the
+        cover).  The slot is left exactly as a prefill of the covered
+        span would have left it — block table and position clock — so
+        `begin_chunk` resumes at the cover's end, or decode starts
+        immediately on a full cover.  Atomic under PageExhausted
+        (promoting a spilled page may need a device row, and a
+        promotion-triggered cold drop can even evict a not-yet-pinned
+        covered page): on failure every acquired page returns to the
+        cache and the caller retries later.
+        """
+        st = self._state[slot]
+        assert not st.addrs, f"slot {slot} already attached"
+        pool = self.pool
+        acquired: List[GlobalAddress] = []
+        try:
+            for key in keys:
+                shared = pool.lookup_prefix(key)
+                if shared is None:
+                    raise PageExhausted(
+                        "covered prefix page vanished before attach "
+                        "(cold drop under promotion pressure)")
+                pool.incref(shared)             # pin, then promote
+                acquired.append(shared)
+                pool.ensure_device(shared)
+                pool.shares += 1
+        except PageExhausted:
+            for a in acquired:
+                pool.decref(a)
+            raise
+        covered = sum(k[1] for k in keys)
+        st.addrs = acquired
+        st.length = covered
+        self.lengths[slot] = covered
+        for i, a in enumerate(acquired):
+            self.tables[slot, i] = pool.row(a)
+
+    def store_hidden_chunk(self, slot: int, start: int, end: int,
+                           boundary: np.ndarray,
+                           last: np.ndarray) -> None:
+        """Checkpoint the page-boundary activations of chunk
+        [start, end): ``boundary[j]`` is the post-norm hidden at
+        chunk-local position ``(j + 1) * ps - 1``, ``last`` the hidden
+        at ``end - 1`` (the partial final page of a prompt's last
+        chunk).  First write wins (`PagePool.store_hidden`)."""
+        ps = self.pool.page_size
+        st = self._state[slot]
+        base = start // ps
+        for j in range(-(-(end - start) // ps)):
+            addr = st.addrs[base + j]
+            if start + (j + 1) * ps <= end:
+                self.pool.store_hidden(addr, boundary[j])
+            else:
+                self.pool.store_hidden(addr, last)
+
+    def store_hidden_prefill(self, slot: int, real: int,
+                             boundary: np.ndarray,
+                             last: np.ndarray) -> None:
+        """Checkpoint a whole-prompt prefill's page-boundary
+        activations — exactly the chunk case starting at 0 (attach
+        created one addr per page of ``real``)."""
+        self.store_hidden_chunk(slot, 0, real, boundary, last)
 
     # -- chunked prefill (DESIGN.md §4b) ------------------------------
     def begin_chunk(self, slot: int, padded_tokens: np.ndarray,
-                    start: int, end: int) -> List[int]:
+                    start: int, end: int
+                    ) -> Tuple[List[int], int]:
         """Acquire the pages covering chunk [start, end) of a chunked
         prefill and install them in `slot`'s block table.
 
@@ -629,9 +789,11 @@ class PagedKVCache:
         on the prompt's final chunk, which may leave the last page
         partially filled — the slot holds that partial page between
         the chunk and its first decode write.  Prefix-shared pages are
-        reused by refcount.  Returns one physical write row per page
-        of the chunk, with the pool's null row substituted for shared
-        pages so the compiled scatter cannot clobber shared content.
+        reused by refcount.  Returns ``(rows, covered)``: one physical
+        write row per page of the chunk, with the pool's null row
+        substituted for shared pages so the compiled scatter cannot
+        clobber shared content, and the covered-token count of the
+        chunk's leading run of prefix hits (DESIGN.md §4e telemetry).
         Atomic under PageExhausted: either every page of the chunk is
         acquired or none (the caller preempts a victim and retries).
         """
@@ -665,6 +827,8 @@ class PagedKVCache:
         acquired: List[GlobalAddress] = []
         rows: List[int] = []
         fresh_gids: set = set()
+        covered = 0
+        leading = True
         try:
             for key in keys:
                 shared = self.pool.lookup_prefix(key)
@@ -674,7 +838,10 @@ class PagedKVCache:
                     self.pool.ensure_device(shared)
                     self.pool.shares += 1
                     rows.append(self.pool.null_row)
+                    if leading:
+                        covered += key[1]
                 else:
+                    leading = False
                     addr = self.pool.alloc()
                     self.pool.register_prefix(key, addr)
                     acquired.append(addr)
@@ -696,7 +863,7 @@ class PagedKVCache:
         st.chain = chain
         st.length = end
         self.lengths[slot] = end
-        return rows
+        return rows, covered
 
     # -- decode-step bookkeeping --------------------------------------
     def prepare_decode(self, slot: int) -> None:

@@ -16,7 +16,11 @@ Three mechanisms live here:
   drops to 0 while it is still the prefix index's owner is *retained*
   cold instead of freed (prefix-cache spill): a later request with
   the same prefix shares it by refcount revival, skipping both the
-  page write and — once compute-skip lands — the prefill work.  Cold
+  page write and — with compute skip on (DESIGN.md §4e) — the prefill
+  work itself: the page's activation checkpoint is retained, spilled,
+  and dropped in lockstep with the page (checkpoint bytes ride the
+  demote/promote parcel counters), so a host-resident prefix hit
+  restores KV and activation together.  Cold
   pages form an LRU list; when allocation finds no free device row,
   the least-recently-used cold device page is demoted to host (or
   dropped outright when the host tier is full too).  Pages with
@@ -196,10 +200,12 @@ class TieredPagePool(PagePool):
                 self._prefix[key].gid == addr.gid:
             # prefix-cache spill: the index still owns this page —
             # retain it cold (LRU tail = most recently used) instead
-            # of freeing; a later identical prefix revives it
+            # of freeing, activation checkpoint included; a later
+            # identical prefix revives both
             self._cold[addr.gid] = None
             return
         self._key_of.pop(addr.gid, None)
+        self._hidden.pop(addr.gid, None)
         self.agas.free(addr)
 
     def discard(self, addr: GlobalAddress) -> None:
@@ -210,6 +216,7 @@ class TieredPagePool(PagePool):
         if self._refs[addr.gid] > 0:
             return
         del self._refs[addr.gid]
+        self._hidden.pop(addr.gid, None)
         key = self._key_of.pop(addr.gid, None)
         if key is not None:
             cur = self._prefix.get(key)
@@ -218,10 +225,12 @@ class TieredPagePool(PagePool):
         self.agas.free(addr)
 
     def _drop_cold(self, gid: int) -> None:
-        """Drop a retained page entirely (either tier)."""
+        """Drop a retained page entirely (either tier) — its
+        activation checkpoint dies with the chain."""
         addr = GlobalAddress(gid, self.agas.space)
         self.xfer.drop(("page", gid))    # gids never recycle: a
         del self._cold[gid]              # staged copy can't be claimed
+        self._hidden.pop(gid, None)
         key = self._key_of.pop(gid, None)
         if key is not None:
             cur = self._prefix.get(key)
@@ -279,9 +288,11 @@ class TieredPagePool(PagePool):
             spans = {nm: _gather_rows(self.pages[nm], idx)
                      for nm in ("k", "v")}
         payload = self.xfer.to_host(spans)      # one DMA wave out
+        # activation checkpoints spill with their page chain: their
+        # bytes ride the same parcel (§4e)
         self.xfer.queue.record(CopyParcel(
             key, tuple(a.gid for a in addrs), "demote",
-            n * self.page_bytes()))
+            n * self.page_bytes() + self.hidden_nbytes(addrs)))
         for i, a in enumerate(addrs):
             self.agas.migrate(a, self.host_locality)
             hs = self.host_slot(a)
@@ -408,11 +419,12 @@ class TieredPagePool(PagePool):
             self.pages["v"] = _scatter_rows(self.pages["v"], idx,
                                             payload["v"])
         self.xfer.queue.record_promote_commit(prefetched)
-        # traffic counted at COMMIT with the unpadded payload size, so
-        # the totals measure copies that landed, demand or staged
+        # traffic counted at COMMIT with the unpadded payload size
+        # (checkpoints promote with their chain, §4e), so the totals
+        # measure copies that landed, demand or staged
         self.xfer.queue.record(CopyParcel(
             staged_key, tuple(a.gid for a in todo), "promote",
-            len(todo) * self.page_bytes()))
+            len(todo) * self.page_bytes() + self.hidden_nbytes(todo)))
         self.promoted += len(todo)
         # every page in `addrs` is device-resident now: retire any
         # per-page staging that arrived by another path, or the stale

@@ -1,0 +1,223 @@
+"""Prefix-cache compute skip (DESIGN.md §4e): fully / partially /
+un-cached prompts are token-identical to cold prefill, a full cover
+admits with zero prefill compute, checkpoints survive a spill to the
+host tier, and COW handles divergence inside a covered partial page.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.serving.engine import Request, make_engine
+from repro.serving.kvcache import PagedKVCache
+
+RNG = np.random.default_rng(31)
+
+KW = dict(slots=4, max_len=160, prefill_buckets=(32,), page_size=16,
+          chunk_size=32, n_pages=48, tiering=True, host_pages=48,
+          prefix_cache_compute=True)
+
+
+@pytest.fixture(scope="module", params=["yi-6b", "mixtral-8x7b"])
+def setup(request):
+    cfg = configs.get_reduced(request.param)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg):
+    """A/B share a 56-token head and a common total length (80), so
+    their left-padded layouts (bucket 96, pad 16) agree on the first
+    72 tokens = 4 full pages; C is a different length entirely."""
+    rng = np.random.default_rng(17)
+    head = rng.integers(0, cfg.vocab_size, size=56)
+    tail_a = rng.integers(0, cfg.vocab_size, size=24)
+    tail_b = rng.integers(0, cfg.vocab_size, size=24)
+    a = np.concatenate([head, tail_a]).astype(np.int32)
+    b = np.concatenate([head, tail_b]).astype(np.int32)
+    c = rng.integers(0, cfg.vocab_size, size=40).astype(np.int32)
+    return a, b, c
+
+
+def _serve(eng, reqs, **rtc):
+    futs = [eng.submit(r) for r in reqs]
+    eng.run_to_completion(**rtc)
+    return {f.get().rid: f.get().tokens for f in futs}
+
+
+def _cold(params, cfg, prompt, max_new, engine="chunked"):
+    """Cold-prefill ground truth: a fresh engine, nothing cached."""
+    eng = make_engine(params, cfg, engine=engine, **KW)
+    return _serve(eng, [Request(0, prompt, max_new_tokens=max_new)])[0]
+
+
+# -- the headline parity: full / partial / uncached vs cold prefill ----
+
+def test_full_partial_uncached_parity_vs_cold(setup):
+    cfg, params = setup
+    a, b, c = _prompts(cfg)
+    truth = {p.tobytes(): _cold(params, cfg, p, 6) for p in (a, b, c)}
+
+    eng = make_engine(params, cfg, **KW)
+    warm = _serve(eng, [Request(0, a, max_new_tokens=6)])
+    assert warm[0] == truth[a.tobytes()]
+    assert eng.prefix_skips == 0            # nothing cached yet
+
+    got = _serve(eng, [Request(1, a, max_new_tokens=6),   # full cover
+                       Request(2, b, max_new_tokens=6),   # partial
+                       Request(3, c, max_new_tokens=6)])  # uncached
+    assert got[1] == truth[a.tobytes()]
+    assert got[2] == truth[b.tobytes()]
+    assert got[3] == truth[c.tobytes()]
+    # the repeat admitted straight to decode (96); B skipped its 4
+    # covered pages (pad 16 + head 56 = 72 -> 64 page-aligned) of
+    # bucket 96; even "uncached" C covers its all-zeros left-pad page
+    # (16) — zero tokens at positions 0..15 hash and prefill
+    # identically whatever prompt follows them
+    assert eng.prefix_skips == 1
+    assert eng.prefill_tokens_skipped == 96 + 64 + 16
+    st = eng.stats()
+    assert st["prefix_cache_compute"] is True
+    assert st["prefill_tokens_skipped"] == 176
+
+
+def test_whole_prompt_engine_full_cover_skips(setup):
+    """The whole-prompt paged engine rides the same full-cover path
+    (partial covers still prefill whole — memory sharing only)."""
+    cfg, params = setup
+    a, _, _ = _prompts(cfg)
+    truth = _cold(params, cfg, a, 6, engine="paged")
+    eng = make_engine(params, cfg, engine="paged", **KW)
+    warm = _serve(eng, [Request(0, a, max_new_tokens=6)])
+    assert warm[0] == truth
+    got = _serve(eng, [Request(1, a, max_new_tokens=6)])
+    assert got[1] == truth
+    assert eng.prefix_skips == 1
+    assert eng.prefill_tokens_skipped == 96
+
+
+def test_spilled_activation_restores_with_its_pages(setup):
+    """A prefix hit whose pages AND activation checkpoint spilled to
+    host: the full-cover skip still works — ensure_device promotes
+    the chain, the checkpoint rides along, outputs stay cold-exact."""
+    cfg, params = setup
+    a, _, _ = _prompts(cfg)
+    truth = _cold(params, cfg, a, 6)
+    eng = make_engine(params, cfg, **KW)
+    _serve(eng, [Request(0, a, max_new_tokens=6)])
+    moved = eng.force_demote()              # spill every cold page
+    pool = eng.kvc.pool
+    assert moved > 0 and pool.host_used > 0
+    promoted_before = pool.promoted
+    got = _serve(eng, [Request(1, a, max_new_tokens=6)])
+    assert got[1] == truth
+    assert eng.prefix_skips == 1            # still a zero-compute admit
+    assert pool.promoted > promoted_before  # the hit really promoted
+
+
+def test_cow_divergence_mid_covered_page(setup):
+    """Two fully-covered repeats decode concurrently: both append into
+    the covered PARTIAL page, so the first divergent write must COW —
+    and both must still match the cold reference.  A partial final
+    page needs a bucket that is not a page multiple (40 -> the last
+    page holds 8 of 16); the standard 32-ladder always page-aligns."""
+    cfg, params = setup
+    kw = dict(KW, prefill_buckets=(40,))
+    rng = np.random.default_rng(41)
+    a = rng.integers(0, cfg.vocab_size, size=36).astype(np.int32)
+    eng_cold = make_engine(params, cfg, **kw)
+    truth = _serve(eng_cold, [Request(0, a, max_new_tokens=10)])[0]
+    eng = make_engine(params, cfg, **kw)
+    _serve(eng, [Request(0, a, max_new_tokens=10)])
+    cow_before = eng.kvc.pool.cow_copies
+    got = _serve(eng, [Request(1, a, max_new_tokens=10),
+                       Request(2, a, max_new_tokens=10)])
+    assert got[1] == truth and got[2] == truth
+    assert eng.prefix_skips == 2
+    assert eng.kvc.pool.cow_copies > cow_before
+
+
+def test_skip_off_engine_shares_memory_but_never_skips(setup):
+    cfg, params = setup
+    a, _, _ = _prompts(cfg)
+    kw = dict(KW, prefix_cache_compute=False)
+    truth = _cold(params, cfg, a, 6)
+    eng = make_engine(params, cfg, **kw)
+    _serve(eng, [Request(0, a, max_new_tokens=6)])
+    got = _serve(eng, [Request(1, a, max_new_tokens=6)])
+    assert got[1] == truth
+    assert eng.kvc.pool.shares > 0          # memory savings stay
+    assert eng.prefix_skips == 0
+    assert eng.prefill_tokens_skipped == 0
+
+
+# -- kvcache-level unit coverage ---------------------------------------
+
+def test_covered_prefix_requires_checkpoint_for_full_cover():
+    """KV cached but no activation checkpoint (the pages came from a
+    path that never computed hidden states): the cover drops the final
+    page so a resumed chunk recomputes it — page-aligned, inside the
+    prompt."""
+    cfg = configs.get_reduced("yi-6b")
+    kvc = PagedKVCache(cfg, slots=2, max_len=96, n_pages=6,
+                       page_size=16, host_pages=8)
+    padded = RNG.integers(0, 100, size=40).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((L, 40, kvh, hd), jnp.float32)
+    kvc.attach(0, padded, z, z)             # 2 full pages + 8/16
+    kvc.release(0)                          # retained cold (tiered)
+    cov = kvc.covered_prefix(padded)
+    assert not cov.full
+    assert cov.covered == 32 and len(cov.keys) == 2
+    # checkpoint the final page by hand: the cover completes
+    from repro.serving.kvcache import page_keys
+    keys = page_keys(padded, 16)
+    kvc.pool.store_hidden(kvc.pool.lookup_prefix(keys[-1]),
+                          np.ones(cfg.d_model, np.float32))
+    cov = kvc.covered_prefix(padded)
+    assert cov.full and cov.covered == 40
+    assert cov.hidden is not None
+
+    # attach_covered rebuilds the slot exactly as prefill left it
+    kvc.attach_covered(1, padded, cov.keys)
+    assert kvc.lengths[1] == 40
+    assert kvc.pages_needed(padded) == 0
+    np.testing.assert_array_equal(
+        kvc.tables[1][:3],
+        [kvc.pool.row(a) for a in kvc._state[1].addrs])
+    kvc.release(1)
+
+
+def test_checkpoint_dies_with_its_page():
+    """Dropping a cold page (or freeing an unregistered one) drops its
+    checkpoint; the prefix index can never serve a stale activation."""
+    cfg = configs.get_reduced("yi-6b")
+    kvc = PagedKVCache(cfg, slots=1, max_len=64, n_pages=4,
+                       page_size=16, host_pages=4)
+    pool = kvc.pool
+    padded = RNG.integers(0, 100, size=16).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((L, 16, kvh, hd), jnp.float32)
+    kvc.attach(0, padded, z, z)
+    addr = kvc._state[0].addrs[0]
+    pool.store_hidden(addr, np.ones(4, np.float32))
+    from repro.serving.kvcache import page_keys
+    key = page_keys(padded, 16)[0]
+    assert pool.hidden_for(key) is not None
+    kvc.release(0)                          # cold, checkpoint retained
+    assert pool.hidden_for(key) is not None
+    pool._drop_cold(addr.gid)
+    assert pool.hidden_for(key) is None
+    assert addr.gid not in pool._hidden
+
+
+def test_resume_prefill_is_the_vocab_projection():
+    cfg = configs.get_reduced("yi-6b")
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    h = jnp.asarray(RNG.normal(size=(1, cfg.d_model)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(T.resume_prefill(params, h)),
+        np.asarray(T.logits_fn(params, h)))

@@ -82,10 +82,11 @@ def test_begin_chunk_accounting_and_prefix_chain():
                        page_size=16)
     padded = RNG.integers(0, 100, size=40).astype(np.int32)
     # chunk 1: two full pages; chunk 2: one partial page (8 of 16)
-    rows0 = kvc.begin_chunk(0, padded, 0, 32)
+    rows0, cov0 = kvc.begin_chunk(0, padded, 0, 32)
     assert len(rows0) == 2 and kvc.lengths[0] == 32
+    assert cov0 == 0                    # cold: nothing covered
     assert all(r != kvc.pool.null_row for r in rows0)
-    rows1 = kvc.begin_chunk(0, padded, 32, 40)
+    rows1, _ = kvc.begin_chunk(0, padded, 32, 40)
     assert len(rows1) == 1 and kvc.lengths[0] == 40
     assert kvc.pool.used_pages == 3
     # the partial last page is held between prefill and decode: the
@@ -99,7 +100,8 @@ def test_begin_chunk_accounting_and_prefix_chain():
     assert kvc.pages_needed(padded) == 0
     L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
     k = jnp.zeros((L, 40, kvh, hd), jnp.float32)
-    kvc.attach(1, padded, k, k)
+    covered = kvc.attach(1, padded, k, k)
+    assert covered == 40                # every page a leading hit
     assert kvc.pool.shares == 3
     assert np.array_equal(kvc.tables[0][:3], kvc.tables[1][:3])
     kvc.release(0)

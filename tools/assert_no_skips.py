@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Fail CI when a property/fuzz suite silently skipped (or vanished).
+
+``pytest.importorskip("hypothesis")`` makes the property suites pass
+vacuously when the dependency is missing: tier-1 stays green with its
+strongest tests not running, and nothing in the log shouts about it.
+CI installs hypothesis, so in CI those suites must actually run — this
+script reads the junit XML tier-1 produced and asserts every listed
+module both contributed at least one test case AND reported zero
+skips.  (Locally, without hypothesis, the suites still degrade to a
+visible skip — that is the supported workflow; only CI enforces.)
+
+junit shape (verified against pytest 7/8): a module-level skip emits
+one testcase with an empty classname and the dotted module path as
+its name; normally-collected tests carry the dotted module path in
+classname.  Matching on both catches either form.
+
+Usage:
+    python tools/assert_no_skips.py tier1.xml mod1 mod2 ...
+e.g.
+    python tools/assert_no_skips.py tier1.xml \
+        test_pagepool_properties test_tiering_properties \
+        test_granularity_properties test_scheduler_agas \
+        test_engine_fuzz
+"""
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def check(xml_path, modules):
+    root = ET.parse(xml_path).getroot()
+    seen = {m: 0 for m in modules}
+    skipped = {m: 0 for m in modules}
+    for tc in root.iter("testcase"):
+        ident = "%s %s" % (tc.get("classname") or "",
+                           tc.get("name") or "")
+        for m in modules:
+            if m in ident:
+                seen[m] += 1
+                if tc.find("skipped") is not None:
+                    skipped[m] += 1
+    bad = []
+    for m in modules:
+        state = "MISSING" if seen[m] == 0 else (
+            "SKIPPED" if skipped[m] else "ok")
+        print(f"  {m}: {seen[m]} case(s), {skipped[m]} skipped "
+              f"[{state}]")
+        if seen[m] == 0 or skipped[m]:
+            bad.append(m)
+    return bad
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    bad = check(argv[1], argv[2:])
+    if bad:
+        print(f"FAIL: property/fuzz suites silently skipped or "
+              f"missing: {', '.join(bad)} — is hypothesis installed?")
+        return 1
+    print("OK: every property/fuzz suite ran with zero skips")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
