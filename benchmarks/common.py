@@ -22,3 +22,11 @@ def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """The run.py contract: name,us_per_call,derived CSV lines."""
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def emit_registry(registry, derived: str = "registry") -> None:
+    """Emit every scalar in an obs.MetricsRegistry snapshot through
+    emit(), so benchmark metrics flow through the same CSV contract
+    as hand-picked numbers (DESIGN.md §10)."""
+    for name, value in sorted(registry.snapshot().items()):
+        emit(name, float(value), derived)

@@ -47,8 +47,9 @@ def measured_dispatch_overhead(n_tasks=20000):
     return dt / n_tasks
 
 
-def fig9_sweep(n_tasks=100_000, verbose=True):
-    sigma = measured_dispatch_overhead()
+def fig9_sweep(n_tasks=100_000, verbose=True, sigma=None):
+    if sigma is None:
+        sigma = measured_dispatch_overhead()
     workloads = [0.0, 15e-6, 45e-6, 115e-6]
     workers = [2, 4, 8, 16, 32, 44, 48]
     out = {}
@@ -105,9 +106,19 @@ def compiled_overhead():
     return dt / n_task_execs
 
 
-def run(verbose=True):
-    sigma, scaling, _ = fig9_sweep(verbose=verbose)
+def run(verbose=True, out=None):
+    from benchmarks.common import emit_registry
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    disp = reg.histogram("fig9.host_dispatch_us")
+    for _ in range(3):
+        disp.record(measured_dispatch_overhead(n_tasks=5000) * 1e6)
+    sigma = disp.quantile(50) * 1e-6   # median of the repeats
+    _, scaling, _ = fig9_sweep(verbose=verbose, sigma=sigma)
     comp = compiled_overhead()
+    reg.gauge("fig9.scaling_factor_44w_115us").set(scaling)
+    reg.gauge("fig9.compiled_per_task_us").set(comp * 1e6)
     if verbose:
         print(f"# fig9 measured host dispatch overhead: "
               f"{sigma * 1e6:.2f} us/task (paper: 3-5 us)")
@@ -119,8 +130,20 @@ def run(verbose=True):
     emit("fig9_host_dispatch_overhead", sigma * 1e6, "us_per_task")
     emit("fig9_scaling_factor_44w_115us", scaling, "paper_23")
     emit("fig9_compiled_per_task", comp * 1e6, "us_per_task")
+    emit_registry(reg)
+    if out:
+        import json
+        with open(out, "w") as f:
+            json.dump(reg.snapshot(), f, indent=1, sort_keys=True)
+        if verbose:
+            print(f"# fig9 registry snapshot -> {out}")
     return sigma, scaling, comp
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot JSON")
+    run(out=ap.parse_args().out)

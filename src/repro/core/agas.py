@@ -31,6 +31,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.localities import LocalityDomain
+from repro.obs import trace as _trace
 
 
 class AGASError(RuntimeError):
@@ -173,6 +174,8 @@ class AGAS:
         self._residents[new_locality].add(addr.gid)
         self._where[addr.gid] = (new_locality, new_slot)
         self.migrations += 1
+        _trace.GLOBAL.instant("agas", "migrate", gid=addr.gid,
+                              src=old_loc, dst=new_locality)
         return old_loc, new_slot
 
     # -- bulk views (compiled into gather indices) ----------------------------

@@ -29,6 +29,8 @@ import itertools
 import threading
 from typing import Any, Callable, Optional
 
+from repro.obs import trace as _trace
+
 _UNSET = object()
 
 
@@ -62,6 +64,8 @@ class Future:
                 raise LCOError(f"future {self.gid} set twice")
             self._value = value
             cbs, self._cbs = self._cbs, []
+        _trace.GLOBAL.instant("lco", "future_set", lco=self.gid,
+                              waiters=len(cbs))
         for cb in cbs:  # run continuations inline, outside the lock
             cb(value)
 
@@ -71,6 +75,7 @@ class Future:
                 raise LCOError(f"future {self.gid} set twice")
             self._error = err
             self._cbs = []
+        _trace.GLOBAL.instant("lco", "future_error", lco=self.gid)
 
     # -- consumer side ----------------------------------------------------
     def done(self) -> bool:
@@ -91,6 +96,7 @@ class Future:
         with self._lock:
             if self._value is _UNSET and self._error is None:
                 self._cbs.append(cb)
+                _trace.GLOBAL.instant("lco", "future_wait", lco=self.gid)
                 return
             value = self._value
         if self._error is None:
@@ -135,6 +141,7 @@ class Dataflow:
         if self._fired:
             raise LCOError("dataflow fired twice")
         self._fired = True
+        _trace.GLOBAL.instant("lco", "dataflow_fire", inputs=self.n)
         self._action(list(self.inputs))
 
     @property

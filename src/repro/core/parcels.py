@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.agas import AGAS, GlobalAddress
+from repro.obs import trace as _trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,16 +89,24 @@ class ParcelPort:
         """Action-manager entry: run locally or send a parcel."""
         if self.agas.is_local(parcel.target, from_locality):
             self.local_applied += 1
+            _trace.GLOBAL.instant("parcels", "local_apply",
+                                  action=parcel.action)
             self._run(parcel, state)
         else:
             self.sent += 1
+            _trace.GLOBAL.instant("parcels", "send", action=parcel.action,
+                                  dst=self.agas.locality_of(parcel.target))
             self.queues[self.agas.locality_of(parcel.target)].append(parcel)
 
     def drain(self, locality: int, state: Any) -> int:
         """Process the inbound queue of one locality; returns #parcels."""
         q, self.queues[locality] = self.queues[locality], []
-        for p in q:
-            self._run(p, state)
+        if not q:
+            return 0
+        with _trace.GLOBAL.span("parcels", "drain", kind="parcel",
+                                lane=locality, n=len(q)):
+            for p in q:
+                self._run(p, state)
         return len(q)
 
     def _run(self, parcel: Parcel, state: Any) -> None:
@@ -191,16 +200,18 @@ def migration_plan(agas: AGAS, moves: Dict[GlobalAddress, int]) -> MigrationPlan
     consistency (tested by tests/test_agas.py round-trips).
     """
     recs = []
-    edges = []
     # Snapshot sources before committing, then migrate one by one.
-    for addr, new_loc in sorted(moves.items(), key=lambda kv: kv[0].gid):
-        src_loc, src_slot = agas.lookup(addr)
-        if src_loc == new_loc:
-            continue
-        agas.migrate(addr, new_loc)
-        dst_loc, dst_slot = agas.lookup(addr)
-        recs.append((addr.gid, src_loc, src_slot, dst_loc, dst_slot))
-    lowered = _lower_moves(recs, len(agas.domain))
+    with _trace.GLOBAL.span("parcels", "migration_plan", kind="parcel",
+                            moves=len(moves)) as sp:
+        for addr, new_loc in sorted(moves.items(), key=lambda kv: kv[0].gid):
+            src_loc, src_slot = agas.lookup(addr)
+            if src_loc == new_loc:
+                continue
+            agas.migrate(addr, new_loc)
+            dst_loc, dst_slot = agas.lookup(addr)
+            recs.append((addr.gid, src_loc, src_slot, dst_loc, dst_slot))
+        lowered = _lower_moves(recs, len(agas.domain))
+        sp.args["gids"] = [r[0] for r in recs]
     return MigrationPlan(tuple(recs), lowered)
 
 

@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.localities import Locality, LocalityDomain
+from repro.obs.trace import NULL_TRACER
 
 
 class Tier(enum.IntEnum):
@@ -94,6 +95,10 @@ class PercolationQueue:
     pool and feed the serving engine's `stats()`.
     """
 
+    # rebindable tracer: the owning tiered pool points this at its own
+    # tracer so committed copies land in the causal event stream
+    trace = NULL_TRACER
+
     def __init__(self) -> None:
         self._q: "OrderedDict[Any, CopyParcel]" = OrderedDict()
         self.demote_parcels = 0
@@ -133,6 +138,8 @@ class PercolationQueue:
             self.promote_parcels += 1
             self.promote_pages += len(parcel.gids)
             self.promote_bytes += parcel.nbytes
+        self.trace.instant("percolation", f"{parcel.direction}_commit",
+                           gids=list(parcel.gids), nbytes=parcel.nbytes)
 
     def pop(self, key: Any) -> Optional[CopyParcel]:
         return self._q.pop(key, None)
@@ -152,19 +159,38 @@ class PercolationQueue:
         total = self.prefetch_hits + self.demand_promotes
         return self.prefetch_hits / total if total else 0.0
 
-    def stats(self) -> Dict[str, Any]:
+    # canonical `subsystem.metric` name -> legacy stats() key (the
+    # serve_bench JSON / existing tests read the legacy names)
+    LEGACY_KEYS = {
+        "percolation.staged_parcels": "staged_parcels",
+        "percolation.demote_parcels": "demote_parcels",
+        "percolation.promote_parcels": "promote_parcels",
+        "percolation.demote_pages": "demote_pages",
+        "percolation.promote_pages": "promote_pages",
+        "percolation.demote_bytes": "offload_bytes",
+        "percolation.promote_bytes": "promote_bytes",
+        "percolation.prefetch_hits": "prefetch_hits",
+        "percolation.demand_promotes": "demand_promotes",
+        "percolation.copy_compute_overlap": "copy_compute_overlap",
+    }
+
+    def metrics(self) -> Dict[str, Any]:
+        """Counters under the unified ``subsystem.metric`` namespace."""
         return {
-            "staged_parcels": len(self._q),
-            "demote_parcels": self.demote_parcels,
-            "promote_parcels": self.promote_parcels,
-            "demote_pages": self.demote_pages,
-            "promote_pages": self.promote_pages,
-            "offload_bytes": self.demote_bytes,
-            "promote_bytes": self.promote_bytes,
-            "prefetch_hits": self.prefetch_hits,
-            "demand_promotes": self.demand_promotes,
-            "copy_compute_overlap": self.overlap(),
+            "percolation.staged_parcels": len(self._q),
+            "percolation.demote_parcels": self.demote_parcels,
+            "percolation.promote_parcels": self.promote_parcels,
+            "percolation.demote_pages": self.demote_pages,
+            "percolation.promote_pages": self.promote_pages,
+            "percolation.demote_bytes": self.demote_bytes,
+            "percolation.promote_bytes": self.promote_bytes,
+            "percolation.prefetch_hits": self.prefetch_hits,
+            "percolation.demand_promotes": self.demand_promotes,
+            "percolation.copy_compute_overlap": self.overlap(),
         }
+
+    def stats(self) -> Dict[str, Any]:
+        return {self.LEGACY_KEYS[k]: v for k, v in self.metrics().items()}
 
 
 class TransferEngine:
@@ -183,6 +209,8 @@ class TransferEngine:
     every array before materializing any of them, so a multi-array
     offload streams out in one wave.
     """
+
+    trace = NULL_TRACER  # rebound by the owning tiered pool
 
     def __init__(self, max_inflight: int = 2) -> None:
         self.max_inflight = int(max_inflight)
@@ -204,8 +232,10 @@ class TransferEngine:
         if len(self._staged) >= self.max_inflight:
             return False
         gids = tuple(int(g) for g in gids)
-        self._staged[key] = (gids, {n: jax.device_put(a)
-                                    for n, a in payload.items()})
+        with self.trace.span("percolation", "stage", kind="copy",
+                             gids=list(gids)):
+            self._staged[key] = (gids, {n: jax.device_put(a)
+                                        for n, a in payload.items()})
         nbytes = sum(int(a.nbytes) for a in payload.values())
         self.queue.push(CopyParcel(key, gids, "promote", nbytes))
         return True

@@ -18,6 +18,11 @@ Usage:
                              # (DESIGN.md §4e): covered prompts admit
                              # straight to decode off cached
                              # activation checkpoints
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --tiering --trace /tmp/serve.trace.json \
+      --metrics-interval 8   # causal trace (perfetto-viewable) +
+                             # periodic metrics-registry snapshots
+                             # (DESIGN.md §10)
 """
 
 from __future__ import annotations
@@ -64,6 +69,16 @@ def main():
                          "the covered prefill compute; fully-covered "
                          "prompts admit straight to decode from the "
                          "cached activation checkpoint")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="causal tracing (DESIGN.md §10): record "
+                         "parcel/LCO/page/engine events and write a "
+                         "Chrome trace-event JSON to PATH (open in "
+                         "https://ui.perfetto.dev), plus a per-step "
+                         "overhead attribution line")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="print the unified metrics-registry snapshot "
+                         "every N engine steps (0 = off)")
     args = ap.parse_args()
 
     import repro.configs as configs
@@ -95,15 +110,43 @@ def main():
         print(f"[serve] kv page pool: {args.kv_shards} shards "
               f"({backing} localities), "
               f"{eng.kvc.pool.pages_per_shard} pages/shard")
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer, set_global
+        tracer = Tracer(capacity=1 << 18)
+        eng.set_tracer(tracer)
+        set_global(tracer)
+
+    on_step = None
+    if args.metrics_interval > 0:
+        def on_step(e, _every=args.metrics_interval):
+            steps = e.metrics.counter("engine.steps").value
+            if steps % _every:
+                return
+            snap = e.metrics.snapshot()
+            keys = ("engine.peak_active", "engine.peak_resident",
+                    "engine.decode_ms.count", "engine.ttft_ms.count",
+                    "pool.page_allocs", "pool.page_shares",
+                    "percolation.demote_bytes",
+                    "percolation.promote_bytes")
+            shown = " ".join(f"{k}={snap[k]:g}" for k in keys
+                             if k in snap)
+            print(f"[metrics] step={steps} {shown}")
+
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     futs = []
-    for rid in range(args.requests):
-        n = int(rng.integers(8, 48))
-        futs.append(eng.submit(Request(rid, rng.integers(
-            0, cfg.vocab_size, size=n).astype(np.int32),
-            max_new_tokens=args.max_new)))
-    eng.run_to_completion()
+    try:
+        for rid in range(args.requests):
+            n = int(rng.integers(8, 48))
+            futs.append(eng.submit(Request(rid, rng.integers(
+                0, cfg.vocab_size, size=n).astype(np.int32),
+                max_new_tokens=args.max_new)))
+        eng.run_to_completion(on_step=on_step)
+    finally:
+        if tracer is not None:
+            from repro.obs.trace import set_global
+            set_global(None)
     dt = time.perf_counter() - t0
     total_new = sum(len(c.tokens) for c in eng.completions)
     print(f"[serve] {type(eng).__name__}: "
@@ -143,6 +186,23 @@ def main():
               f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
               f"itl_p50={s['itl_p50_ms']:.1f}ms "
               f"itl_p95={s['itl_p95_ms']:.1f}ms")
+    if tracer is not None:
+        from repro.obs.attribution import attribute, subsystems
+        tracer.export_chrome(args.trace)
+        recs = tracer.records()
+        rep = attribute(recs)
+        subs = ",".join(sorted(subsystems(recs)))
+        print(f"[trace] {len(recs)} records ({subs}) -> {args.trace} "
+              f"(open in https://ui.perfetto.dev)")
+        if rep["steps"]:
+            cats = " ".join(
+                f"{k}={v:.1f}ms"
+                for k, v in sorted(rep["categories_ms"].items())
+                if v > 0)
+            print(f"[trace] overhead: compute="
+                  f"{rep['compute_fraction'] * 100:.0f}% "
+                  f"runtime={rep['overhead_fraction'] * 100:.0f}% "
+                  f"of {rep['wall_ms']:.1f}ms step wall ({cats})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Runtime observability: causal tracing, metrics, overhead attribution.
+
+Three layers (ISSUE 6):
+
+- ``trace``       ring-buffer tracer emitting typed spans/instants with
+                  monotonic timestamps and causal ids (request -> slot ->
+                  page chain -> parcel); Chrome trace-event JSON export.
+- ``metrics``     unified registry of counters / gauges / streaming
+                  histograms under a ``subsystem.metric`` namespace.
+- ``attribution`` per-step wall-clock decomposition into kernel compute
+                  vs runtime overhead (the paper's Fig. 9 analysis applied
+                  online to serving).
+"""
+
+from repro.obs.trace import (  # noqa: F401
+    NULL_TRACER,
+    Tracer,
+    get_global,
+    set_global,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    MetricsRegistry,
+    StreamingHistogram,
+)

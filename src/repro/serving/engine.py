@@ -62,6 +62,8 @@ import numpy as np
 from repro.core.lco import Future
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serving.kvcache import (PagedKVCache, PageExhausted,
                                    PAGED_FAMILIES)
 
@@ -101,12 +103,15 @@ class _EngineBase:
     """Queue intake, bucketed prefill, sampling, and the run loop."""
 
     def __init__(self, params: Any, cfg: ArchConfig, *, slots: int,
-                 max_len: int, prefill_buckets=(64, 128, 256)):
+                 max_len: int, prefill_buckets=(64, 128, 256),
+                 tracer=None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.buckets = tuple(sorted(prefill_buckets))
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.metrics = MetricsRegistry()
         # queue items: {"req", "gen" (tokens carried over a
         # preemption), "preempts"}
         self.queue: List[dict] = []
@@ -115,6 +120,41 @@ class _EngineBase:
         self.completions: List[Completion] = []
         self._futures: Dict[int, Future] = {}
         self._prefills: Dict[int, Any] = {}
+
+    # -- observability ------------------------------------------------
+    def set_tracer(self, tracer) -> None:
+        """Rebind the tracer on the engine AND every subsystem it owns
+        (pool, tiered transfer engine) — the hook serve_bench uses to
+        attach tracing to an already-warmed engine."""
+        tracer = tracer if tracer is not None else NULL_TRACER
+        self.trace = tracer
+        kvc = getattr(self, "kvc", None)
+        if kvc is not None:
+            kvc.trace = tracer
+            kvc.pool.trace = tracer
+            xfer = getattr(kvc.pool, "xfer", None)
+            if xfer is not None:
+                xfer.trace = tracer
+                xfer.queue.trace = tracer
+
+    def reset_metrics(self) -> None:
+        """Zero the metrics registry (a serve_bench warmup boundary:
+        callers that clear `completions`/`counters` clear this too so
+        `stats()` stays consistent with the per-step telemetry)."""
+        self.metrics.reset()
+
+    def _record_step_metrics(self, c: dict) -> None:
+        """Fold one per-step counter dict into the registry."""
+        m = self.metrics
+        m.counter("engine.steps").inc()
+        m.gauge("engine.peak_active").set_max(c["active"])
+        resident = c.get("resident", c["active"])
+        m.gauge("engine.peak_resident").set_max(resident)
+        m.histogram("engine.resident").record(resident)
+        if "page_occupancy" in c:
+            m.gauge("engine.peak_page_occupancy").set_max(
+                c["page_occupancy"])
+        m.histogram("engine.decode_ms").record(c["decode_ms"])
 
     # -- request intake (a parcel arriving at the engine locality) ----
     def submit(self, req: Request) -> Future:
@@ -125,6 +165,8 @@ class _EngineBase:
                            "bucket": None,
                            "t_submit": time.perf_counter(),
                            "ttft_s": None, "tok_t": []})
+        self.trace.instant("engine", "submit", rid=req.rid,
+                           prompt_len=len(req.prompt))
         return fut
 
     @staticmethod
@@ -234,6 +276,17 @@ class _EngineBase:
                           ttft_s=st.get("ttft_s") or 0.0,
                           itl_s=[b - a for a, b in zip(tok_t, tok_t[1:])])
         self.completions.append(comp)
+        # latency metrics stream into bounded histograms at completion
+        # time — stats() reads these, never a per-completion list
+        m = self.metrics
+        m.histogram("engine.prefill_ms").record(comp.prefill_s * 1e3)
+        if comp.ttft_s > 0.0:
+            m.histogram("engine.ttft_ms").record(comp.ttft_s * 1e3)
+        itl_hist = m.histogram("engine.itl_ms")
+        for d in comp.itl_s:
+            itl_hist.record(d * 1e3)
+        self.trace.instant("engine", "finish", rid=comp.rid,
+                           n_tokens=len(comp.tokens))
         fut = self._futures.pop(comp.rid, None)
         if fut is not None:
             fut.set(comp)
@@ -263,12 +316,24 @@ class _EngineBase:
         return len(tokens) >= req.max_new_tokens
 
     def step(self) -> int:
+        """One scheduling step.  The root span of the per-step trace
+        tree: overhead attribution decomposes its wall-clock into the
+        child spans' kinds (obs/attribution.py)."""
+        if not self.trace.enabled:
+            return self._step()
+        with self.trace.span("engine", "step") as sp:
+            n = self._step()
+            sp.args["ran"] = n
+        return n
+
+    def _step(self) -> int:
         raise NotImplementedError
 
     def _admit(self) -> None:
         raise NotImplementedError
 
-    def run_to_completion(self, max_steps: int = 10_000) -> None:
+    def run_to_completion(self, max_steps: int = 10_000,
+                          on_step=None) -> None:
         """Drive the engine until idle.
 
         Never exits with submitted futures unset: exhausting
@@ -283,6 +348,8 @@ class _EngineBase:
             if not self.active and not self.queue:
                 return
             n = self.step()              # step() admits first
+            if on_step is not None:      # periodic metrics reporting
+                on_step(self)
             if n == 0 and not self.active and self.queue:
                 # nothing ran and nothing is active: only a queue-head
                 # rejection (queue shrinks) can change future steps —
@@ -309,9 +376,10 @@ class DenseServingEngine(_EngineBase):
     _FULL_KV = False
 
     def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
-                 max_len: int = 512, prefill_buckets=(64, 128, 256)):
+                 max_len: int = 512, prefill_buckets=(64, 128, 256),
+                 tracer=None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
-                         prefill_buckets=prefill_buckets)
+                         prefill_buckets=prefill_buckets, tracer=tracer)
         # one shared batched cache across slots
         self.cache = T.init_cache(cfg, slots, max_len)
         self._decode = jax.jit(
@@ -329,10 +397,14 @@ class DenseServingEngine(_EngineBase):
                     f"exceeds max_len {self.max_len}"))
                 continue
             slot = self.free_slots.pop(0)
+            self.trace.instant("engine", "slot_bind", rid=req.rid,
+                               slot=slot)
             t0 = time.perf_counter()
-            logits, pcache = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(toks[None]),
-                jnp.int32(bucket - 1))
+            with self.trace.span("engine", "prefill", kind="compute",
+                                 rid=req.rid, bucket=bucket):
+                logits, pcache = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(toks[None]),
+                    jnp.int32(bucket - 1))
             # splice this request's prefill cache into the slot pool
             self._splice_cache(slot, pcache, bucket)
             first = self._sample(logits[0], req, len(item["gen"]))
@@ -385,9 +457,10 @@ class DenseServingEngine(_EngineBase):
                                         pcache["abs"])
 
     # -- the decode work-queue ----------------------------------------
-    def step(self) -> int:
+    def _step(self) -> int:
         """One batched decode step over all active slots."""
-        self._admit()
+        with self.trace.span("engine", "admit", kind="sched"):
+            self._admit()
         if not self.active:
             return 0
         tokens = np.zeros((self.slots, 1), np.int32)
@@ -399,8 +472,10 @@ class DenseServingEngine(_EngineBase):
                 (self.slots, self.cfg.n_frontend_tokens,
                  32 if self.cfg.d_model < 1024 else 1280),
                 jnp.dtype(self.cfg.dtype))
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          batch)
+        with self.trace.span("engine", "decode_batch", kind="compute",
+                             n=len(self.active)):
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              batch)
         done = []
         now = time.perf_counter()
         for slot, st in self.active.items():
@@ -457,9 +532,9 @@ class PagedServingEngine(_EngineBase):
                  kv_shards: int = 1, mesh=None,
                  rebalance_tolerance: Optional[int] = None,
                  tiering: bool = False, host_pages: int = 0,
-                 prefix_cache_compute: bool = False):
+                 prefix_cache_compute: bool = False, tracer=None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
-                         prefill_buckets=prefill_buckets)
+                         prefill_buckets=prefill_buckets, tracer=tracer)
         if n_pages is None:
             # default: the dense engine's worst-case footprint — callers
             # shrink it to oversubscribe (kvcache preempts under
@@ -473,7 +548,8 @@ class PagedServingEngine(_EngineBase):
         self.kvc = PagedKVCache(cfg, slots, max_len, n_pages, page_size,
                                 n_shards=kv_shards, mesh=mesh,
                                 host_pages=host_pages
-                                if self._tiering else 0)
+                                if self._tiering else 0,
+                                tracer=self.trace)
         if rebalance_tolerance is None:
             rebalance_tolerance = max(
                 2, self.kvc.pool.pages_per_shard // 4)
@@ -533,6 +609,8 @@ class PagedServingEngine(_EngineBase):
             return False
         self.queue.pop(0)
         slot = self.free_slots.pop(0)
+        self.trace.instant("engine", "slot_bind", rid=item["req"].rid,
+                           slot=slot)
         t0 = time.perf_counter()
         try:
             kvc.attach_covered(slot, padded, cov.keys)
@@ -543,8 +621,10 @@ class PagedServingEngine(_EngineBase):
             self.queue.insert(0, item)
             return False
         req = item["req"]
-        logits = self._resume_logits(self.params,
-                                     jnp.asarray(cov.hidden)[None])
+        with self.trace.span("engine", "resume", kind="compute",
+                             rid=req.rid, slot=slot):
+            logits = self._resume_logits(self.params,
+                                         jnp.asarray(cov.hidden)[None])
         first = self._sample(logits[0], req, len(item["gen"]))
         now = time.perf_counter()
         self.prefix_skips += 1
@@ -648,6 +728,8 @@ class PagedServingEngine(_EngineBase):
                 break                          # head-of-line blocking
             self.queue.pop(0)
             slot = self.free_slots.pop(0)
+            self.trace.instant("engine", "slot_bind", rid=req.rid,
+                               slot=slot)
             t0 = time.perf_counter()
             # resumes run at the bucket ladder too: pad RIGHT (junk
             # tokens after the real end never enter the cache and,
@@ -656,9 +738,11 @@ class PagedServingEngine(_EngineBase):
             bucket = self._bucket(real)
             toks = np.zeros(bucket, np.int32)
             toks[:real] = padded
-            logits, pcache, bh, hlast = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(toks[None]),
-                jnp.int32(real - 1))
+            with self.trace.span("engine", "prefill", kind="compute",
+                                 rid=req.rid, bucket=bucket):
+                logits, pcache, bh, hlast = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(toks[None]),
+                    jnp.int32(real - 1))
             self.kvc.attach(slot, padded,
                             pcache["k"][:, 0, :real],
                             pcache["v"][:, 0, :real])
@@ -691,7 +775,8 @@ class PagedServingEngine(_EngineBase):
         next gather resolves the moved rows — outputs are unchanged,
         which the migration-parity tests assert)."""
         if self.kvc.pool.n_shards > 1 and self._rebalance_tol >= 1:
-            self.kvc.maybe_rebalance(self._rebalance_tol)
+            with self.trace.span("engine", "rebalance", kind="sched"):
+                self.kvc.maybe_rebalance(self._rebalance_tol)
 
     def force_migrate(self) -> int:
         """Operational drill (and test hook): rotate every movable
@@ -714,9 +799,13 @@ class PagedServingEngine(_EngineBase):
             return False
         self.queue.pop(0)
         slot = self.free_slots.pop(0)
+        self.trace.instant("engine", "slot_bind", rid=req.rid,
+                           slot=slot)
         try:
-            self.kvc.restore_slot(slot, snap,
-                                  staged_key=("restore", req.rid))
+            with self.trace.span("engine", "restore", kind="sched",
+                                 rid=req.rid, slot=slot):
+                self.kvc.restore_slot(slot, snap,
+                                      staged_key=("restore", req.rid))
         except PageExhausted:
             # the free-page estimate raced a pinned page; the snapshot
             # is still consistent — put everything back and wait
@@ -794,6 +883,8 @@ class PagedServingEngine(_EngineBase):
             self.offloads += 1
         self.free_slots.append(slot)
         self.preemptions += 1
+        self.trace.instant("engine", "preempt", rid=st["req"].rid,
+                           slot=slot, offloaded=snap is not None)
         item = {"req": st["req"], "gen": st["tokens"],
                 "preempts": st["preempts"] + 1,
                 "bucket": st["bucket"],
@@ -861,6 +952,15 @@ class PagedServingEngine(_EngineBase):
         EOS or their length cap.  Returns the finished slots.  Shared
         by the whole-prompt and chunked engines, so sampling and
         completion bookkeeping can never diverge between them."""
+        if not self.trace.enabled:
+            return self._decode_batch_impl(slots)
+        with self.trace.span("engine", "decode_batch", kind="compute",
+                             n=len(slots)) as sp:
+            done = self._decode_batch_impl(slots)
+            sp.args["finished"] = len(done)
+        return done
+
+    def _decode_batch_impl(self, slots: List[int]) -> List[int]:
         tokens = np.zeros((self.slots, 1), np.int32)
         for slot in slots:
             tokens[slot, 0] = self.active[slot]["tokens"][-1]
@@ -891,13 +991,15 @@ class PagedServingEngine(_EngineBase):
         return sum(1 for it in self.queue
                    if it.get("snap") is not None)
 
-    def step(self) -> int:
+    def _step(self) -> int:
         """One batched decode step over all active slots."""
         self._maybe_rebalance()            # between-steps migration
-        self._admit()
+        with self.trace.span("engine", "admit", kind="sched"):
+            self._admit()
         # stage the next admissions' host->device copies: they run
         # under this step's compute (percolation, DESIGN.md §4d)
-        self._prefetch_percolation()
+        with self.trace.span("engine", "prefetch", kind="parcel"):
+            self._prefetch_percolation()
         # truncate requests whose next token has no cache room left
         # (bucket + generated reached max_len) instead of overflowing
         for slot in [s for s in self.active
@@ -907,7 +1009,8 @@ class PagedServingEngine(_EngineBase):
             self.free_slots.append(slot)
         if not self.active:
             return 0
-        self._prepare_writes()
+        with self.trace.span("engine", "prepare_writes", kind="pages"):
+            self._prepare_writes()
         if not self.active:                    # lone request rejected
             return 0
         t0 = time.perf_counter()
@@ -927,29 +1030,41 @@ class PagedServingEngine(_EngineBase):
             "preemptions": self.preemptions,
             "decode_ms": (time.perf_counter() - t0) * 1e3,
         })
+        self._record_step_metrics(self.counters[-1])
         return len(self.active) + len(done)
 
     def stats(self) -> dict:
-        """Aggregate per-step counters plus TTFT / inter-token latency
-        percentiles (the Fig 9 overhead view).  Safe to call at any
-        point in the engine's life — before the first completion every
-        aggregate degrades to 0.0 instead of np.mean's NaN-plus-
-        RuntimeWarning on an empty list."""
-        c = self.counters
+        """Aggregate telemetry assembled from the metrics registry
+        (the Fig 9 overhead view).  Step aggregates stream into the
+        registry at step time and latency percentiles come from
+        bounded streaming histograms recorded at completion time — no
+        per-completion list is ever scanned here, so memory stays
+        O(buckets) over arbitrarily long runs.  Safe to call at any
+        point in the engine's life: before the first completion every
+        aggregate degrades to 0.0.  Keys are the legacy names the
+        serve_bench JSON and the dashboards read; the namespaced view
+        is `engine.metrics.snapshot()`."""
+        m = self.metrics
         pool = self.kvc.pool
-        ttfts = [x.ttft_s * 1e3 for x in self.completions
-                 if x.ttft_s > 0.0]
-        itls = [d * 1e3 for x in self.completions for d in x.itl_s]
+        # mirror the pool's namespaced counters into the registry so
+        # one snapshot() covers every subsystem the engine owns
+        for name, v in pool.metrics().items():
+            if isinstance(v, (int, float)):
+                m.gauge(name).set(v)
+        m.counter("engine.preemptions").value = self.preemptions
+        m.counter("engine.prefix_skips").value = self.prefix_skips
+        m.counter("engine.prefill_tokens_skipped").value = \
+            self.prefill_tokens_skipped
+        ttft = m.histogram("engine.ttft_ms")
+        itl = m.histogram("engine.itl_ms")
         out = {
-            "steps": len(c),
-            "peak_active": max((x["active"] for x in c), default=0),
-            "peak_resident": max(
-                (x.get("resident", x["active"]) for x in c), default=0),
-            "mean_resident": _mean(
-                [x.get("resident", x["active"]) for x in c]),
-            "peak_page_occupancy": max(
-                (x["page_occupancy"] for x in c), default=0.0),
-            "mean_decode_ms": _mean([x["decode_ms"] for x in c]),
+            "steps": int(m.counter("engine.steps").value),
+            "peak_active": int(m.gauge("engine.peak_active").value),
+            "peak_resident": int(m.gauge("engine.peak_resident").value),
+            "mean_resident": m.histogram("engine.resident").mean,
+            "peak_page_occupancy": float(
+                m.gauge("engine.peak_page_occupancy").value),
+            "mean_decode_ms": m.histogram("engine.decode_ms").mean,
             "preemptions": self.preemptions,
             "page_allocs": pool.allocs,
             "page_shares": pool.shares,
@@ -960,16 +1075,15 @@ class PagedServingEngine(_EngineBase):
             "shard_pages_used": pool.shard_used(),
             "shard_occupancy": pool.shard_occupancy(),
             "page_migrations": pool.page_migrations,
-            "mean_prefill_ms": _mean(
-                [x.prefill_s for x in self.completions]) * 1e3,
+            "mean_prefill_ms": m.histogram("engine.prefill_ms").mean,
             # latency split the chunked scheduler is judged on:
             # time-to-first-token vs steady-state inter-token gaps
-            "mean_ttft_ms": _mean(ttfts),
-            "ttft_p50_ms": _pct(ttfts, 50),
-            "ttft_p95_ms": _pct(ttfts, 95),
-            "mean_itl_ms": _mean(itls),
-            "itl_p50_ms": _pct(itls, 50),
-            "itl_p95_ms": _pct(itls, 95),
+            "mean_ttft_ms": ttft.mean,
+            "ttft_p50_ms": ttft.quantile(50.0),
+            "ttft_p95_ms": ttft.quantile(95.0),
+            "mean_itl_ms": itl.mean,
+            "itl_p50_ms": itl.quantile(50.0),
+            "itl_p95_ms": itl.quantile(95.0),
             # prefix-cache compute skip (DESIGN.md §4e): covered
             # admissions and the prompt tokens never recomputed
             "prefix_cache_compute": self._prefix_skip,
@@ -1020,14 +1134,15 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  kv_shards: int = 1, mesh=None,
                  rebalance_tolerance: Optional[int] = None,
                  tiering: bool = False, host_pages: int = 0,
-                 prefix_cache_compute: bool = False):
+                 prefix_cache_compute: bool = False, tracer=None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
                          page_size=page_size, n_pages=n_pages,
                          kv_shards=kv_shards, mesh=mesh,
                          rebalance_tolerance=rebalance_tolerance,
                          tiering=tiering, host_pages=host_pages,
-                         prefix_cache_compute=prefix_cache_compute)
+                         prefix_cache_compute=prefix_cache_compute,
+                         tracer=tracer)
         if chunk_size is None:
             chunk_size = 2 * page_size
         if chunk_size <= 0 or chunk_size % page_size:
@@ -1116,6 +1231,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 break                          # head-of-line blocking
             self.queue.pop(0)
             slot = self.free_slots.pop(0)
+            self.trace.instant("engine", "slot_bind", rid=req.rid,
+                               slot=slot)
             if start:
                 try:
                     self.kvc.attach_covered(slot, padded, cov.keys)
@@ -1161,6 +1278,17 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         """Acquire pages for and run one chunk of `slot`'s prompt.
         Returns False if the slot was preempted (or rejected) by page
         exhaustion instead of advanced."""
+        if not self.trace.enabled:
+            return self._run_chunk_impl(slot, take)
+        st = self.active[slot]
+        with self.trace.span("engine", "prefill_chunk", kind="compute",
+                             rid=st["req"].rid, slot=slot,
+                             start=st["pos"], take=take) as sp:
+            ok = self._run_chunk_impl(slot, take)
+            sp.args["ran"] = ok
+        return ok
+
+    def _run_chunk_impl(self, slot: int, take: int) -> bool:
         st = self.active[slot]
         start = st["pos"]
         end = start + take
@@ -1224,15 +1352,17 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         return True
 
     # -- the token-budget step ----------------------------------------
-    def step(self) -> int:
+    def _step(self) -> int:
         """One budgeted step: every decoding slot gets its token, and
         pending prefill chunks (FCFS by admission order) fill whatever
         budget remains.  A prompt whose final chunk lands this step
         samples its first token now but starts decoding next step, so
         the step never exceeds its token budget."""
         self._maybe_rebalance()            # between-steps migration
-        self._admit()
-        self._prefetch_percolation()
+        with self.trace.span("engine", "admit", kind="sched"):
+            self._admit()
+        with self.trace.span("engine", "prefetch", kind="parcel"):
+            self._prefetch_percolation()
         # truncate decoding requests whose next token has no cache room
         for slot in [s for s in self._decode_slots()
                      if self.kvc.lengths[s] >= self.max_len]:
@@ -1270,7 +1400,9 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         done: List[int] = []
         decoding = [s for s in decoding if s in self.active]
         if decoding:
-            self._prepare_writes(decoding)
+            with self.trace.span("engine", "prepare_writes",
+                                 kind="pages"):
+                self._prepare_writes(decoding)
             decoding = [s for s in decoding if s in self.active]
         # timer starts after write preparation, matching the
         # whole-prompt engine so mean_decode_ms stays comparable
@@ -1293,6 +1425,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             "decode_tokens": len(decoding),
             "budget_tokens": self.step_tokens,
         })
+        self._record_step_metrics(self.counters[-1])
         return len(self.active) + len(done)
 
 

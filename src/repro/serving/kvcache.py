@@ -62,6 +62,7 @@ from repro.core.parcels import MigrationPlan, canonical_size, \
     migration_plan, plan_move_arrays
 from repro.models.config import ArchConfig
 from repro.models.transformer import PAGED_FAMILIES, init_paged_cache
+from repro.obs.trace import NULL_TRACER
 
 
 class PageExhausted(RuntimeError):
@@ -135,7 +136,7 @@ class PagePool:
 
     def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
                  dtype=None, *, n_shards: int = 1, mesh=None,
-                 kv_axis: str = "kv"):
+                 kv_axis: str = "kv", tracer=None):
         if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 f"paged KV cache supports {PAGED_FAMILIES}, "
@@ -188,6 +189,7 @@ class PagePool:
         self.shares = 0
         self.cow_copies = 0
         self.page_migrations = 0
+        self.trace = tracer if tracer is not None else NULL_TRACER
         # canonical migration programs (DESIGN.md §9.4): the flat path
         # pads move lists to power-of-two size classes; the mesh path
         # caches one compiled shard_map program per ppermute leg
@@ -217,6 +219,22 @@ class PagePool:
         per = max(self.pages_per_shard, 1)
         return [u / per for u in self.shard_used()]
 
+    def metrics(self) -> Dict[str, Any]:
+        """Counters under the unified ``subsystem.metric`` namespace
+        (the engine mirrors these into its MetricsRegistry)."""
+        return {
+            "pool.capacity": self.capacity,
+            "pool.page_size": self.page_size,
+            "pool.kv_shards": self.n_shards,
+            "pool.used_pages": self.used_pages,
+            "pool.free_pages": self.free_pages,
+            "pool.occupancy": self.occupancy(),
+            "pool.allocs": self.allocs,
+            "pool.shares": self.shares,
+            "pool.cow_copies": self.cow_copies,
+            "pool.page_migrations": self.page_migrations,
+        }
+
     def alloc(self, locality: Optional[int] = None) -> GlobalAddress:
         """Allocate a page, least-loaded shard first.
 
@@ -239,6 +257,8 @@ class PagePool:
                 f"{self.n_shards} shard(s))") from None
         self._refs[addr.gid] = 1
         self.allocs += 1
+        self.trace.instant("kvcache", "page_alloc", lane=locality,
+                           gid=addr.gid)
         return addr
 
     def incref(self, addr: GlobalAddress) -> None:
@@ -255,6 +275,7 @@ class PagePool:
                 if cur is not None and cur.gid == addr.gid:
                     del self._prefix[key]
             self.agas.free(addr)
+            self.trace.instant("kvcache", "page_free", gid=addr.gid)
 
     def refcount(self, addr: GlobalAddress) -> int:
         return self._refs[addr.gid]
@@ -369,6 +390,8 @@ class PagePool:
             self.pages["k"] = _clone_row(self.pages["k"], src, dst)
             self.pages["v"] = _clone_row(self.pages["v"], src, dst)
         self.cow_copies += 1
+        self.trace.instant("kvcache", "cow_copy", src_row=src_row,
+                           dst_row=dst_row)
 
     # -- inter-shard page migration (DESIGN.md §4c) -------------------
     def plan_rebalance(self, tolerance: int
@@ -433,13 +456,16 @@ class PagePool:
         `lax.ppermute` under `shard_map` when the pool is mesh-backed
         and as one gather-before-scatter row permutation of the same
         legs on a single device."""
-        plan = migration_plan(self.agas, moves)
-        if plan.moves:
-            if self.mesh is not None:
-                self._apply_plan_mesh(plan)
-            else:
-                self._apply_plan_flat(plan)
-            self.page_migrations += len(plan.moves)
+        with self.trace.span("kvcache", "migrate_pages", kind="parcel",
+                             moves=len(moves)) as sp:
+            plan = migration_plan(self.agas, moves)
+            if plan.moves:
+                if self.mesh is not None:
+                    self._apply_plan_mesh(plan)
+                else:
+                    self._apply_plan_flat(plan)
+                self.page_migrations += len(plan.moves)
+            sp.args["gids"] = [m[0] for m in plan.moves]
         return plan
 
     def _apply_plan_flat(self, plan: MigrationPlan) -> None:
@@ -565,16 +591,18 @@ class PagedKVCache:
     def __init__(self, cfg: ArchConfig, slots: int, max_len: int,
                  n_pages: int, page_size: int, dtype=None, *,
                  n_shards: int = 1, mesh=None, kv_axis: str = "kv",
-                 host_pages: int = 0):
+                 host_pages: int = 0, tracer=None):
         if host_pages > 0:
             from repro.serving.tiering import TieredPagePool
             self.pool: PagePool = TieredPagePool(
                 cfg, n_pages, page_size, dtype, n_shards=n_shards,
-                mesh=mesh, kv_axis=kv_axis, host_pages=host_pages)
+                mesh=mesh, kv_axis=kv_axis, host_pages=host_pages,
+                tracer=tracer)
         else:
             self.pool = PagePool(cfg, n_pages, page_size, dtype,
                                  n_shards=n_shards, mesh=mesh,
-                                 kv_axis=kv_axis)
+                                 kv_axis=kv_axis, tracer=tracer)
+        self.trace = self.pool.trace
         self.slots = int(slots)
         self.max_len = int(max_len)
         self.max_pages_slot = -(-self.max_len // page_size)
@@ -610,6 +638,17 @@ class PagedKVCache:
     # -- prefill attach ------------------------------------------------
     def attach(self, slot: int, padded_tokens: np.ndarray,
                k, v) -> int:
+        if not self.trace.enabled:
+            return self._attach(slot, padded_tokens, k, v)
+        with self.trace.span("kvcache", "attach", kind="pages",
+                             slot=slot) as sp:
+            covered = self._attach(slot, padded_tokens, k, v)
+            sp.args["gids"] = [a.gid for a in self._state[slot].addrs]
+            sp.args["covered"] = covered
+            return covered
+
+    def _attach(self, slot: int, padded_tokens: np.ndarray,
+                k, v) -> int:
         """Install a prefilled prompt into `slot`.
 
         k/v: (L, S, KV, D) full-prompt KV (padded bucket included, so
@@ -713,6 +752,15 @@ class PagedKVCache:
 
     def attach_covered(self, slot: int, padded_tokens: np.ndarray,
                        keys: List[Tuple[bytes, int]]) -> None:
+        if not self.trace.enabled:
+            return self._attach_covered(slot, padded_tokens, keys)
+        with self.trace.span("kvcache", "attach_covered", kind="pages",
+                             slot=slot) as sp:
+            self._attach_covered(slot, padded_tokens, keys)
+            sp.args["gids"] = [a.gid for a in self._state[slot].addrs]
+
+    def _attach_covered(self, slot: int, padded_tokens: np.ndarray,
+                        keys: List[Tuple[bytes, int]]) -> None:
         """Install a covered prefix's cached pages into `slot` with
         ZERO prefill compute and zero KV writes: every key must
         currently hit the prefix index (the caller just computed the
@@ -781,6 +829,21 @@ class PagedKVCache:
     def begin_chunk(self, slot: int, padded_tokens: np.ndarray,
                     start: int, end: int
                     ) -> Tuple[List[int], int]:
+        if not self.trace.enabled:
+            return self._begin_chunk(slot, padded_tokens, start, end)
+        with self.trace.span("kvcache", "chunk_attach", kind="pages",
+                             slot=slot, start=start, end=end) as sp:
+            rows, covered = self._begin_chunk(slot, padded_tokens,
+                                              start, end)
+            ps = self.pool.page_size
+            base = start // ps
+            sp.args["gids"] = [a.gid for a in
+                               self._state[slot].addrs[base:]]
+            return rows, covered
+
+    def _begin_chunk(self, slot: int, padded_tokens: np.ndarray,
+                     start: int, end: int
+                     ) -> Tuple[List[int], int]:
         """Acquire the pages covering chunk [start, end) of a chunked
         prefill and install them in `slot`'s block table.
 
@@ -915,6 +978,9 @@ class PagedKVCache:
 
     def release(self, slot: int) -> None:
         st = self._state[slot]
+        if self.trace.enabled and st.addrs:
+            self.trace.instant("kvcache", "release", slot=slot,
+                               gids=[a.gid for a in st.addrs])
         for a in st.addrs:
             self.pool.decref(a)
         st.addrs = []
@@ -928,6 +994,17 @@ class PagedKVCache:
 
     # -- percolation: offload / restore (DESIGN.md §4d) ---------------
     def offload_slot(self, slot: int) -> Optional[KVSnapshot]:
+        st = self._state[slot]
+        if not self.trace.enabled or not st.addrs:
+            return self._offload_slot(slot)
+        with self.trace.span("kvcache", "offload_slot", kind="copy",
+                             slot=slot,
+                             gids=[a.gid for a in st.addrs]) as sp:
+            snap = self._offload_slot(slot)
+            sp.args["offloaded"] = snap is not None
+            return snap
+
+    def _offload_slot(self, slot: int) -> Optional[KVSnapshot]:
         """Write back a preempted slot's KV to the host tier instead
         of freeing it.
 
@@ -972,6 +1049,15 @@ class PagedKVCache:
 
     def restore_slot(self, slot: int, snap: KVSnapshot,
                      staged_key: Any = None) -> None:
+        if not self.trace.enabled:
+            return self._restore_slot(slot, snap, staged_key)
+        with self.trace.span("kvcache", "restore", kind="pages",
+                             slot=slot,
+                             gids=[a.gid for a in snap.addrs]):
+            return self._restore_slot(slot, snap, staged_key)
+
+    def _restore_slot(self, slot: int, snap: KVSnapshot,
+                      staged_key: Any = None) -> None:
         """Re-admit an offloaded request: promote its pages back to
         device (using the staged payload when one matches) and rebuild
         the slot — block table, position clock, hash chain — exactly

@@ -89,9 +89,10 @@ class TieredPagePool(PagePool):
 
     def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
                  dtype=None, *, n_shards: int = 1, mesh=None,
-                 kv_axis: str = "kv", host_pages: int = 0):
+                 kv_axis: str = "kv", host_pages: int = 0, tracer=None):
         super().__init__(cfg, n_pages, page_size, dtype,
-                         n_shards=n_shards, mesh=mesh, kv_axis=kv_axis)
+                         n_shards=n_shards, mesh=mesh, kv_axis=kv_axis,
+                         tracer=tracer)
         if host_pages <= 0:
             raise ValueError(
                 f"host_pages {host_pages} must be positive "
@@ -113,6 +114,8 @@ class TieredPagePool(PagePool):
         self.host: Dict[str, np.ndarray] = {
             "k": np.zeros(shape, dt), "v": np.zeros(shape, dt)}
         self.xfer = TransferEngine(max_inflight=2)
+        self.xfer.trace = self.trace
+        self.xfer.queue.trace = self.trace
         # LRU of retained refcount-0 pages (gid -> None, oldest first);
         # residency (device vs host) is the directory's to answer
         self._cold: Dict[int, None] = {}
@@ -207,6 +210,7 @@ class TieredPagePool(PagePool):
         self._key_of.pop(addr.gid, None)
         self._hidden.pop(addr.gid, None)
         self.agas.free(addr)
+        self.trace.instant("kvcache", "page_free", gid=addr.gid)
 
     def discard(self, addr: GlobalAddress) -> None:
         """Rollback decref: never retain (the page's content may not
@@ -223,6 +227,7 @@ class TieredPagePool(PagePool):
             if cur is not None and cur.gid == addr.gid:
                 del self._prefix[key]
         self.agas.free(addr)
+        self.trace.instant("kvcache", "page_free", gid=addr.gid)
 
     def _drop_cold(self, gid: int) -> None:
         """Drop a retained page entirely (either tier) — its
@@ -238,6 +243,7 @@ class TieredPagePool(PagePool):
                 del self._prefix[key]
         self.agas.free(addr)
         self.cold_drops += 1
+        self.trace.instant("kvcache", "page_free", gid=gid)
 
     # -- allocation with eviction -------------------------------------
     def alloc(self, locality: Optional[int] = None) -> GlobalAddress:
@@ -273,6 +279,15 @@ class TieredPagePool(PagePool):
         must be device-resident and the host tier must have room."""
         if not addrs:
             return
+        if self.trace.enabled:
+            with self.trace.span("percolation", "demote", kind="copy",
+                                 gids=[a.gid for a in addrs]):
+                self._demote_impl(addrs, key)
+            return
+        self._demote_impl(addrs, key)
+
+    def _demote_impl(self, addrs: Sequence[GlobalAddress],
+                     key: Any) -> None:
         n = len(addrs)
         rows = [self.row(a) for a in addrs]
         pad = canon_batch(n)
@@ -374,6 +389,19 @@ class TieredPagePool(PagePool):
 
     def promote_pages(self, addrs: Sequence[GlobalAddress],
                       staged_key: Any = None) -> int:
+        if not self.trace.enabled:
+            return self._promote_pages(addrs, staged_key)
+        todo = [a.gid for a in addrs if not self.on_device(a)]
+        if not todo:
+            return self._promote_pages(addrs, staged_key)
+        with self.trace.span("percolation", "promote", kind="copy",
+                             gids=todo) as sp:
+            n = self._promote_pages(addrs, staged_key)
+            sp.args["promoted"] = n
+            return n
+
+    def _promote_pages(self, addrs: Sequence[GlobalAddress],
+                       staged_key: Any = None) -> int:
         """Ensure every page in `addrs` is device-resident.
 
         Uses the staged payload under `staged_key` when it matches
@@ -479,16 +507,35 @@ class TieredPagePool(PagePool):
         self.cold_drops -= len(gids)          # resets don't count
         return len(gids)
 
+    # canonical `subsystem.metric` name -> legacy tier_stats() key
+    TIER_LEGACY = {
+        "tier.host_pages": "host_pages",
+        "tier.host_used": "host_used",
+        "tier.device_cold": "device_cold",
+        "tier.host_cold": "host_cold",
+        "tier.evictions": "evictions",
+        "tier.cold_drops": "cold_drops",
+        "tier.offloaded_pages": "offloaded_pages",
+        "tier.promoted_pages": "promoted_pages",
+    }
+
+    def metrics(self) -> Dict[str, Any]:
+        m = super().metrics()
+        m.update({
+            "tier.host_pages": self.host_pages,
+            "tier.host_used": self.host_used,
+            "tier.device_cold": self.cold_count(Tier.DEVICE),
+            "tier.host_cold": self.cold_count(Tier.HOST),
+            "tier.evictions": self.evictions,
+            "tier.cold_drops": self.cold_drops,
+            "tier.offloaded_pages": self.offloaded,
+            "tier.promoted_pages": self.promoted,
+        })
+        m.update(self.xfer.queue.metrics())
+        return m
+
     def tier_stats(self) -> Dict[str, Any]:
-        s = {
-            "host_pages": self.host_pages,
-            "host_used": self.host_used,
-            "device_cold": self.cold_count(Tier.DEVICE),
-            "host_cold": self.cold_count(Tier.HOST),
-            "evictions": self.evictions,
-            "cold_drops": self.cold_drops,
-            "offloaded_pages": self.offloaded,
-            "promoted_pages": self.promoted,
-        }
+        m = self.metrics()
+        s = {legacy: m[name] for name, legacy in self.TIER_LEGACY.items()}
         s.update(self.xfer.queue.stats())
         return s

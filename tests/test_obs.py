@@ -1,0 +1,361 @@
+"""Observability subsystem (DESIGN.md §10): ring-buffer tracer,
+streaming-histogram metrics registry, Chrome trace export, overhead
+attribution, and the causal/nesting validators — units plus a small
+traced-engine integration run."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+import jax
+
+import repro.configs as configs
+from repro.models import transformer as T
+from repro.obs.attribution import (attribute, check_causal,
+                                   check_nesting, subsystems)
+from repro.obs.metrics import (Counter, Gauge, MetricsRegistry,
+                               StreamingHistogram)
+from repro.obs.trace import (NULL_TRACER, Tracer, get_global,
+                             set_global)
+from repro.serving.engine import Request, make_engine
+
+
+class ManualClock:
+    """Deterministic tracer clock: returns ``t``; the test advances it."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# -- tracer: ring buffer, parenting, null no-op ------------------------
+
+def test_ring_buffer_wraparound_keeps_newest_in_order():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.instant("t", "e", i=i)
+    recs = tr.records()
+    assert [r.args["i"] for r in recs] == [6, 7, 8, 9]
+    assert tr.dropped == 6
+    tr.clear()
+    assert tr.records() == [] and tr.dropped == 0
+
+
+def test_records_before_wrap_are_chronological():
+    tr = Tracer(capacity=8)
+    for i in range(3):
+        tr.instant("t", "e", i=i)
+    assert [r.args["i"] for r in tr.records()] == [0, 1, 2]
+
+
+def test_span_parenting_and_instant_adoption():
+    clk = ManualClock()
+    tr = Tracer(capacity=16, clock=clk)
+    with tr.span("engine", "step") as outer:
+        clk.t = 1.0
+        with tr.span("engine", "admit", kind="sched") as inner:
+            clk.t = 2.0
+            tr.instant("kvcache", "page_alloc", gid=0)
+            clk.t = 3.0
+        clk.t = 4.0
+    recs = {r.name: r for r in tr.records()}
+    assert recs["admit"].parent == outer.sid
+    assert recs["page_alloc"].parent == inner.sid
+    assert recs["step"].parent is None
+    assert recs["step"].dur == pytest.approx(4.0)
+    assert recs["admit"].dur == pytest.approx(2.0)
+    assert recs["page_alloc"].dur is None
+    assert check_nesting(tr.records()) == []
+
+
+def test_per_thread_span_stacks_do_not_cross():
+    tr = Tracer(capacity=64)
+    parents = {}
+
+    def worker(name):
+        with tr.span("t", name) as sp:
+            ev = tr.instant("t", f"{name}_ev")
+            parents[name] = (sp.sid, ev.parent)
+
+    ts = [threading.Thread(target=worker, args=(f"w{i}",))
+          for i in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    for sid, parent in parents.values():
+        assert parent == sid
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    with NULL_TRACER.span("x", "y", kind="compute", rid=1) as sp:
+        sp.args["k"] = 1           # arg mutation must be absorbed
+        NULL_TRACER.instant("x", "z", gid=2)
+    assert NULL_TRACER.records() == []
+    assert NULL_TRACER.dropped == 0
+
+
+def test_set_global_rebinds_and_restores():
+    assert get_global() is NULL_TRACER
+    tr = Tracer(capacity=4)
+    try:
+        assert set_global(tr) is tr
+        assert get_global() is tr
+    finally:
+        set_global(None)
+    assert get_global() is NULL_TRACER
+
+
+# -- metrics registry --------------------------------------------------
+
+def test_counter_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    c.reset()
+    assert c.value == 0
+    g = Gauge()
+    g.set(2.0)
+    g.set_max(1.0)
+    assert g.value == 2.0
+    g.set_max(7.0)
+    assert g.value == 7.0
+
+
+def test_streaming_histogram_quantiles_match_numpy():
+    rng = np.random.default_rng(0)
+    samples = np.concatenate([rng.lognormal(0.0, 1.0, 4000),
+                              rng.uniform(0.0, 50.0, 1000)])
+    h = StreamingHistogram()
+    for s in samples:
+        h.record(float(s))
+    assert h.count == len(samples)
+    assert h.min == pytest.approx(samples.min())
+    assert h.max == pytest.approx(samples.max())
+    assert h.mean == pytest.approx(samples.mean(), rel=1e-9)
+    for q in (50, 90, 95, 99):
+        exact = np.percentile(samples, q)
+        # log-bucketed with GROWTH=1.03: ~3% relative bucket error
+        assert h.quantile(q) == pytest.approx(exact, rel=0.04)
+
+
+def test_streaming_histogram_empty_and_edge_quantiles():
+    h = StreamingHistogram()
+    assert h.count == 0 and h.mean == 0.0 and h.quantile(50) == 0.0
+    h.record(3.0)
+    assert h.quantile(0) == pytest.approx(3.0, rel=0.04)
+    assert h.quantile(100) == pytest.approx(3.0, rel=0.04)
+    h.record(0.0)      # underflow bucket
+    assert h.count == 2 and h.min == 0.0
+
+
+def test_registry_get_or_create_and_type_guard():
+    m = MetricsRegistry()
+    c = m.counter("a.b")
+    assert m.counter("a.b") is c
+    with pytest.raises(TypeError):
+        m.gauge("a.b")
+    m.histogram("a.h").record(2.0)
+    snap = m.snapshot()
+    assert snap["a.b"] == 0
+    assert snap["a.h.count"] == 1
+    assert snap["a.h.p50"] == pytest.approx(2.0, rel=0.04)
+    m.reset()
+    assert m.snapshot()["a.h.count"] == 0
+    assert sorted(m.names()) == ["a.b", "a.h"]
+
+
+# -- Chrome export (golden, deterministic clock) -----------------------
+
+def test_chrome_export_golden():
+    clk = ManualClock(1.0)
+    tr = Tracer(capacity=8, clock=clk)
+    with tr.span("engine", "step", kind="sched", ran=1):
+        clk.t = 1.5
+        tr.instant("kvcache", "page_alloc", lane=2, gid=7)
+        clk.t = 2.0
+    trace = tr.to_chrome()
+    assert trace["displayTimeUnit"] == "ms"
+    evs = trace["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    procs = {e["args"]["name"]: e["pid"] for e in meta
+             if e["name"] == "process_name"}
+    assert set(procs) == {"engine", "kvcache"}
+    threads = {(e["pid"], e["args"]["name"]): e["tid"] for e in meta
+               if e["name"] == "thread_name"}
+    assert (procs["engine"], "main") in threads
+    assert (procs["kvcache"], "2") in threads
+    inst = next(e for e in evs if e["ph"] == "i")
+    span = next(e for e in evs if e["ph"] == "X")
+    assert inst == {"name": "page_alloc", "cat": "kvcache",
+                    "pid": procs["kvcache"],
+                    "tid": threads[(procs["kvcache"], "2")],
+                    "ts": pytest.approx(0.5e6), "ph": "i", "s": "t",
+                    "args": {"gid": 7, "sid": inst["args"]["sid"],
+                             "parent": span["args"]["sid"]}}
+    assert span["name"] == "step" and span["cat"] == "engine"
+    assert span["ts"] == pytest.approx(0.0)
+    assert span["dur"] == pytest.approx(1.0e6)
+    assert span["args"]["kind"] == "sched"
+    assert span["args"]["ran"] == 1
+
+
+def test_export_chrome_writes_valid_json(tmp_path):
+    tr = Tracer(capacity=8)
+    with tr.span("engine", "step"):
+        tr.instant("engine", "submit", rid=0)
+    path = tr.export_chrome(str(tmp_path / "t.json"))
+    with open(path) as f:
+        loaded = json.load(f)
+    assert {e["name"] for e in loaded["traceEvents"]} >= {
+        "step", "submit", "process_name", "thread_name"}
+
+
+# -- attribution -------------------------------------------------------
+
+def _synthetic_step(tr, clk, t0):
+    clk.t = t0
+    with tr.span("engine", "step"):
+        clk.t = t0 + 0.01
+        with tr.span("engine", "admit", kind="sched"):
+            clk.t = t0 + 0.03
+        with tr.span("engine", "decode_batch", kind="compute"):
+            clk.t = t0 + 0.13
+        with tr.span("kvcache", "attach", kind="pages"):
+            clk.t = t0 + 0.16
+        clk.t = t0 + 0.20
+
+
+def test_attribute_self_time_decomposition():
+    clk = ManualClock()
+    tr = Tracer(capacity=64, clock=clk)
+    _synthetic_step(tr, clk, 0.0)
+    _synthetic_step(tr, clk, 1.0)
+    rep = attribute(tr.records())
+    assert rep["steps"] == 2
+    assert rep["wall_ms"] == pytest.approx(400.0)
+    assert rep["compute_ms"] == pytest.approx(200.0)
+    cats = rep["categories_ms"]
+    assert cats["sched"] == pytest.approx(40.0)
+    assert cats["pages"] == pytest.approx(60.0)
+    # step self time (gaps between children) lands in "other"
+    assert cats["other"] == pytest.approx(100.0)
+    assert rep["sum_residual"] == pytest.approx(0.0, abs=1e-9)
+    assert rep["compute_fraction"] + rep["overhead_fraction"] == \
+        pytest.approx(1.0)
+
+
+def test_attribute_empty_trace():
+    rep = attribute([])
+    assert rep["steps"] == 0 and rep["wall_ms"] == 0.0
+    assert rep["sum_residual"] == 0.0
+
+
+# -- validators --------------------------------------------------------
+
+def test_check_nesting_flags_escaping_child():
+    clk = ManualClock()
+    tr = Tracer(capacity=16, clock=clk)
+    with tr.span("engine", "step") as parent:
+        clk.t = 1.0
+    # forge a child that overruns its parent's interval
+    with tr.span("engine", "rogue") as rogue:
+        clk.t = 5.0
+    recs = tr.records()
+    next(r for r in recs if r.sid == rogue.sid).parent = parent.sid
+    problems = check_nesting(recs)
+    assert len(problems) == 1 and "rogue" in problems[0]
+
+
+def test_check_causal_accepts_well_formed_trace():
+    clk = ManualClock()
+    tr = Tracer(capacity=32, clock=clk)
+    tr.instant("engine", "submit", rid=0)
+    clk.t = 1.0
+    tr.instant("engine", "slot_bind", rid=0, slot=3)
+    clk.t = 2.0
+    tr.instant("kvcache", "page_alloc", gid=10, slot=3)
+    clk.t = 3.0
+    tr.instant("parcels", "local_apply", gids=[10])
+    clk.t = 4.0
+    tr.instant("kvcache", "page_free", gid=10, slot=3)
+    assert check_causal(tr.records()) == []
+
+
+def test_check_causal_flags_dangles():
+    clk = ManualClock()
+    tr = Tracer(capacity=32, clock=clk)
+    tr.instant("engine", "finish", rid=9)           # never submitted
+    clk.t = 1.0
+    tr.instant("kvcache", "attach", slot=2)         # slot never bound
+    clk.t = 2.0
+    tr.instant("parcels", "send", gids=[42])        # gid never alloc'd
+    problems = check_causal(tr.records())
+    assert len(problems) == 3
+    assert any("never submitted" in p for p in problems)
+    assert any("before any bind" in p for p in problems)
+    assert any("never allocated" in p for p in problems)
+
+
+def test_check_causal_flags_use_after_free():
+    clk = ManualClock()
+    tr = Tracer(capacity=32, clock=clk)
+    tr.instant("kvcache", "page_alloc", gid=5)
+    clk.t = 1.0
+    tr.instant("kvcache", "page_free", gid=5)
+    clk.t = 2.0
+    tr.instant("percolation", "stage", gids=[5])
+    problems = check_causal(tr.records())
+    assert len(problems) == 1 and "after free" in problems[0]
+
+
+# -- traced engine integration -----------------------------------------
+
+def test_traced_engine_run_produces_causally_linked_spans():
+    cfg = configs.get_reduced("yi-6b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tr = Tracer(capacity=1 << 14)
+    eng = make_engine(params, cfg, engine="chunked", slots=2,
+                      max_len=64, prefill_buckets=(32,), page_size=8,
+                      n_pages=16, tiering=True, host_pages=32,
+                      tracer=tr)
+    set_global(tr)
+    try:
+        for rid in range(3):
+            eng.submit(Request(
+                rid, np.arange(12 + rid, dtype=np.int32),
+                max_new_tokens=4))
+        eng.run_to_completion()
+    finally:
+        set_global(None)
+    recs = tr.records()
+    assert tr.dropped == 0
+    assert {"engine", "kvcache", "lco"} <= subsystems(recs)
+    assert check_nesting(recs) == []
+    assert check_causal(recs) == []
+    rep = attribute(recs)
+    assert rep["steps"] == len(eng.counters) > 0
+    assert rep["compute_ms"] > 0.0
+    assert rep["sum_residual"] <= 0.05
+    # registry-backed stats agree with the trace
+    s = eng.stats()
+    assert s["steps"] == rep["steps"]
+    assert eng.metrics.snapshot()["engine.decode_ms.count"] > 0
+
+
+def test_untraced_engine_has_null_tracer_and_empty_trace():
+    cfg = configs.get_reduced("yi-6b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = make_engine(params, cfg, engine="paged", slots=2, max_len=64,
+                      prefill_buckets=(32,))
+    assert eng.trace is NULL_TRACER
+    eng.submit(Request(0, np.arange(10, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run_to_completion()
+    assert eng.trace.records() == []
+    assert eng.stats()["steps"] == len(eng.counters)

@@ -1,0 +1,148 @@
+"""Hypothesis property tests for the observability subsystem
+(DESIGN.md §10):
+
+* random span trees recorded through the tracer always satisfy
+  ``check_nesting`` (a child interval nests within its parent), and
+  attribution self-times sum back to step wall-clock;
+* randomly generated causal event streams: well-formed
+  request -> slot -> page chains validate clean, and a single injected
+  dangle (unsubmitted rid, unbound slot, unallocated/freed gid) is
+  always caught by ``check_causal``;
+* streaming-histogram quantiles are monotone in q and track the exact
+  order statistics within the bucket growth error.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs.attribution import attribute, check_causal, check_nesting
+from repro.obs.metrics import StreamingHistogram
+from repro.obs.trace import Tracer
+
+
+class ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+KINDS = (None, "compute", "sched", "pages", "parcel", "copy")
+
+# A span tree as a nested structure: (kind, dt_before, [children],
+# dt_after) — dts advance the manual clock so intervals are distinct.
+tree_strategy = st.deferred(lambda: st.tuples(
+    st.sampled_from(KINDS),
+    st.floats(0.001, 0.1),
+    st.lists(tree_strategy, max_size=3),
+    st.floats(0.001, 0.1),
+))
+
+
+def _record_tree(tr, clk, node):
+    kind, before, kids, after = node
+    clk.t += before
+    with tr.span("engine", "op", kind=kind):
+        for kid in kids:
+            _record_tree(tr, clk, kid)
+        clk.t += after
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(tree_strategy, min_size=1, max_size=4))
+def test_random_span_trees_nest_and_attribute_exactly(trees):
+    clk = ManualClock()
+    tr = Tracer(capacity=1 << 12, clock=clk)
+    for tree in trees:
+        clk.t += 0.01
+        with tr.span("engine", "step"):
+            for sub in [tree]:
+                _record_tree(tr, clk, sub)
+            clk.t += 0.005
+    recs = tr.records()
+    assert tr.dropped == 0
+    assert check_nesting(recs) == []
+    rep = attribute(recs)
+    assert rep["steps"] == len(trees)
+    # self times sum to wall exactly (fake clock: no float noise beyond
+    # accumulation error)
+    assert rep["sum_residual"] < 1e-6
+    assert rep["compute_ms"] + rep["overhead_ms"] == \
+        pytest.approx(rep["wall_ms"])
+
+
+# -- causal streams ----------------------------------------------------
+
+@st.composite
+def causal_stream(draw):
+    """A well-formed stream plus an optional single injected dangle."""
+    n_req = draw(st.integers(1, 4))
+    n_pages = draw(st.integers(1, 6))
+    n_slots = min(2, n_req)
+    clk = ManualClock()
+    tr = Tracer(capacity=1 << 12, clock=clk)
+    for rid in range(n_req):
+        clk.t += 0.01
+        tr.instant("engine", "submit", rid=rid)
+        clk.t += 0.01
+        tr.instant("engine", "slot_bind", rid=rid, slot=rid % n_slots)
+    gids = list(range(n_pages))
+    for g in gids:
+        clk.t += 0.01
+        tr.instant("kvcache", "page_alloc", gid=g, slot=g % n_slots)
+    use = draw(st.lists(st.sampled_from(gids), max_size=6))
+    for g in use:
+        clk.t += 0.01
+        tr.instant("parcels", "local_apply", gids=[g])
+    for g in gids:
+        clk.t += 0.01
+        tr.instant("kvcache", "page_free", gid=g, slot=g % n_slots)
+    violation = draw(st.sampled_from(
+        (None, "rid", "slot", "gid", "freed")))
+    clk.t += 0.01
+    if violation == "rid":
+        tr.instant("engine", "finish", rid=n_req + 100)
+    elif violation == "slot":
+        tr.instant("kvcache", "attach", slot=99)
+    elif violation == "gid":
+        tr.instant("percolation", "stage", gids=[n_pages + 100])
+    elif violation == "freed":
+        tr.instant("percolation", "stage", gids=[gids[0]])
+    return tr.records(), violation
+
+
+@settings(max_examples=60, deadline=None)
+@given(causal_stream())
+def test_causal_ids_never_dangle_and_dangles_are_caught(stream):
+    recs, violation = stream
+    problems = check_causal(recs)
+    if violation is None:
+        assert problems == []
+    else:
+        assert len(problems) == 1
+
+
+# -- histogram quantiles -----------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(1e-6, 1e6), min_size=1, max_size=300),
+       st.lists(st.floats(0.0, 100.0), min_size=2, max_size=8))
+def test_histogram_quantiles_monotone_and_accurate(samples, qs):
+    h = StreamingHistogram()
+    for s in samples:
+        h.record(s)
+    qs = sorted(qs)
+    vals = [h.quantile(q) for q in qs]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+    assert h.min <= vals[0] and vals[-1] <= h.max
+    # the sketch lands in the same log bucket as the floor order
+    # statistic (np.percentile method="lower"), so relative error is
+    # bounded by the bucket growth (~3%; 7% allows interpolation slack)
+    srt = sorted(samples)
+    for q, v in zip(qs, vals):
+        exact = srt[int((q / 100.0) * (len(srt) - 1))]
+        assert v == pytest.approx(exact, rel=0.07, abs=1e-9)
