@@ -69,6 +69,11 @@ def main():
                          "the covered prefill compute; fully-covered "
                          "prompts admit straight to decode from the "
                          "cached activation checkpoint")
+    ap.add_argument("--pin-threshold", type=int, default=4,
+                    help="radix-index hits before a prefix page is "
+                         "pinned hot — pinned pages are the LAST "
+                         "tiering-eviction candidates (0 disables "
+                         "pinning)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="causal tracing (DESIGN.md §10): record "
                          "parcel/LCO/page/engine events and write a "
@@ -100,6 +105,7 @@ def main():
                       tiering=args.tiering,
                       host_pages=args.host_pages,
                       prefix_cache_compute=args.prefix_cache_compute,
+                      pin_threshold=args.pin_threshold,
                       **kw)
     if args.tiering and hasattr(eng, "kvc"):
         pool = eng.kvc.pool
@@ -180,8 +186,19 @@ def main():
         if s.get("prefix_cache_compute"):
             print(f"[serve] compute skip: "
                   f"full_skips={s['prefix_skips']} "
+                  f"partial_hits={s['prefix_partial_hits']} "
                   f"prefill_tokens_skipped="
                   f"{s['prefill_tokens_skipped']}")
+        if hasattr(eng, "kvc") and hasattr(eng.kvc.pool, "prefix"):
+            p = eng.kvc.pool.prefix.metrics()
+            print(f"[serve] radix index: nodes={p['prefix.nodes']} "
+                  f"tombstones={p['prefix.tombstones']} "
+                  f"walks={p['prefix.full_walks']}full/"
+                  f"{p['prefix.partial_walks']}partial/"
+                  f"{p['prefix.miss_walks']}miss "
+                  f"pinned={p['prefix.pinned']} "
+                  f"(pins={p['prefix.pins']} "
+                  f"forced_unpins={p['prefix.forced_unpins']})")
         print(f"[serve] ttft_p50={s['ttft_p50_ms']:.0f}ms "
               f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
               f"itl_p50={s['itl_p50_ms']:.1f}ms "

@@ -432,6 +432,16 @@ def prefill(params: Params, batch: Dict[str, Any], cfg: ArchConfig,
     `all_hidden=True` returns the full post-norm hidden (B, S, D)
     instead (`last_index` ignored) — callers index it themselves and
     checkpoint page-boundary positions for compute skip (§4e).
+
+    Layout contract: the paged/chunked engines run PAD-FREE — real
+    tokens occupy positions 0..R-1 and any padding is RIGHT-padding
+    in the compute buffer only (junk positions are causally masked
+    from the real ones and never attached to the KV cache), so the
+    same prompt produces the same per-position KV regardless of which
+    bucket it compiled into.  That position normalization is what the
+    §4e prefix keys hash over; only the dense engine left-pads (its
+    single shared clock needs aligned ends), which is why its caches
+    never interoperate with the paged prefix index.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -971,7 +981,8 @@ def resume_prefill(params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
 
     ``hidden`` (B, D) is the post-final-norm hidden state of a
     prompt's last position, checkpointed by an earlier prefill of the
-    identical padded prefix and stored in the page pool's prefix index
+    identical pad-free token sequence and stored in the page pool's
+    prefix index
     alongside the KV pages.  A fully-covered prompt needs no
     transformer pass at all: its KV is resident in shared pages, and
     this one vocab projection reproduces the logits its own prefill

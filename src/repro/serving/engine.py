@@ -162,7 +162,6 @@ class _EngineBase:
         fut = Future()
         self._futures[req.rid] = fut
         self.queue.append({"req": req, "gen": [], "preempts": 0,
-                           "bucket": None,
                            "t_submit": time.perf_counter(),
                            "ttft_s": None, "tok_t": []})
         self.trace.instant("engine", "submit", rid=req.rid,
@@ -532,7 +531,8 @@ class PagedServingEngine(_EngineBase):
                  kv_shards: int = 1, mesh=None,
                  rebalance_tolerance: Optional[int] = None,
                  tiering: bool = False, host_pages: int = 0,
-                 prefix_cache_compute: bool = False, tracer=None):
+                 prefix_cache_compute: bool = False,
+                 pin_threshold: int = 4, tracer=None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets, tracer=tracer)
         if n_pages is None:
@@ -549,6 +549,7 @@ class PagedServingEngine(_EngineBase):
                                 n_shards=kv_shards, mesh=mesh,
                                 host_pages=host_pages
                                 if self._tiering else 0,
+                                pin_threshold=pin_threshold,
                                 tracer=self.trace)
         if rebalance_tolerance is None:
             rebalance_tolerance = max(
@@ -567,6 +568,7 @@ class PagedServingEngine(_EngineBase):
         # prefix-cache compute skip (DESIGN.md §4e)
         self._prefix_skip = bool(prefix_cache_compute)
         self.prefix_skips = 0            # fully-covered admissions
+        self.prefix_partial_hits = 0     # partially-covered admissions
         self.prefill_tokens_skipped = 0  # prompt tokens never recomputed
         self._resume_logits = jax.jit(
             lambda p, h: T.resume_prefill(p, h))
@@ -595,7 +597,7 @@ class PagedServingEngine(_EngineBase):
         return self._prefills[bucket]
 
     # -- prefix-cache compute skip (DESIGN.md §4e) --------------------
-    def _admit_skip(self, item: dict, padded: np.ndarray, real: int,
+    def _admit_skip(self, item: dict, layout: np.ndarray, real: int,
                     cov) -> bool:
         """Admit the queue head's fully-covered prompt straight to
         decode: attach the cached pages by refcount and sample the
@@ -613,7 +615,7 @@ class PagedServingEngine(_EngineBase):
                            slot=slot)
         t0 = time.perf_counter()
         try:
-            kvc.attach_covered(slot, padded, cov.keys)
+            kvc.attach_covered(slot, layout, cov.keys)
         except PageExhausted:
             # a covered page spilled and its promotion lost the race
             # for a device row; everything was rolled back — retry
@@ -637,7 +639,6 @@ class PagedServingEngine(_EngineBase):
             "t0": now,
             "seq": next(self._seq),
             "preempts": item["preempts"],
-            "bucket": item["bucket"] if item["gen"] else real,
             "admit_step": len(self.counters),
             **self._latency_state(item, now),
         }
@@ -650,24 +651,23 @@ class PagedServingEngine(_EngineBase):
 
     # -- page-gated admission -----------------------------------------
     def _admission_layout(self, item: dict) -> Optional[tuple]:
-        """Rebuild the queue head's padded layout and screen out
+        """Rebuild the queue head's token layout and screen out
         requests that can never run.
 
-        Fresh requests pad to the bucket ladder; re-admissions after a
-        preemption reconstruct the ORIGINAL padded layout (same
-        left-pad count, same positions) extended by the generated
-        tokens, so the resumed request decodes exactly as if it had
-        never been preempted.  Returns (padded, real, need) where
+        Layouts are position-NORMALIZED: real tokens sit at positions
+        0..len-1 with no pad, whether the request is fresh or
+        re-admitted after a preemption (re-admission is simply prompt
+        + generated tokens — identical positions, so it re-prefills to
+        identical pages).  Padding exists only in the prefill COMPUTE
+        buffer (right-pad to the bucket ladder, junk masked by the
+        traced last index), never in the cache layout — which is what
+        lets two prompts of different total lengths share prefix page
+        keys (DESIGN.md §4e).  Returns (layout, real, need) where
         `need` counts fresh prefill pages plus one decode page of
         headroom, or None if the item was rejected (and popped)."""
         req = item["req"]
-        prompt = self._queue_prompt(item)
-        if item["gen"]:
-            padded = self._pad_to(
-                prompt, item["bucket"] + len(item["gen"]))
-        else:
-            padded = self._padded_prompt(prompt)
-        real = len(padded)
+        layout = self._queue_prompt(item)
+        real = len(layout)
         if real > self.max_len:
             self.queue.pop(0)
             if item["gen"]:
@@ -678,10 +678,10 @@ class PagedServingEngine(_EngineBase):
                 self._finish_queued(item)
             else:
                 self._reject(item, ValueError(
-                    f"request {req.rid}: padded prompt {real} "
+                    f"request {req.rid}: prompt {real} "
                     f"exceeds max_len {self.max_len}"))
             return None
-        need = self.kvc.pages_needed(padded) + 1
+        need = self.kvc.pages_needed(layout) + 1
         if need > self.kvc.pool.capacity:
             self.queue.pop(0)
             if item["gen"]:
@@ -691,7 +691,7 @@ class PagedServingEngine(_EngineBase):
                     f"request {req.rid} needs {need} pages but the "
                     f"pool holds {self.kvc.pool.capacity}"))
             return None
-        return padded, real, need
+        return layout, real, need
 
     def _upcoming_allocs(self) -> int:
         """Pages the CURRENT step's committed work will still take
@@ -708,14 +708,14 @@ class PagedServingEngine(_EngineBase):
                 if self._try_restore(item):
                     continue
                 break                          # head-of-line blocking
-            layout = self._admission_layout(item)
-            if layout is None:
+            adm = self._admission_layout(item)
+            if adm is None:
                 continue
-            padded, real, need = layout
+            layout, real, need = adm
             if self._prefix_skip:
-                cov = self.kvc.covered_prefix(padded)
+                cov = self.kvc.covered_prefix(layout)
                 if cov.full:
-                    if self._admit_skip(item, padded, real, cov):
+                    if self._admit_skip(item, layout, real, cov):
                         continue
                     break                      # head-of-line blocking
             # admit on PAGES, not slots: prefill pages (prefix-shared
@@ -731,19 +731,20 @@ class PagedServingEngine(_EngineBase):
             self.trace.instant("engine", "slot_bind", rid=req.rid,
                                slot=slot)
             t0 = time.perf_counter()
-            # resumes run at the bucket ladder too: pad RIGHT (junk
+            # all prefills run at the bucket ladder: pad RIGHT (junk
             # tokens after the real end never enter the cache and,
             # under causality, cannot influence earlier positions), so
-            # the compile count stays bucket-bounded
+            # the compile count stays bucket-bounded while the CACHE
+            # layout stays pad-free
             bucket = self._bucket(real)
             toks = np.zeros(bucket, np.int32)
-            toks[:real] = padded
+            toks[:real] = layout
             with self.trace.span("engine", "prefill", kind="compute",
                                  rid=req.rid, bucket=bucket):
                 logits, pcache, bh, hlast = self._prefill_fn(bucket)(
                     self.params, jnp.asarray(toks[None]),
                     jnp.int32(real - 1))
-            self.kvc.attach(slot, padded,
+            self.kvc.attach(slot, layout,
                             pcache["k"][:, 0, :real],
                             pcache["v"][:, 0, :real])
             if self._prefix_skip:
@@ -758,7 +759,6 @@ class PagedServingEngine(_EngineBase):
                 "t0": now,
                 "seq": next(self._seq),
                 "preempts": item["preempts"],
-                "bucket": item["bucket"] if item["gen"] else real,
                 "admit_step": len(self.counters),
                 **self._latency_state(item, now),
             }
@@ -821,14 +821,13 @@ class PagedServingEngine(_EngineBase):
             "t0": now,
             "seq": next(self._seq),
             "preempts": item["preempts"],
-            "bucket": item["bucket"],
             "admit_step": len(self.counters),
             **self._latency_state(item, now),
         }
         resume = item.get("resume")
         if resume is not None:          # offloaded mid-prefill: keep
             st.update(phase="prefill",  # chunking where it stopped
-                      padded=resume["padded"], real=resume["real"],
+                      layout=resume["layout"], real=resume["real"],
                       pos=resume["pos"], n_gen0=len(item["gen"]))
         self.active[slot] = st
         return True
@@ -868,8 +867,8 @@ class PagedServingEngine(_EngineBase):
 
     # -- preemption under page pressure -------------------------------
     def _preempt(self, slot: int) -> None:
-        """Evict a request: requeue it at the front with its progress
-        AND its original padded bucket.  With tiering on, its pages
+        """Evict a request: requeue it with its progress.  With
+        tiering on, its pages
         are written back to the host tier (`KVSnapshot` in the queue
         item) so re-admission restores the KV instead of re-running
         prefill; otherwise — or when the host tier is full — they are
@@ -887,14 +886,13 @@ class PagedServingEngine(_EngineBase):
                            slot=slot, offloaded=snap is not None)
         item = {"req": st["req"], "gen": st["tokens"],
                 "preempts": st["preempts"] + 1,
-                "bucket": st["bucket"],
                 "snap": snap,
                 "prefill_s": st.get("prefill_s", 0.0),
                 "t_submit": st["t_submit"],
                 "ttft_s": st.get("ttft_s"),
                 "tok_t": st.get("tok_t", [])}
         if snap is not None and st.get("phase") == "prefill":
-            item["resume"] = {"padded": st["padded"],
+            item["resume"] = {"layout": st["layout"],
                               "real": st["real"], "pos": st["pos"]}
         if snap is None:
             # pages forfeited: re-prefill is the costly path, so the
@@ -1053,6 +1051,8 @@ class PagedServingEngine(_EngineBase):
                 m.gauge(name).set(v)
         m.counter("engine.preemptions").value = self.preemptions
         m.counter("engine.prefix_skips").value = self.prefix_skips
+        m.counter("engine.prefix_partial_hits").value = \
+            self.prefix_partial_hits
         m.counter("engine.prefill_tokens_skipped").value = \
             self.prefill_tokens_skipped
         ttft = m.histogram("engine.ttft_ms")
@@ -1085,9 +1085,11 @@ class PagedServingEngine(_EngineBase):
             "itl_p50_ms": itl.quantile(50.0),
             "itl_p95_ms": itl.quantile(95.0),
             # prefix-cache compute skip (DESIGN.md §4e): covered
-            # admissions and the prompt tokens never recomputed
+            # admissions (full skips vs partial radix hits) and the
+            # prompt tokens never recomputed
             "prefix_cache_compute": self._prefix_skip,
             "prefix_skips": self.prefix_skips,
+            "prefix_partial_hits": self.prefix_partial_hits,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
         }
         # two-tier percolation telemetry (DESIGN.md §4d): offload /
@@ -1114,7 +1116,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
     they run, and page exhaustion mid-prefill preempts LIFO exactly
     like exhaustion mid-decode (the preempted request re-enters the
     queue and re-prefills from scratch on re-admission — deterministic,
-    since an identical padded layout reproduces identical pages).
+    since an identical pad-free layout reproduces identical pages).
 
     With ``prefix_cache_compute=True`` (DESIGN.md §4e) admission first
     measures the prompt's covered prefix: fully-covered prompts skip
@@ -1134,7 +1136,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  kv_shards: int = 1, mesh=None,
                  rebalance_tolerance: Optional[int] = None,
                  tiering: bool = False, host_pages: int = 0,
-                 prefix_cache_compute: bool = False, tracer=None):
+                 prefix_cache_compute: bool = False,
+                 pin_threshold: int = 4, tracer=None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
                          page_size=page_size, n_pages=n_pages,
@@ -1142,6 +1145,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                          rebalance_tolerance=rebalance_tolerance,
                          tiering=tiering, host_pages=host_pages,
                          prefix_cache_compute=prefix_cache_compute,
+                         pin_threshold=pin_threshold,
                          tracer=tracer)
         if chunk_size is None:
             chunk_size = 2 * page_size
@@ -1188,7 +1192,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             if st.get("phase") == "prefill":
                 nxt = min(st["pos"] + self.chunk_size, st["real"])
                 upcoming += self.kvc.pages_needed_chunk(
-                    st["padded"], st["pos"], nxt)
+                    st["layout"], st["pos"], nxt)
         return upcoming
 
     def _admit(self) -> None:
@@ -1199,10 +1203,10 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 if self._try_restore(item):
                     continue
                 break                          # head-of-line blocking
-            layout = self._admission_layout(item)
-            if layout is None:
+            adm = self._admission_layout(item)
+            if adm is None:
                 continue
-            padded, real, _ = layout
+            layout, real, _ = adm
             # compute skip (§4e): a fully-covered prompt admits
             # straight to decode off its cached checkpoint; a partial
             # cover starts chunking at the cover's end, charging only
@@ -1210,9 +1214,9 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             start = 0
             cov = None
             if self._prefix_skip:
-                cov = self.kvc.covered_prefix(padded)
+                cov = self.kvc.covered_prefix(layout)
                 if cov.full:
-                    if self._admit_skip(item, padded, real, cov):
+                    if self._admit_skip(item, layout, real, cov):
                         continue
                     break                      # head-of-line blocking
                 start = cov.covered
@@ -1222,7 +1226,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             # allocate as they are scheduled and preempt under pressure
             first_end = min(start + self.chunk_size, real)
             upcoming = self._upcoming_allocs()
-            need = self.kvc.pages_needed_chunk(padded, start,
+            need = self.kvc.pages_needed_chunk(layout, start,
                                                first_end) + 1
             if cov is not None:
                 need += sum(self.kvc.pool.page_cost(k)
@@ -1235,24 +1239,24 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                                slot=slot)
             if start:
                 try:
-                    self.kvc.attach_covered(slot, padded, cov.keys)
+                    self.kvc.attach_covered(slot, layout, cov.keys)
                 except PageExhausted:
                     # a covered page's promotion lost its device row;
                     # rolled back — retry from the queue head later
                     self.free_slots.append(slot)
                     self.queue.insert(0, item)
                     break
+                self.prefix_partial_hits += 1
                 self.prefill_tokens_skipped += start
             now = time.perf_counter()
             self.active[slot] = {
                 "req": req, "tokens": list(item["gen"]),
                 "phase": "prefill",
-                "padded": padded, "real": real, "pos": start,
+                "layout": layout, "real": real, "pos": start,
                 "prefill_s": 0.0,
                 "t0": now,                      # reset at first token
                 "seq": next(self._seq),
                 "preempts": item["preempts"],
-                "bucket": item["bucket"] if item["gen"] else real,
                 "n_gen0": len(item["gen"]),
                 "admit_step": len(self.counters),
                 **self._latency_state(item, now),
@@ -1270,7 +1274,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         for s, st in self.active.items():
             if st.get("phase") == "prefill":
                 end = min(st["pos"] + 2 * self.chunk_size, st["real"])
-                self.kvc.prefetch_chunk(s, st["padded"], st["pos"],
+                self.kvc.prefetch_chunk(s, st["layout"], st["pos"],
                                         end)
 
     # -- one prefill chunk as a schedulable task ----------------------
@@ -1294,7 +1298,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         end = start + take
         while True:
             try:
-                rows, _ = self.kvc.begin_chunk(slot, st["padded"],
+                rows, _ = self.kvc.begin_chunk(slot, st["layout"],
                                                start, end)
                 break
             except PageExhausted:
@@ -1315,7 +1319,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         ps = self.kvc.pool.page_size
         t0 = time.perf_counter()
         toks = np.zeros(self.chunk_size, np.int32)
-        toks[:take] = st["padded"][start:end]
+        toks[:take] = st["layout"][start:end]
         rows_arr = np.full(self.chunk_size // ps,
                            self.kvc.pool.null_row, np.int32)
         rows_arr[:len(rows)] = rows
@@ -1451,6 +1455,6 @@ def make_engine(params: Any, cfg: ArchConfig, *,
         return PagedServingEngine(params, cfg, **kwargs)
     for k in ("page_size", "n_pages", "chunk_size", "step_tokens",
               "kv_shards", "mesh", "rebalance_tolerance", "tiering",
-              "host_pages", "prefix_cache_compute"):
+              "host_pages", "prefix_cache_compute", "pin_threshold"):
         kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

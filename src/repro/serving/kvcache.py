@@ -12,8 +12,10 @@ arrays, so a block-table lookup compiles to a gather index — the same
 Three layers live here:
 
 * `PagePool` — the allocator: AGAS-backed gid -> physical-row mapping,
-  per-page refcounts, a prompt-prefix hash index enabling pages shared
-  between requests (copy-on-write on first divergent append) — and,
+  per-page refcounts, a radix prefix index over position-normalized
+  page-key chains (`serving/radix.py`) enabling pages shared between
+  requests of *different lengths* (copy-on-write on first divergent
+  append) — and,
   alongside each indexed page, the post-norm hidden state of the
   page's last position (the activation checkpoint prefix-cache
   compute skip resumes from, DESIGN.md §4e) — and the device arrays
@@ -63,27 +65,76 @@ from repro.core.parcels import MigrationPlan, canonical_size, \
 from repro.models.config import ArchConfig
 from repro.models.transformer import PAGED_FAMILIES, init_paged_cache
 from repro.obs.trace import NULL_TRACER
+from repro.serving.radix import RadixPrefixIndex
 
 
 class PageExhausted(RuntimeError):
     """No free page in the pool; callers preempt or defer."""
 
 
-def page_keys(tokens: np.ndarray, page_size: int
-              ) -> List[Tuple[bytes, int]]:
-    """Chained prefix hashes, one per page of a (padded) prompt.
-
-    Key i commits to ALL tokens in pages 0..i plus the page's fill
-    count, so two requests share page i iff their padded prompts agree
-    on every token up to and including it.
-    """
+def _chain_new(pad: int = 0) -> Any:
+    """A fresh page-key chain for a layout with `pad` leading padding
+    rows.  The pad count seeds the chain — RoPE positions differ
+    across layouts, so a padded layout's pages must never alias a
+    pad-free one's even when the real tokens agree."""
     h = hashlib.blake2b(digest_size=16)
+    h.update(int(pad).to_bytes(4, "little", signed=True))
+    return h
+
+
+def _chain_extend(chain: Any, tokens: np.ndarray, start: int,
+                  end: int, page_size: int, pad: int = 0
+                  ) -> List[Tuple[bytes, int]]:
+    """Extend a page-key chain over layout rows [start, end) (`start`
+    page-aligned), returning one (digest, fill) key per page.
+
+    Each page hashes its start row (so keys stay distinct even for
+    pages holding zero real tokens) followed by its REAL tokens —
+    `tokens` is the full layout and rows below `pad` are padding,
+    excluded from the digest.  Byte-for-byte the continuation of
+    `page_keys` over the same layout: update() chunking never changes
+    a blake2b digest, and the per-page update sequence here is
+    identical.
+    """
     keys: List[Tuple[bytes, int]] = []
-    for start in range(0, len(tokens), page_size):
-        chunk = np.asarray(tokens[start:start + page_size], np.int32)
-        h.update(chunk.tobytes())
-        keys.append((h.digest(), len(chunk)))
+    # one serialization of the layout, byte-sliced per page: this runs
+    # on every admission attempt, so it must stay microseconds
+    buf = np.ascontiguousarray(tokens, np.int32).tobytes()
+    for pstart in range(start, end, page_size):
+        pend = min(pstart + page_size, end)
+        chain.update(int(pstart).to_bytes(4, "little", signed=True))
+        chain.update(buf[4 * max(pstart, pad):4 * pend])
+        keys.append((chain.digest(), pend - pstart))
     return keys
+
+
+def _chain_seed(tokens: np.ndarray, start: int, page_size: int,
+                pad: int = 0) -> Any:
+    """A chain with rows [0, start) already consumed — what a slot's
+    running chain would hold after attaching that prefix."""
+    chain = _chain_new(pad)
+    if start:
+        _chain_extend(chain, tokens, 0, start, page_size, pad)
+    return chain
+
+
+def page_keys(tokens: np.ndarray, page_size: int, pad: int = 0
+              ) -> List[Tuple[bytes, int]]:
+    """Position-normalized chained prefix hashes, one per layout page.
+
+    Key i commits to the layout's pad count plus every REAL token
+    through page i (and the page's row count as its fill), so two
+    layouts share page i iff they agree on the pad count and on every
+    real token up to and including it.  `tokens` is the full layout;
+    `pad` declares how many of its leading rows are padding (excluded
+    from the digests — their values are irrelevant, only their count
+    names the position shift).  Pad-free layouts (``pad=0``, the paged
+    engines') therefore share prefix pages across prompts of
+    *different total lengths* — the mixed-length traffic DESIGN.md
+    §4e's compute skip exists for.
+    """
+    return _chain_extend(_chain_new(pad), tokens, 0, len(tokens),
+                         page_size, pad)
 
 
 # Jitted + donated page mutations: on accelerators the update happens
@@ -136,7 +187,8 @@ class PagePool:
 
     def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
                  dtype=None, *, n_shards: int = 1, mesh=None,
-                 kv_axis: str = "kv", tracer=None):
+                 kv_axis: str = "kv", tracer=None,
+                 pin_threshold: int = 4, pin_capacity: int = 0):
         if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 f"paged KV cache supports {PAGED_FAMILIES}, "
@@ -171,8 +223,13 @@ class PagePool:
         self.agas = AGAS(LocalityDomain.simulated(self.n_shards),
                          self.pages_per_shard, space="kvpage")
         self._refs: Dict[int, int] = {}            # gid -> refcount
-        self._prefix: Dict[Tuple[bytes, int], GlobalAddress] = {}
-        self._key_of: Dict[int, Tuple[bytes, int]] = {}
+        # the prefix index: a radix tree over page-key chains
+        # (serving/radix.py) — longest-prefix covers walk it, point
+        # lookups go through its O(1) digest directory, and its hit
+        # statistics pin hot prefixes against tiered eviction
+        self.prefix = RadixPrefixIndex(
+            pin_threshold=pin_threshold,
+            pin_capacity=pin_capacity or max(1, n_pages // 4))
         # gid -> last-position activation checkpoint (np, (D,)): lives
         # and dies with the page's prefix-index membership (§4e)
         self._hidden: Dict[int, np.ndarray] = {}
@@ -233,6 +290,7 @@ class PagePool:
             "pool.shares": self.shares,
             "pool.cow_copies": self.cow_copies,
             "pool.page_migrations": self.page_migrations,
+            **self.prefix.metrics(),
         }
 
     def alloc(self, locality: Optional[int] = None) -> GlobalAddress:
@@ -264,16 +322,21 @@ class PagePool:
     def incref(self, addr: GlobalAddress) -> None:
         self._refs[addr.gid] += 1
 
+    def _purge_index(self, gid: int) -> None:
+        """Remove a departing page's prefix-index node AND its stored
+        activation checkpoint in one step.  Every path a page leaves
+        the pool by (decref-to-zero, rollback discard, cold drop under
+        host-tier pressure) funnels through here, so `covered_prefix`
+        can never observe a key whose page is freed but whose
+        checkpoint — or index entry — lingers."""
+        self._hidden.pop(gid, None)
+        self.prefix.remove_gid(gid)
+
     def decref(self, addr: GlobalAddress) -> None:
         self._refs[addr.gid] -= 1
         if self._refs[addr.gid] == 0:
             del self._refs[addr.gid]
-            self._hidden.pop(addr.gid, None)
-            key = self._key_of.pop(addr.gid, None)
-            if key is not None:
-                cur = self._prefix.get(key)
-                if cur is not None and cur.gid == addr.gid:
-                    del self._prefix[key]
+            self._purge_index(addr.gid)
             self.agas.free(addr)
             self.trace.instant("kvcache", "page_free", gid=addr.gid)
 
@@ -313,16 +376,17 @@ class PagePool:
     # -- prefix sharing ------------------------------------------------
     def lookup_prefix(self, key: Tuple[bytes, int]
                       ) -> Optional[GlobalAddress]:
-        return self._prefix.get(key)
+        return self.prefix.lookup(key)
 
     def register_prefix(self, key: Tuple[bytes, int],
-                        addr: GlobalAddress) -> None:
+                        addr: GlobalAddress,
+                        parent: Optional[bytes] = None) -> None:
         # one key per page: a second registration (either direction)
         # is a no-op, so freeing a page can never leave a stale key
-        # behind in the prefix index
-        if key not in self._prefix and addr.gid not in self._key_of:
-            self._prefix[key] = addr
-            self._key_of[addr.gid] = key
+        # behind in the prefix index.  `parent` is the chain's
+        # previous digest — the radix edge that makes root-to-node
+        # paths prompt prefixes (None for a chain's first page).
+        self.prefix.insert(key, addr, parent)
 
     # -- activation checkpoints (compute skip, DESIGN.md §4e) ---------
     def store_hidden(self, addr: GlobalAddress, hidden) -> None:
@@ -333,7 +397,7 @@ class PagePool:
         outside the prefix index carry no checkpoint (nothing could
         ever look it up)."""
         gid = addr.gid
-        if gid in self._key_of and gid not in self._hidden:
+        if self.prefix.owns_gid(gid) and gid not in self._hidden:
             self._hidden[gid] = np.asarray(hidden)
 
     def hidden_for(self, key: Tuple[bytes, int]
@@ -341,7 +405,7 @@ class PagePool:
         """The activation checkpoint cached under a prefix key, or
         None (key unknown, or its page was written before compute
         skip could checkpoint it)."""
-        addr = self._prefix.get(key)
+        addr = self.prefix.lookup(key)
         if addr is None:
             return None
         return self._hidden.get(addr.gid)
@@ -548,9 +612,9 @@ class _SlotState:
 
 @dataclasses.dataclass
 class PrefixCover:
-    """The longest cached prefix run of a padded prompt (DESIGN.md
+    """The longest cached prefix run of a prompt layout (DESIGN.md
     §4e): `keys` are the covered pages' chain keys (each currently a
-    prefix-index hit), `covered` the tokens they hold.  `full` means
+    live radix root-path hit), `covered` the layout rows they hold.  `full` means
     every page of the prompt hit AND the final page carries an
     activation checkpoint (`hidden`, the post-norm last-position
     hidden state) — the prompt can admit straight to decode with zero
@@ -591,17 +655,19 @@ class PagedKVCache:
     def __init__(self, cfg: ArchConfig, slots: int, max_len: int,
                  n_pages: int, page_size: int, dtype=None, *,
                  n_shards: int = 1, mesh=None, kv_axis: str = "kv",
-                 host_pages: int = 0, tracer=None):
+                 host_pages: int = 0, tracer=None,
+                 pin_threshold: int = 4):
         if host_pages > 0:
             from repro.serving.tiering import TieredPagePool
             self.pool: PagePool = TieredPagePool(
                 cfg, n_pages, page_size, dtype, n_shards=n_shards,
                 mesh=mesh, kv_axis=kv_axis, host_pages=host_pages,
-                tracer=tracer)
+                tracer=tracer, pin_threshold=pin_threshold)
         else:
             self.pool = PagePool(cfg, n_pages, page_size, dtype,
                                  n_shards=n_shards, mesh=mesh,
-                                 kv_axis=kv_axis, tracer=tracer)
+                                 kv_axis=kv_axis, tracer=tracer,
+                                 pin_threshold=pin_threshold)
         self.trace = self.pool.trace
         self.slots = int(slots)
         self.max_len = int(max_len)
@@ -616,56 +682,56 @@ class PagedKVCache:
             _SlotState([], 0) for _ in range(slots)]
 
     # -- admission-time accounting ------------------------------------
-    def pages_needed(self, padded_tokens: np.ndarray) -> int:
+    def pages_needed(self, tokens: np.ndarray, pad: int = 0) -> int:
         """Fresh pages a prefill would allocate (prefix hits excluded)."""
         ps = self.pool.page_size
         return sum(self.pool.page_cost(key)
-                   for key in page_keys(padded_tokens, ps))
+                   for key in page_keys(tokens, ps, pad))
 
-    def pages_needed_chunk(self, padded_tokens: np.ndarray,
-                           start: int, end: int) -> int:
+    def pages_needed_chunk(self, tokens: np.ndarray,
+                           start: int, end: int, pad: int = 0) -> int:
         """Fresh pages one chunk [start, end) would allocate.
 
         The chain keys are computed over the full prefix up to `end`,
         so a chunk boundary never changes a page's identity: chunked
-        and whole-prompt prefills of the same padded prompt hash to
-        the same pages (prefix sharing works across the two paths).
+        and whole-prompt prefills of the same layout hash to the same
+        pages (prefix sharing works across the two paths).
         """
         ps = self.pool.page_size
-        keys = page_keys(padded_tokens[:end], ps)[start // ps:]
+        keys = page_keys(tokens[:end], ps, pad)[start // ps:]
         return sum(self.pool.page_cost(key) for key in keys)
 
     # -- prefill attach ------------------------------------------------
-    def attach(self, slot: int, padded_tokens: np.ndarray,
-               k, v) -> int:
+    def attach(self, slot: int, tokens: np.ndarray,
+               k, v, pad: int = 0) -> int:
         if not self.trace.enabled:
-            return self._attach(slot, padded_tokens, k, v)
+            return self._attach(slot, tokens, k, v, pad)
         with self.trace.span("kvcache", "attach", kind="pages",
                              slot=slot) as sp:
-            covered = self._attach(slot, padded_tokens, k, v)
+            covered = self._attach(slot, tokens, k, v, pad)
             sp.args["gids"] = [a.gid for a in self._state[slot].addrs]
             sp.args["covered"] = covered
             return covered
 
-    def _attach(self, slot: int, padded_tokens: np.ndarray,
-                k, v) -> int:
-        """Install a prefilled prompt into `slot`.
+    def _attach(self, slot: int, tokens: np.ndarray,
+                k, v, pad: int = 0) -> int:
+        """Install a prefilled prompt layout into `slot`.
 
-        k/v: (L, S, KV, D) full-prompt KV (padded bucket included, so
-        the paged path attends exactly what the dense path would).
-        Shared pages (prefix-hash hits) are reused by refcount instead
-        of rewritten.  Returns the covered-token count of the longest
+        k/v: (L, S, KV, D) KV for the full layout (the engines attach
+        pad-free layouts, so S is the real prompt length).  Shared
+        pages (prefix-hash hits) are reused by refcount instead of
+        rewritten.  Returns the covered-token count of the longest
         cached prefix run (leading pages served by hits) — the memory
         the prefix cache saved, and the span compute skip could have
         skipped (DESIGN.md §4e).
         """
         ps = self.pool.page_size
-        s = len(padded_tokens)
+        s = len(tokens)
         if s > self.max_len:
             raise ValueError(f"prompt {s} exceeds max_len {self.max_len}")
         st = self._state[slot]
         assert not st.addrs, f"slot {slot} already attached"
-        keys = page_keys(padded_tokens, ps)
+        keys = page_keys(tokens, ps, pad)
         acquired: List[GlobalAddress] = []
         fresh: List[int] = []               # page indices to write
         fresh_gids: set = set()
@@ -688,7 +754,9 @@ class PagedKVCache:
                 else:
                     leading = False
                     addr = self.pool.alloc()
-                    self.pool.register_prefix(key, addr)
+                    self.pool.register_prefix(
+                        key, addr,
+                        parent=keys[i - 1][0] if i else None)
                     acquired.append(addr)
                     fresh.append(i)
                     fresh_gids.add(addr.gid)
@@ -705,10 +773,10 @@ class PagedKVCache:
         if fresh:
             # one batched whole-page scatter (zero-padded tail on the
             # partial page — never read: masks stop at the clock)
-            pad = len(keys) * ps - s
-            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+            tail = len(keys) * ps - s
+            kp = jnp.pad(k, ((0, 0), (0, tail), (0, 0), (0, 0))) \
                 .reshape(k.shape[0], len(keys), ps, *k.shape[2:])
-            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+            vp = jnp.pad(v, ((0, 0), (0, tail), (0, 0), (0, 0))) \
                 .reshape(v.shape[0], len(keys), ps, *v.shape[2:])
             fi = jnp.asarray(fresh, jnp.int32)
             self.pool.write_pages(
@@ -722,27 +790,27 @@ class PagedKVCache:
         return covered
 
     # -- prefix-cache compute skip (DESIGN.md §4e) --------------------
-    def covered_prefix(self, padded_tokens: np.ndarray) -> PrefixCover:
-        """The longest cached prefix run of a padded prompt.
+    def covered_prefix(self, tokens: np.ndarray,
+                       pad: int = 0) -> PrefixCover:
+        """The longest cached prefix run of a prompt layout.
 
-        Walks the chained page keys until the first prefix-index miss.
-        A full-cover result additionally requires the final page's
-        activation checkpoint; when the KV is all cached but the
-        checkpoint is missing (the pages were attached by a path that
-        never computed hidden states), the final page is dropped from
-        the cover so a resumed chunk recomputes it — the cover is then
-        page-aligned and strictly inside the prompt, exactly what
-        `begin_chunk` needs to resume.
+        One radix-tree walk (`RadixPrefixIndex.match`, O(prompt
+        pages)): the longest leading run of the chained page keys
+        forming a live root path — the walk also stamps the hit
+        statistics that drive hot-prefix pinning.  A full-cover result
+        additionally requires the final page's activation checkpoint;
+        when the KV is all cached but the checkpoint is missing (the
+        pages were attached by a path that never computed hidden
+        states), the final page is dropped from the cover so a resumed
+        chunk recomputes it — the cover is then page-aligned and
+        strictly inside the prompt, exactly what `begin_chunk` needs
+        to resume.
         """
-        keys = page_keys(padded_tokens, self.pool.page_size)
-        ck: List[Tuple[bytes, int]] = []
-        covered = 0
-        for key in keys:
-            if self.pool.lookup_prefix(key) is None:
-                break
-            ck.append(key)
-            covered += key[1]
-        if covered == len(padded_tokens) and ck:
+        keys = page_keys(tokens, self.pool.page_size, pad)
+        nodes = self.pool.prefix.match(keys)
+        ck: List[Tuple[bytes, int]] = [n.key for n in nodes]
+        covered = sum(k[1] for k in ck)
+        if covered == len(tokens) and ck:
             hidden = self.pool.hidden_for(ck[-1])
             if hidden is not None:
                 return PrefixCover(covered, ck, True, hidden)
@@ -750,16 +818,17 @@ class PagedKVCache:
             covered -= last[1]
         return PrefixCover(covered, ck, False)
 
-    def attach_covered(self, slot: int, padded_tokens: np.ndarray,
+    def attach_covered(self, slot: int, tokens: np.ndarray,
                        keys: List[Tuple[bytes, int]]) -> None:
         if not self.trace.enabled:
-            return self._attach_covered(slot, padded_tokens, keys)
+            return self._attach_covered(slot, tokens, keys)
         with self.trace.span("kvcache", "attach_covered", kind="pages",
                              slot=slot) as sp:
-            self._attach_covered(slot, padded_tokens, keys)
+            self._attach_covered(slot, tokens, keys)
             sp.args["gids"] = [a.gid for a in self._state[slot].addrs]
+            sp.args["covered"] = sum(k[1] for k in keys)
 
-    def _attach_covered(self, slot: int, padded_tokens: np.ndarray,
+    def _attach_covered(self, slot: int, tokens: np.ndarray,
                         keys: List[Tuple[bytes, int]]) -> None:
         """Install a covered prefix's cached pages into `slot` with
         ZERO prefill compute and zero KV writes: every key must
@@ -826,23 +895,23 @@ class PagedKVCache:
         self.store_hidden_chunk(slot, 0, real, boundary, last)
 
     # -- chunked prefill (DESIGN.md §4b) ------------------------------
-    def begin_chunk(self, slot: int, padded_tokens: np.ndarray,
-                    start: int, end: int
+    def begin_chunk(self, slot: int, tokens: np.ndarray,
+                    start: int, end: int, pad: int = 0
                     ) -> Tuple[List[int], int]:
         if not self.trace.enabled:
-            return self._begin_chunk(slot, padded_tokens, start, end)
+            return self._begin_chunk(slot, tokens, start, end, pad)
         with self.trace.span("kvcache", "chunk_attach", kind="pages",
                              slot=slot, start=start, end=end) as sp:
-            rows, covered = self._begin_chunk(slot, padded_tokens,
-                                              start, end)
+            rows, covered = self._begin_chunk(slot, tokens,
+                                              start, end, pad)
             ps = self.pool.page_size
             base = start // ps
             sp.args["gids"] = [a.gid for a in
                                self._state[slot].addrs[base:]]
             return rows, covered
 
-    def _begin_chunk(self, slot: int, padded_tokens: np.ndarray,
-                     start: int, end: int
+    def _begin_chunk(self, slot: int, tokens: np.ndarray,
+                     start: int, end: int, pad: int = 0
                      ) -> Tuple[List[int], int]:
         """Acquire the pages covering chunk [start, end) of a chunked
         prefill and install them in `slot`'s block table.
@@ -872,21 +941,18 @@ class PagedKVCache:
             raise ValueError(f"chunk end {end} exceeds {self.max_len}")
         # extend the slot's running prefix chain (committed only on
         # success, so a PageExhausted retry re-hashes just this chunk);
-        # digests match page_keys over the whole prompt exactly —
-        # update() chunking never changes a blake2b digest
+        # digests match page_keys over the whole layout exactly —
+        # `_chain_extend` replays the identical per-page updates
         if st.chain is not None:
             chain = st.chain.copy()
-        else:
-            chain = hashlib.blake2b(digest_size=16)
-            if start:                # resident tokens came via attach()
-                chain.update(np.asarray(padded_tokens[:start],
-                                        np.int32).tobytes())
-        keys: List[Tuple[bytes, int]] = []
-        for pstart in range(start, end, ps):
-            span = np.asarray(padded_tokens[pstart:min(pstart + ps, end)],
-                              np.int32)
-            chain.update(span.tobytes())
-            keys.append((chain.digest(), len(span)))
+        else:                        # resident tokens came via attach()
+            chain = _chain_seed(tokens, start, ps, pad)
+        # the radix parent of this chunk's first page: the digest of
+        # the slot's resident prefix (root when the chunk starts the
+        # prompt — the chain then holds only the pad-count seed, which
+        # no node owns)
+        prev = chain.digest() if start else None
+        keys = _chain_extend(chain, tokens, start, end, ps, pad)
         acquired: List[GlobalAddress] = []
         rows: List[int] = []
         fresh_gids: set = set()
@@ -906,10 +972,11 @@ class PagedKVCache:
                 else:
                     leading = False
                     addr = self.pool.alloc()
-                    self.pool.register_prefix(key, addr)
+                    self.pool.register_prefix(key, addr, parent=prev)
                     acquired.append(addr)
                     fresh_gids.add(addr.gid)
                     rows.append(self.pool.row(addr))
+                prev = key[0]
         except PageExhausted:
             # fresh (unwritten) pages bypass retention; shared hits
             # return to the prefix cache with their content intact
@@ -1081,8 +1148,8 @@ class PagedKVCache:
             self.pool.decref(a)
         snap.addrs = []
 
-    def prefetch_chunk(self, slot: int, padded_tokens: np.ndarray,
-                       start: int, end: int) -> int:
+    def prefetch_chunk(self, slot: int, tokens: np.ndarray,
+                       start: int, end: int, pad: int = 0) -> int:
         """Stage the promotion of any spilled prefix pages chunk
         [start, end) will share — percolation ahead of the chunk that
         needs them.  Returns pages staged (best effort: the double
@@ -1101,16 +1168,10 @@ class PagedKVCache:
         if st.chain is not None:
             chain = st.chain.copy()
         else:
-            chain = hashlib.blake2b(digest_size=16)
-            if start:
-                chain.update(np.asarray(padded_tokens[:start],
-                                        np.int32).tobytes())
+            chain = _chain_seed(tokens, start, ps, pad)
         staged = 0
-        for pstart in range(start, end, ps):
-            span = np.asarray(
-                padded_tokens[pstart:min(pstart + ps, end)], np.int32)
-            chain.update(span.tobytes())
-            addr = pool.lookup_prefix((chain.digest(), len(span)))
+        for key in _chain_extend(chain, tokens, start, end, ps, pad):
+            addr = pool.lookup_prefix(key)
             if addr is not None and not pool.on_device(addr):
                 if pool.stage_promote(("page", addr.gid), [addr]):
                     staged += 1

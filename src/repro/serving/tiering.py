@@ -24,7 +24,11 @@ Three mechanisms live here:
   pages form an LRU list; when allocation finds no free device row,
   the least-recently-used cold device page is demoted to host (or
   dropped outright when the host tier is full too).  Pages with
-  refcount > 0 are pinned: eviction never touches them.
+  refcount > 0 are pinned: eviction never touches them.  Cold pages
+  the radix prefix index marked *hot* (hit statistics crossed the pin
+  threshold, serving/radix.py) are advisory-pinned: eviction passes
+  over them while any other candidate exists, so hot shared prefixes
+  ride out pressure on device while one-off tails percolate out.
 
 * **Write-back offload.**  A preempted request's exclusively-owned
   pages (`refcount == 1`) demote to host as one batched copy parcel;
@@ -89,10 +93,12 @@ class TieredPagePool(PagePool):
 
     def __init__(self, cfg: ArchConfig, n_pages: int, page_size: int,
                  dtype=None, *, n_shards: int = 1, mesh=None,
-                 kv_axis: str = "kv", host_pages: int = 0, tracer=None):
+                 kv_axis: str = "kv", host_pages: int = 0, tracer=None,
+                 pin_threshold: int = 4, pin_capacity: int = 0):
         super().__init__(cfg, n_pages, page_size, dtype,
                          n_shards=n_shards, mesh=mesh, kv_axis=kv_axis,
-                         tracer=tracer)
+                         tracer=tracer, pin_threshold=pin_threshold,
+                         pin_capacity=pin_capacity)
         if host_pages <= 0:
             raise ValueError(
                 f"host_pages {host_pages} must be positive "
@@ -197,18 +203,14 @@ class TieredPagePool(PagePool):
         if self._refs[addr.gid] > 0:
             return
         del self._refs[addr.gid]
-        key = self._key_of.get(addr.gid)
-        if key is not None and \
-                self._prefix.get(key) is not None and \
-                self._prefix[key].gid == addr.gid:
-            # prefix-cache spill: the index still owns this page —
-            # retain it cold (LRU tail = most recently used) instead
+        if self.prefix.owns_gid(addr.gid):
+            # prefix-cache spill: the radix index still owns this page
+            # — retain it cold (LRU tail = most recently used) instead
             # of freeing, activation checkpoint included; a later
             # identical prefix revives both
             self._cold[addr.gid] = None
             return
-        self._key_of.pop(addr.gid, None)
-        self._hidden.pop(addr.gid, None)
+        self._purge_index(addr.gid)
         self.agas.free(addr)
         self.trace.instant("kvcache", "page_free", gid=addr.gid)
 
@@ -220,27 +222,20 @@ class TieredPagePool(PagePool):
         if self._refs[addr.gid] > 0:
             return
         del self._refs[addr.gid]
-        self._hidden.pop(addr.gid, None)
-        key = self._key_of.pop(addr.gid, None)
-        if key is not None:
-            cur = self._prefix.get(key)
-            if cur is not None and cur.gid == addr.gid:
-                del self._prefix[key]
+        self._purge_index(addr.gid)
         self.agas.free(addr)
         self.trace.instant("kvcache", "page_free", gid=addr.gid)
 
     def _drop_cold(self, gid: int) -> None:
-        """Drop a retained page entirely (either tier) — its
-        activation checkpoint dies with the chain."""
+        """Drop a retained page entirely (either tier) — its radix
+        node and activation checkpoint die with it, atomically
+        (`_purge_index`), so a cover computed before the drop can
+        never attach the freed address: `attach_covered` re-probes
+        every key and raises instead."""
         addr = GlobalAddress(gid, self.agas.space)
         self.xfer.drop(("page", gid))    # gids never recycle: a
         del self._cold[gid]              # staged copy can't be claimed
-        self._hidden.pop(gid, None)
-        key = self._key_of.pop(gid, None)
-        if key is not None:
-            cur = self._prefix.get(key)
-            if cur is not None and cur.gid == gid:
-                del self._prefix[key]
+        self._purge_index(gid)
         self.agas.free(addr)
         self.cold_drops += 1
         self.trace.instant("kvcache", "page_free", gid=gid)
@@ -260,17 +255,38 @@ class TieredPagePool(PagePool):
 
     def _evict_one(self) -> bool:
         """Demote (or drop) the LRU cold DEVICE page; False if no
-        device page is evictable."""
+        device page is evictable.
+
+        Pin-aware: pages the radix index pinned as hot prefixes
+        (DESIGN.md §4e — hit statistics cross the pin threshold) are
+        passed over while any unpinned cold device page exists, so hot
+        shared prefixes stay in HBM under pressure.  Pins are advisory,
+        never load-bearing: when every candidate is pinned, the LRU
+        pinned page is force-unpinned and evicted — correctness (and
+        liveness) first."""
+        fallback = None
         for gid in self._cold:                  # oldest first
             addr = GlobalAddress(gid, self.agas.space)
-            if self.on_device(addr):
-                if self.host_free_rows > 0:
-                    self._demote([addr], key=("evict", gid))
-                    self.evictions += 1
-                else:
-                    self._drop_cold(gid)
-                return True
+            if not self.on_device(addr):
+                continue
+            if self.prefix.is_pinned(gid):
+                if fallback is None:
+                    fallback = gid
+                continue
+            return self._evict_gid(gid)
+        if fallback is not None:
+            self.prefix.unpin_gid(fallback, forced=True)
+            return self._evict_gid(fallback)
         return False
+
+    def _evict_gid(self, gid: int) -> bool:
+        if self.host_free_rows > 0:
+            self._demote([GlobalAddress(gid, self.agas.space)],
+                         key=("evict", gid))
+            self.evictions += 1
+        else:
+            self._drop_cold(gid)
+        return True
 
     # -- demote: device -> host ---------------------------------------
     def _demote(self, addrs: Sequence[GlobalAddress], key: Any) -> None:
@@ -315,15 +331,21 @@ class TieredPagePool(PagePool):
             self.host["v"][:, hs] = payload["v"][:, i]
 
     def _make_host_room(self, n: int) -> bool:
-        """Free host rows by dropping LRU cold HOST pages; False if
-        even that cannot make room for `n` demotions."""
+        """Free host rows by dropping LRU cold HOST pages (unpinned
+        first — a pinned host page is still a hot prefix awaiting
+        promotion); False if even that cannot make room for `n`
+        demotions."""
         while self.host_free_rows < n:
-            victim = next((g for g in self._cold
-                           if not self.on_device(
-                               GlobalAddress(g, self.agas.space))),
-                          None)
+            host_cold = [g for g in self._cold
+                         if not self.on_device(
+                             GlobalAddress(g, self.agas.space))]
+            victim = next((g for g in host_cold
+                           if not self.prefix.is_pinned(g)), None)
             if victim is None:
-                return False
+                if not host_cold:
+                    return False
+                victim = host_cold[0]
+                self.prefix.unpin_gid(victim, forced=True)
             self._drop_cold(victim)
         return True
 

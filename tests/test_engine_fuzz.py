@@ -1,8 +1,10 @@
 """Stateful differential fuzz harness over the serving engines.
 
-A trace machine drives random request traces — mixed prompt lengths,
-shared prefixes, staggered arrivals, forced preemptions / migrations /
-demotions — through the chunked engine under a randomly chosen
+A trace machine drives random request traces — mixed prompt lengths
+sharing real-token heads (the mixed-length prefix sharing the radix
+index exists for), staggered arrivals, forced preemptions /
+migrations / demotions — through the chunked engine under a randomly
+chosen
 ``(kv_shards, tiering, prefix_cache_compute)`` configuration, and
 asserts greedy token-identity against an ample-pool single-locality
 reference after EVERY completion.  Hand-written parity tests cover
@@ -47,9 +49,14 @@ PAGE = 16
 CHUNK = 32
 N_PAGES = 12          # pressure: 3 slots x 5-6 pages wants > 12
 HOST_PAGES = 24
-MAX_NEW = (1, 4, 8)   # bucket(40)=64; 64 + 8 <= MAX_LEN, so a
-TAIL_LENS = (1, 5, 8, 12, 16)        # re-admission never truncates
-PREFIX_LENS = (0, 16, 24)            # shared heads (0 = none)
+MAX_NEW = (1, 4, 8)   # 32+20 prompt + 8 <= MAX_LEN, so a
+TAIL_LENS = (1, 5, 8, 12, 16, 20)    # re-admission never truncates
+# shared real-token heads (0 = none); 16/24 share one page, 32 shares
+# two — mixed TOTAL lengths behind a shared head are the traffic the
+# position-normalized keys exist for (equal-length-only sharing was
+# the §9.4 defect), so most (head, tail) draws differ in total length
+# while hitting the same radix path
+PREFIX_LENS = (0, 16, 24, 32)
 N_VARIANTS = 3
 
 CONFIGS = [

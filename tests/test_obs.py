@@ -348,6 +348,58 @@ def test_traced_engine_run_produces_causally_linked_spans():
     assert eng.metrics.snapshot()["engine.decode_ms.count"] > 0
 
 
+def test_traced_attribution_reconciles_with_compute_skip_active():
+    """§4e compute skip removes work from the step; the §10 ledger
+    must still balance — skipped prefill is compute the tracer never
+    saw AND wall-clock the step never contained, so the per-step self
+    times keep summing to the step wall (residual <= 5%) while the
+    engine reports both full and partial covers."""
+    cfg = configs.get_reduced("yi-6b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tr = Tracer(capacity=1 << 14)
+    eng = make_engine(params, cfg, engine="chunked", slots=2,
+                      max_len=96, prefill_buckets=(32,), page_size=16,
+                      n_pages=16, chunk_size=32, tiering=True,
+                      host_pages=32, prefix_cache_compute=True,
+                      tracer=tr)
+    rng = np.random.default_rng(11)
+    head = rng.integers(0, cfg.vocab_size, size=48).astype(np.int32)
+    seed_prompt = np.concatenate(
+        [head, rng.integers(0, cfg.vocab_size, size=16)]
+    ).astype(np.int32)
+    set_global(tr)
+    try:
+        # cold seed, then a warm wave: one exact repeat (full cover)
+        # and one longer prompt sharing only the head (partial cover)
+        eng.submit(Request(0, seed_prompt, max_new_tokens=3))
+        eng.run_to_completion()
+        eng.submit(Request(1, seed_prompt, max_new_tokens=3))
+        eng.submit(Request(2, np.concatenate(
+            [head, rng.integers(0, cfg.vocab_size, size=32)]
+        ).astype(np.int32), max_new_tokens=3))
+        eng.run_to_completion()
+    finally:
+        set_global(None)
+    assert eng.prefix_skips >= 1
+    assert eng.prefix_partial_hits >= 1
+    assert eng.prefill_tokens_skipped >= 64 + 48
+    recs = tr.records()
+    assert tr.dropped == 0
+    assert check_nesting(recs) == []
+    assert check_causal(recs) == []
+    rep = attribute(recs)
+    assert rep["steps"] == len(eng.counters) > 0
+    assert rep["sum_residual"] <= 0.05
+    # the registry mirrors both skip counters next to the trace stats
+    s = eng.stats()
+    assert s["prefix_skips"] == eng.prefix_skips
+    assert s["prefix_partial_hits"] == eng.prefix_partial_hits
+    snap = eng.metrics.snapshot()
+    assert snap["engine.prefix_partial_hits"] == eng.prefix_partial_hits
+    assert snap["engine.prefill_tokens_skipped"] == \
+        eng.prefill_tokens_skipped
+
+
 def test_untraced_engine_has_null_tracer_and_empty_trace():
     cfg = configs.get_reduced("yi-6b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)

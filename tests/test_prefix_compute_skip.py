@@ -29,9 +29,10 @@ def setup(request):
 
 
 def _prompts(cfg):
-    """A/B share a 56-token head and a common total length (80), so
-    their left-padded layouts (bucket 96, pad 16) agree on the first
-    72 tokens = 4 full pages; C is a different length entirely."""
+    """A/B share a 56-token head (3 full pages of the pad-free
+    layout); C shares nothing.  Totals are equal (80) only so the cold
+    references stay comparable — position-normalized keys make the
+    sharing independent of total length."""
     rng = np.random.default_rng(17)
     head = rng.integers(0, cfg.vocab_size, size=56)
     tail_a = rng.integers(0, cfg.vocab_size, size=24)
@@ -72,16 +73,17 @@ def test_full_partial_uncached_parity_vs_cold(setup):
     assert got[1] == truth[a.tobytes()]
     assert got[2] == truth[b.tobytes()]
     assert got[3] == truth[c.tobytes()]
-    # the repeat admitted straight to decode (96); B skipped its 4
-    # covered pages (pad 16 + head 56 = 72 -> 64 page-aligned) of
-    # bucket 96; even "uncached" C covers its all-zeros left-pad page
-    # (16) — zero tokens at positions 0..15 hash and prefill
-    # identically whatever prompt follows them
+    # the repeat admitted straight to decode (all 80 real tokens); B
+    # skipped its 3 covered head pages (56 -> 48 page-aligned); C is
+    # genuinely uncached and skipped nothing — pad-free layouts have
+    # no all-zeros left-pad page to cover by luck
     assert eng.prefix_skips == 1
-    assert eng.prefill_tokens_skipped == 96 + 64 + 16
+    assert eng.prefix_partial_hits == 1
+    assert eng.prefill_tokens_skipped == 80 + 48 + 0
     st = eng.stats()
     assert st["prefix_cache_compute"] is True
-    assert st["prefill_tokens_skipped"] == 176
+    assert st["prefill_tokens_skipped"] == 128
+    assert st["prefix_partial_hits"] == 1
 
 
 def test_whole_prompt_engine_full_cover_skips(setup):
@@ -96,7 +98,7 @@ def test_whole_prompt_engine_full_cover_skips(setup):
     got = _serve(eng, [Request(1, a, max_new_tokens=6)])
     assert got[1] == truth
     assert eng.prefix_skips == 1
-    assert eng.prefill_tokens_skipped == 96
+    assert eng.prefill_tokens_skipped == 80
 
 
 def test_spilled_activation_restores_with_its_pages(setup):
@@ -121,11 +123,11 @@ def test_spilled_activation_restores_with_its_pages(setup):
 def test_cow_divergence_mid_covered_page(setup):
     """Two fully-covered repeats decode concurrently: both append into
     the covered PARTIAL page, so the first divergent write must COW —
-    and both must still match the cold reference.  A partial final
-    page needs a bucket that is not a page multiple (40 -> the last
-    page holds 8 of 16); the standard 32-ladder always page-aligns."""
+    and both must still match the cold reference.  With pad-free
+    layouts any prompt length off the page grid gives a partial final
+    page (36 -> the last page holds 4 of 16)."""
     cfg, params = setup
-    kw = dict(KW, prefill_buckets=(40,))
+    kw = dict(KW)
     rng = np.random.default_rng(41)
     a = rng.integers(0, cfg.vocab_size, size=36).astype(np.int32)
     eng_cold = make_engine(params, cfg, **kw)
@@ -138,6 +140,32 @@ def test_cow_divergence_mid_covered_page(setup):
     assert got[1] == truth and got[2] == truth
     assert eng.prefix_skips == 2
     assert eng.kvc.pool.cow_copies > cow_before
+
+
+def test_mixed_length_prompts_share_prefix(setup):
+    """The headline fix: prompts of DIFFERENT total lengths sharing a
+    real-token head share its pages and skip its compute.  Under the
+    old padded-layout keying the differing left-pad counts made every
+    page key diverge and this skipped zero tokens."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    head = rng.integers(0, cfg.vocab_size, size=48)   # 3 full pages
+    short = np.concatenate(
+        [head, rng.integers(0, cfg.vocab_size, size=8)]
+    ).astype(np.int32)                                # 56 total
+    long = np.concatenate(
+        [head, rng.integers(0, cfg.vocab_size, size=40)]
+    ).astype(np.int32)                                # 88 total
+    truth_s = _cold(params, cfg, short, 6)
+    truth_l = _cold(params, cfg, long, 6)
+    eng = make_engine(params, cfg, **KW)
+    got = _serve(eng, [Request(0, short, max_new_tokens=6)])
+    assert got[0] == truth_s
+    got = _serve(eng, [Request(1, long, max_new_tokens=6)])
+    assert got[1] == truth_l                # token-identical to cold
+    assert eng.prefix_partial_hits == 1
+    assert eng.prefill_tokens_skipped == 48  # the shared head pages
+    assert eng.kvc.pool.shares >= 3
 
 
 def test_skip_off_engine_shares_memory_but_never_skips(setup):
@@ -212,6 +240,42 @@ def test_checkpoint_dies_with_its_page():
     pool._drop_cold(addr.gid)
     assert pool.hidden_for(key) is None
     assert addr.gid not in pool._hidden
+
+
+def test_dropped_cover_page_raises_cleanly_before_attach():
+    """Forced-pressure regression (prefix-index purge on drop): cold
+    covered pages demoted and then DROPPED under host-tier pressure
+    between the cover probe and `attach_covered`.  The drop must purge
+    the radix index atomically — a fresh probe shrinks, and attaching
+    with the stale keys raises PageExhausted with everything rolled
+    back, never a freed address."""
+    from repro.serving.kvcache import PageExhausted
+    cfg = configs.get_reduced("yi-6b")
+    kvc = PagedKVCache(cfg, slots=2, max_len=96, n_pages=4,
+                       page_size=16, host_pages=1)
+    pool = kvc.pool
+    toks = RNG.integers(0, 100, size=40).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((L, 40, kvh, hd), jnp.float32)
+    kvc.attach(0, toks, z, z)               # 3 pages
+    kvc.release(0)                          # retained cold
+    cov = kvc.covered_prefix(toks)
+    assert cov.covered == 32                # no checkpoints: 2 keys
+    # drive eviction: 1 free page, the host tier holds only 1 — the
+    # first eviction demotes, the next must DROP a covered page
+    held = [pool.alloc() for _ in range(3)]
+    assert pool.cold_drops >= 1
+    # the drop purged the index: the cover shrank atomically
+    assert kvc.covered_prefix(toks).covered < cov.covered
+    used = pool.used_pages
+    with pytest.raises(PageExhausted):
+        kvc.attach_covered(1, toks, cov.keys)
+    # clean rollback: no refs leaked, the slot never came up
+    assert pool.used_pages == used
+    assert kvc.lengths[1] == 0
+    pool.prefix.check()
+    for a in held:
+        pool.decref(a)
 
 
 def test_resume_prefill_is_the_vocab_projection():

@@ -126,13 +126,22 @@ def test_begin_chunk_atomic_under_exhaustion():
 
 # -- differential parity: dense == whole-prompt paged == chunked -------
 
-def _parity_requests(cfg, seed=3):
+def _parity_requests(cfg, seed=3, bucket=64):
+    """Mixed real lengths, pre-padded to one shared left-padded
+    stream: the paged engines run prompts pad-free while the dense
+    baseline left-pads to its bucket, so cross-engine parity needs the
+    pad to be part of the prompt itself — then every engine computes
+    the identical layout."""
     rng = np.random.default_rng(seed)
     # 5 < one page (16); 40 > one chunk (32); plus two mid lengths
     lens = [5, 40, 20, 12]
-    return [Request(rid, rng.integers(0, cfg.vocab_size, size=n)
-                    .astype(np.int32), max_new_tokens=6)
-            for rid, n in enumerate(lens)]
+    reqs = []
+    for rid, n in enumerate(lens):
+        p = np.zeros(bucket, np.int32)
+        p[bucket - n:] = rng.integers(0, cfg.vocab_size,
+                                      size=n).astype(np.int32)
+        reqs.append(Request(rid, p, max_new_tokens=6))
+    return reqs
 
 
 @pytest.mark.parametrize("arch", ["yi-6b", "mixtral-8x7b",
@@ -140,13 +149,14 @@ def _parity_requests(cfg, seed=3):
 def test_differential_engine_parity(arch):
     """Greedy decode is token-identical across the dense, whole-prompt
     paged, and chunked engines — dense attention (yi), MoE (mixtral),
-    and sliding-window (danube) — on a trace containing a prompt
-    shorter than one page and a prompt longer than one chunk.
+    and sliding-window (danube) — on a trace of mixed real lengths
+    sharing one explicit left-padded stream (see _parity_requests).
 
     One shared bucket keeps the dense engine's single position clock
     valid (seed caveat), and — as in the seed parity test — the chosen
     seed has no float near-ties between the separately compiled
-    executables."""
+    executables.  (Pad-free mixed-length layouts are exercised by the
+    differential fuzzer, which compares the two paged engines.)"""
     cfg = _cfg(arch)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     reqs = _parity_requests(cfg)
@@ -271,10 +281,11 @@ def test_stats_ttft_and_itl_populated_after_run():
     assert s["ttft_p50_ms"] > 0.0
     assert s["itl_p50_ms"] > 0.0
     assert 0.0 < s["ttft_p50_ms"] <= s["ttft_p95_ms"]
-    # per-step telemetry records the budget split
+    # per-step telemetry records the budget split: pad-free layouts
+    # prefill exactly the real tokens (10 + 11), not a padded bucket
     assert all("prefill_chunk_tokens" in x and "decode_tokens" in x
                for x in eng.counters)
-    assert sum(x["prefill_chunk_tokens"] for x in eng.counters) == 64
+    assert sum(x["prefill_chunk_tokens"] for x in eng.counters) == 21
     assert all(x["prefill_chunk_tokens"] + x["decode_tokens"]
                <= x["budget_tokens"] for x in eng.counters)
 
@@ -307,7 +318,7 @@ def test_step_budget_holds_across_prefill_to_decode_transition():
                                     prefill_buckets=(32,), page_size=16,
                                     chunk_size=32, step_tokens=34)
     for rid in range(3):
-        eng.submit(Request(rid, np.arange(20, dtype=np.int32) + rid,
+        eng.submit(Request(rid, np.arange(32, dtype=np.int32) + rid,
                            max_new_tokens=4))
     eng.run_to_completion()
     assert len(eng.completions) == 3

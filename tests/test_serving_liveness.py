@@ -30,7 +30,7 @@ def _params(cfg):
 
 @pytest.mark.parametrize("engine", ["paged", "chunked"])
 def test_preempted_request_at_cap_delivers_partial_tokens(engine):
-    """A preempted request whose bucket + generated tokens exceed
+    """A preempted request whose prompt + generated tokens exceed
     max_len must FINISH with the tokens it already generated — exactly
     what an un-preempted request in the same state gets via
     truncation — not be rejected through its LCO with all its work
@@ -42,11 +42,10 @@ def test_preempted_request_at_cap_delivers_partial_tokens(engine):
     prompt = RNG.integers(0, cfg.vocab_size, size=20).astype(np.int32)
     fut = eng.submit(Request(0, prompt, max_new_tokens=50))
     # reconstruct the carried-preemption state at the head of the
-    # queue: bucket 32 + 40 generated tokens pads to 72 > max_len 64
+    # queue: 20 prompt + 50 generated tokens = 70 > max_len 64
     item = eng.queue[0]
-    gen = [int(x) for x in RNG.integers(0, cfg.vocab_size, size=40)]
+    gen = [int(x) for x in RNG.integers(0, cfg.vocab_size, size=50)]
     item["gen"] = list(gen)
-    item["bucket"] = 32
     item["preempts"] = 2
     eng.run_to_completion()
     comp = fut.get()                    # must NOT raise
@@ -71,8 +70,7 @@ def test_readmission_exceeding_pool_capacity_delivers_partial_tokens():
     fut = eng.submit(Request(0, prompt, max_new_tokens=200))
     item = eng.queue[0]
     gen = [int(x) for x in RNG.integers(0, cfg.vocab_size, size=60)]
-    item["gen"] = list(gen)             # 32 + 60 -> 6 pages + 1 > 4
-    item["bucket"] = 32
+    item["gen"] = list(gen)             # 80 tokens -> 5 pages + 1 > 4
     item["preempts"] = 1
     eng.run_to_completion()
     assert fut.get().tokens == gen

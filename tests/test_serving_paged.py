@@ -55,6 +55,17 @@ def test_page_keys_chain_includes_prefix():
     assert page_keys(a, 8) == ka
     assert ka[-1][1] == 8
     assert page_keys(a[:20], 8)[-1][1] == 4
+    # position normalization: a shorter prompt sharing the real-token
+    # head shares the leading keys — total length is not in the name
+    assert page_keys(a[:20], 8)[:2] == ka[:2]
+    # ... but the pad count IS (RoPE positions differ across layouts)
+    assert page_keys(a, 8, pad=4) != ka
+    assert page_keys(a, 8, pad=4) == page_keys(a, 8, pad=4)
+    # pad rows hash by position, not value: two layouts differing only
+    # inside the pad region share every key
+    c = a.copy()
+    c[:4] = 77
+    assert page_keys(c, 8, pad=4) == page_keys(a, 8, pad=4)
 
 
 def test_prefix_sharing_and_cow():
@@ -150,6 +161,22 @@ def _mixed_requests(cfg, n, lo=8, hi=30, max_new=8, seed=0):
         for rid in range(n)]
 
 
+def _prepad(reqs, bucket):
+    """Make the dense engine's left-padded stream the LITERAL prompt:
+    the paged engines run prompts pad-free (tokens at positions
+    0..len-1) while the dense baseline left-pads to its bucket, so
+    cross-engine parity is only meaningful when the pad is explicit in
+    the prompt itself — every engine then computes the identical
+    layout."""
+    out = []
+    for r in reqs:
+        p = np.zeros(bucket, np.int32)
+        p[bucket - len(r.prompt):] = r.prompt
+        out.append(Request(r.rid, p, max_new_tokens=r.max_new_tokens,
+                           temperature=r.temperature, eos_id=r.eos_id))
+    return out
+
+
 @pytest.mark.parametrize("arch", ["yi-6b", "mixtral-8x7b"])
 def test_paged_engine_token_parity_with_dense(arch):
     """Greedy decode over block tables is token-identical to the dense
@@ -160,7 +187,7 @@ def test_paged_engine_token_parity_with_dense(arch):
     such ties (stable across many runs)."""
     cfg = _cfg(arch)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    reqs = _mixed_requests(cfg, 4, seed=3)
+    reqs = _prepad(_mixed_requests(cfg, 4, seed=3), 32)
     kw = dict(slots=4, max_len=96, prefill_buckets=(32,))
     pe = PagedServingEngine(params, cfg, page_size=16, **kw)
     de = DenseServingEngine(params, cfg, **kw)
@@ -189,12 +216,12 @@ def test_preemption_under_page_pressure_completes_all():
     eng = PagedServingEngine(params, cfg, slots=5, max_len=80,
                              prefill_buckets=(32,), page_size=8,
                              n_pages=14)
-    attached = []                        # every padded prefill layout
+    attached = []                        # every prefill cache layout
     orig_attach = eng.kvc.attach
 
-    def logging_attach(slot, padded, k, v):
-        attached.append(np.array(padded))
-        orig_attach(slot, padded, k, v)
+    def logging_attach(slot, layout, k, v):
+        attached.append(np.array(layout))
+        orig_attach(slot, layout, k, v)
     eng.kvc.attach = logging_attach
     futs = [eng.submit(r) for r in reqs]
     eng.run_to_completion()
@@ -203,22 +230,20 @@ def test_preemption_under_page_pressure_completes_all():
     assert eng.preemptions > 0
     assert eng.kvc.pool.used_pages == 0              # nothing leaked
     # preemption is seamless at the layout level: every re-admission
-    # reconstructed [original left-pads | prompt | generated] exactly
-    # (bucket 32 here), so positions and context match what the
+    # reconstructed [prompt | generated] exactly — pad-free, tokens at
+    # positions 0..len-1 — so positions and context match what the
     # request saw before eviction.  (End-to-end greedy token equality
     # across two engine instances is NOT asserted: each engine
     # jit-compiles its own executables, and XLA may resolve float
     # near-ties differently between compilations.)
-    bucket0 = 32
-    resumed = [p for p in attached if len(p) > bucket0]
+    n0 = 24                              # all prompts are 24 tokens
+    resumed = [p for p in attached if len(p) > n0]
     assert len(resumed) == eng.preemptions
     prompts = {tuple(r.prompt.tolist()): r for r in reqs}
     comps = {c.rid: c for c in eng.completions}
-    for padded in resumed:
-        n0 = 24                          # all prompts are 24 tokens
-        assert list(padded[:bucket0 - n0]) == [0] * (bucket0 - n0)
-        req = prompts[tuple(padded[bucket0 - n0:bucket0].tolist())]
-        gen = list(padded[bucket0:])
+    for layout in resumed:
+        req = prompts[tuple(layout[:n0].tolist())]
+        gen = list(layout[n0:])
         # the carried tokens are a verbatim prefix of the completion
         assert comps[req.rid].tokens[:len(gen)] == gen
     # completion LCOs fired exactly once, with the right payloads
@@ -256,8 +281,9 @@ def test_oversized_prompt_rejected_without_killing_engine():
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     eng = PagedServingEngine(params, cfg, slots=2, max_len=96,
                              prefill_buckets=(64, 128), page_size=16)
-    # 90 tokens fits max_len but its bucket (128) does not
-    f_big = eng.submit(Request(0, np.arange(90, dtype=np.int32) % 250,
+    # 100 real tokens exceed max_len (the cache layout is pad-free, so
+    # the limit is on REAL length; the 128-wide compute bucket is fine)
+    f_big = eng.submit(Request(0, np.arange(100, dtype=np.int32) % 250,
                                max_new_tokens=4))
     f_ok = eng.submit(Request(1, np.arange(10, dtype=np.int32),
                               max_new_tokens=4))
@@ -273,13 +299,13 @@ def test_generation_truncates_at_max_len_instead_of_overflowing():
     eng = PagedServingEngine(params, cfg, slots=2, max_len=64,
                              prefill_buckets=(32,), page_size=16)
     f1 = eng.submit(Request(0, np.arange(10, dtype=np.int32),
-                            max_new_tokens=50))
+                            max_new_tokens=80))
     f2 = eng.submit(Request(1, np.arange(8, dtype=np.int32),
                             max_new_tokens=4))
     eng.run_to_completion()
-    # 32-token bucket + 32 decode writes fill max_len; prefill's first
-    # token needs no cache row, so 33 tokens come back
-    assert len(f1.get().tokens) == 33
+    # 10 prompt tokens + 54 decode writes fill max_len 64; prefill's
+    # first token needs no cache row, so 55 tokens come back
+    assert len(f1.get().tokens) == 55
     assert len(f2.get().tokens) == 4
     assert eng.kvc.pool.used_pages == 0
 

@@ -176,7 +176,10 @@ def test_whole_prompt_engine_offload_restore(setup):
               page_size=16)
     truth = _serve(make_engine(params, cfg, engine="paged",
                                n_pages=24, **kw), reqs)
-    eng = make_engine(params, cfg, engine="paged", n_pages=10,
+    # pad-free layouts shrink the page footprint, so the pressure pool
+    # shrinks with them: 8 pages force exactly the offload the test is
+    # about
+    eng = make_engine(params, cfg, engine="paged", n_pages=8,
                       tiering=True, host_pages=40, **kw)
     got = _serve(eng, reqs, max_steps=100000)
     st = eng.stats()
@@ -190,8 +193,8 @@ def test_forced_eviction_torture_mid_decode(setup):
     an undisturbed run (cold pages are refcount-0, so refcount
     pinning guarantees active slots never lose a page)."""
     cfg, params = setup
-    # same-length prompts with a common head: identical left-pad, so
-    # the first three pages of every padded prompt hash identically
+    # prompts share a 32-token real head: its two full pages hash
+    # identically under the position-normalized keys
     prefix = RNG.integers(0, cfg.vocab_size, size=32).astype(np.int32)
     wave1 = _requests(cfg, (8, 8), max_new=6, rid0=0, prefix=prefix)
     wave2 = _requests(cfg, (8, 8), max_new=8, rid0=10, prefix=prefix)
