@@ -1,4 +1,8 @@
-"""Batched serving demo: continuous batching over an AGAS page pool.
+"""Batched serving demo: continuous batching over an AGAS page pool,
+then the same traffic through disaggregated prefill/decode roles
+(DESIGN.md §4f) — prefill chunks dispatched as parcels to the
+locality owning their KV, finished prompts handed off to the decode
+role via percolation snapshots.
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,7 +14,27 @@ import numpy as np
 
 import repro.configs as configs
 from repro.models import transformer as T
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, make_engine
+
+
+def _traffic(cfg, rid0=0):
+    rng = np.random.default_rng(0)
+    return [Request(rid0 + i,
+                    rng.integers(0, cfg.vocab_size,
+                                 size=int(rng.integers(8, 60)))
+                    .astype(np.int32), max_new_tokens=12)
+            for i in range(10)]
+
+
+def _serve(eng, reqs):
+    t0 = time.perf_counter()
+    futures = [eng.submit(r) for r in reqs]
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    tok = sum(len(c.tokens) for c in eng.completions)
+    print(f"{len(eng.completions)} completions, {tok} tokens, "
+          f"{dt:.2f}s ({tok / dt:.1f} tok/s incl. compile)")
+    return futures
 
 
 def main():
@@ -22,19 +46,7 @@ def main():
     eng = ServingEngine(params, cfg, slots=4, max_len=160,
                         prefill_buckets=(32, 64), page_size=16,
                         n_pages=20)
-    rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
-    futures = []
-    for rid in range(10):
-        n = int(rng.integers(8, 60))
-        futures.append(eng.submit(Request(
-            rid, rng.integers(0, cfg.vocab_size, size=n)
-            .astype(np.int32), max_new_tokens=12)))
-    eng.run_to_completion()
-    dt = time.perf_counter() - t0
-    tok = sum(len(c.tokens) for c in eng.completions)
-    print(f"{len(eng.completions)} completions, {tok} tokens, "
-          f"{dt:.2f}s ({tok / dt:.1f} tok/s incl. compile)")
+    futures = _serve(eng, _traffic(cfg))
     for fut in futures[:5]:
         c = fut.get()                  # completion arrives via the LCO
         print(f"  rid={c.rid:2d} prefill={c.prefill_s * 1e3:6.0f}ms "
@@ -43,6 +55,22 @@ def main():
     print(f"pages: peak occupancy {s['peak_page_occupancy']:.0%}, "
           f"{s['page_shares']} prefix-shared, "
           f"{s['preemptions']} preemptions")
+
+    # the same traffic, disaggregated (§4f): a 2-shard pool, one
+    # prefill worker per shard, parcels carrying each chunk to its
+    # KV's locality and percolation handoffs into the decode role
+    deng = make_engine(params, cfg, engine="chunked", disagg=True,
+                       slots=4, max_len=160, prefill_buckets=(32, 64),
+                       page_size=16, n_pages=20, kv_shards=2)
+    print(f"\ndisagg: {deng.prefill_workers} prefill / "
+          f"{deng.decode_workers} decode worker(s)")
+    _serve(deng, _traffic(cfg, rid0=100))
+    d = deng.stats()
+    print(f"parcels: {d['prefill_parcels']} "
+          f"(owner={d['prefill_parcels_owner']} "
+          f"cold={d['prefill_parcels_cold']}), "
+          f"handoffs: {d['handoffs']} ({d['handoff_bytes']}B, "
+          f"overlap={d['handoff_overlap']:.2f})")
 
 
 if __name__ == "__main__":

@@ -98,6 +98,28 @@ class ParcelPort:
                                   dst=self.agas.locality_of(parcel.target))
             self.queues[self.agas.locality_of(parcel.target)].append(parcel)
 
+    def post(self, parcel: Parcel, dst: int, from_locality: int,
+             state: Any) -> None:
+        """Action-manager entry with an EXPLICIT destination locality.
+
+        `apply` routes by looking the target up in the directory; that
+        requires the target object to exist.  Some parcels move work
+        to a locality where their object does not exist YET — the
+        first chunk of a cold prompt allocates its pages at the
+        destination (its `target` may be None) — so the dispatcher
+        resolves the destination itself (prefix-owner or
+        least-loaded) and posts here."""
+        if dst == from_locality:
+            self.local_applied += 1
+            _trace.GLOBAL.instant("parcels", "local_apply",
+                                  action=parcel.action)
+            self._run(parcel, state)
+        else:
+            self.sent += 1
+            _trace.GLOBAL.instant("parcels", "send",
+                                  action=parcel.action, dst=dst)
+            self.queues[dst].append(parcel)
+
     def drain(self, locality: int, state: Any) -> int:
         """Process the inbound queue of one locality; returns #parcels."""
         q, self.queues[locality] = self.queues[locality], []
@@ -241,6 +263,53 @@ def _lower_moves(recs, n_loc) -> HaloLowering:
         scatters.append(ss)
     return HaloLowering(tuple(perms), tuple(gathers), tuple(scatters),
                         n_parcels=len(recs))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillParcel:
+    """One prefill chunk as an active message (DESIGN.md §4f).
+
+    The serving rendering of "move the work to the data": a chunk of
+    prompt [start, start+take) for request `rid` in engine slot
+    `slot`, dispatched to `locality` — the AGAS locality owning the
+    prompt's radix-matched prefix pages (`anchor` is the deepest
+    matched page, or the slot's last resident page for chunks after
+    the first), or the least-loaded prefill worker when the prompt is
+    cold (`anchor` None: there is no data yet; the chunk's pages are
+    allocated at the destination, so the NEXT prompt sharing this
+    prefix finds an owner)."""
+
+    rid: int
+    slot: int
+    start: int
+    take: int
+    anchor: Optional[GlobalAddress]
+    locality: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillLowering:
+    """A step's prefill parcels grouped per destination locality,
+    each batch padded to the canonical power-of-two size class — the
+    same trick `plan_move_arrays` uses, so a compiled dispatch
+    program exists per (locality, size class), never per step."""
+
+    batches: tuple      # ((locality, (PrefillParcel, ...)), ...)
+    sizes: tuple        # canonical (padded) batch size per destination
+    n_parcels: int
+
+
+def lower_prefill_parcels(parcels: Sequence[PrefillParcel]
+                          ) -> PrefillLowering:
+    """Group one step's prefill parcels by destination and pad each
+    batch to `canonical_size` — the batched-dispatch lowering."""
+    by_dst: Dict[int, List[PrefillParcel]] = defaultdict(list)
+    for p in parcels:
+        by_dst[p.locality].append(p)
+    batches = tuple((loc, tuple(by_dst[loc]))
+                    for loc in sorted(by_dst))
+    sizes = tuple(canonical_size(len(b)) for _, b in batches)
+    return PrefillLowering(batches, sizes, len(parcels))
 
 
 def canonical_size(n: int) -> int:

@@ -23,6 +23,13 @@ Usage:
       --metrics-interval 8   # causal trace (perfetto-viewable) +
                              # periodic metrics-registry snapshots
                              # (DESIGN.md §10)
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --kv-shards 2 --disagg --prefill-workers 2 --decode-workers 1
+                             # disaggregated prefill/decode
+                             # (DESIGN.md §4f): prefill chunks
+                             # parcel-dispatched to prefix-owner
+                             # localities, finished KV handed to the
+                             # decode role via percolation snapshots
 """
 
 from __future__ import annotations
@@ -69,6 +76,19 @@ def main():
                          "the covered prefill compute; fully-covered "
                          "prompts admit straight to decode from the "
                          "cached activation checkpoint")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode (DESIGN.md "
+                         "§4f): prefill chunks dispatch as parcels to "
+                         "the locality owning the prompt's prefix "
+                         "pages (least-loaded when cold) and finished "
+                         "KV hands to the decode role through staged "
+                         "percolation snapshots; requires the chunked "
+                         "engine")
+    ap.add_argument("--prefill-workers", type=int, default=0,
+                    help="prefill-worker localities for --disagg "
+                         "(0 = one per KV shard)")
+    ap.add_argument("--decode-workers", type=int, default=1,
+                    help="decode-worker localities for --disagg")
     ap.add_argument("--pin-threshold", type=int, default=4,
                     help="radix-index hits before a prefix page is "
                          "pinned hot — pinned pages are the LAST "
@@ -106,7 +126,15 @@ def main():
                       host_pages=args.host_pages,
                       prefix_cache_compute=args.prefix_cache_compute,
                       pin_threshold=args.pin_threshold,
+                      disagg=args.disagg,
+                      prefill_workers=args.prefill_workers or None,
+                      decode_workers=args.decode_workers,
                       **kw)
+    if args.disagg and hasattr(eng, "prefill_workers"):
+        print(f"[serve] disaggregated roles: {eng.prefill_workers} "
+              f"prefill worker(s) / {eng.decode_workers} decode "
+              f"worker(s) over {eng.kvc.pool.n_shards} localit"
+              f"{'ies' if eng.kvc.pool.n_shards > 1 else 'y'}")
     if args.tiering and hasattr(eng, "kvc"):
         pool = eng.kvc.pool
         print(f"[serve] two-tier pool: {pool.capacity} device pages "
@@ -183,6 +211,14 @@ def main():
                   f"offload_bytes={s['offload_bytes']} "
                   f"promote_bytes={s['promote_bytes']} "
                   f"overlap={s['copy_compute_overlap']:.2f}")
+        if s.get("disagg"):
+            print(f"[serve] disagg: parcels={s['prefill_parcels']} "
+                  f"(owner={s['prefill_parcels_owner']} "
+                  f"cold={s['prefill_parcels_cold']} "
+                  f"affinity={s['prefill_parcel_affinity']:.0%}) "
+                  f"handoffs={s['handoffs']} "
+                  f"({s['handoff_bytes']}B, "
+                  f"overlap={s['handoff_overlap']:.2f})")
         if s.get("prefix_cache_compute"):
             print(f"[serve] compute skip: "
                   f"full_skips={s['prefix_skips']} "

@@ -1,14 +1,22 @@
 """serving subpackage: paged KV cache + continuous-batching engines."""
 
-from repro.serving.engine import (ChunkedPagedServingEngine, Completion,
+from repro.serving.engine import (ChunkedPagedServingEngine,
                                   DenseServingEngine,
-                                  PagedServingEngine, Request,
+                                  DisaggChunkedServingEngine,
+                                  PagedServingEngine,
                                   ServingEngine, make_engine)
 from repro.serving.kvcache import (PagedKVCache, PageExhausted,
                                    PagePool, page_keys)
+from repro.serving.types import Completion, Request
+from repro.serving.workers import (DecodeWorker, HandoffDecodeWorker,
+                                   ParcelPrefillWorker, PrefillWorker,
+                                   StepScheduler)
 
 __all__ = [
     "ChunkedPagedServingEngine", "Completion", "DenseServingEngine",
-    "PagedServingEngine", "Request", "ServingEngine", "make_engine",
+    "DisaggChunkedServingEngine", "PagedServingEngine", "Request",
+    "ServingEngine", "make_engine",
     "PagedKVCache", "PageExhausted", "PagePool", "page_keys",
+    "DecodeWorker", "HandoffDecodeWorker", "ParcelPrefillWorker",
+    "PrefillWorker", "StepScheduler",
 ]

@@ -50,7 +50,6 @@ Design points that matter at scale and are implemented here:
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
 import time
 from typing import Any, Dict, List, Optional
@@ -60,43 +59,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lco import Future
+from repro.core.parcels import ParcelPort
+from repro.core.percolation import CopyParcel, PercolationQueue
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
 from repro.serving.kvcache import (PagedKVCache, PageExhausted,
-                                   PAGED_FAMILIES)
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray               # (S,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    eos_id: Optional[int] = None
-
-
-@dataclasses.dataclass
-class Completion:
-    rid: int
-    tokens: List[int]
-    prefill_s: float
-    decode_s: float
-    preemptions: int = 0
-    # submit -> first sampled token (survives preemption: the first
-    # token is only ever sampled once)
-    ttft_s: float = 0.0
-    # gaps between consecutive sampled tokens (inter-token latencies)
-    itl_s: List[float] = dataclasses.field(default_factory=list)
-
-
-def _mean(xs) -> float:
-    return float(np.mean(xs)) if len(xs) else 0.0
-
-
-def _pct(xs, q: float) -> float:
-    return float(np.percentile(xs, q)) if len(xs) else 0.0
+                                   PAGED_FAMILIES, page_keys)
+# Request/Completion moved to serving/types.py (the worker split);
+# re-exported here because tests/benchmarks import them from engine
+from repro.serving.types import Completion, Request, _mean, _pct  # noqa: F401
+from repro.serving.workers import (DecodeWorker, HandoffDecodeWorker,
+                                   ParcelPrefillWorker, PrefillWorker,
+                                   PREFILL_ACTIONS, StepScheduler)
 
 
 class _EngineBase:
@@ -1177,6 +1153,15 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                                                keepdims=False)
             return T.logits_fn(p, out), out, x[:, ps - 1::ps], pages
         self._chunk_step = jax.jit(chunk_fn, donate_argnums=(1,))
+        # the role composition (DESIGN.md §4f): a role-agnostic token-
+        # budget scheduler drives a prefill role and a decode role.
+        # This engine is the single-locality composition — both roles
+        # run where the engine runs; the disaggregated engine swaps in
+        # parcel-dispatched workers without touching the scheduler.
+        self._sched = StepScheduler(self.step_tokens, self.chunk_size,
+                                    page_size)
+        self._prefill_role = PrefillWorker()
+        self._decode_role = DecodeWorker()
 
     # -- admission: gated on the first chunk, not the whole prompt ----
     def _upcoming_allocs(self) -> int:
@@ -1277,6 +1262,14 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 self.kvc.prefetch_chunk(s, st["layout"], st["pos"],
                                         end)
 
+    def _chunk_locality(self, slot: int, st: dict) -> Optional[int]:
+        """Placement hint for a chunk's fresh page allocations — None
+        keeps the pool's default policy.  The disaggregated engine
+        returns the chunk's parcel-dispatch locality, so a prefill
+        worker's chunks allocate their pages where the worker runs
+        (DESIGN.md §4f)."""
+        return None
+
     # -- one prefill chunk as a schedulable task ----------------------
     def _run_chunk(self, slot: int, take: int) -> bool:
         """Acquire pages for and run one chunk of `slot`'s prompt.
@@ -1298,8 +1291,9 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         end = start + take
         while True:
             try:
-                rows, _ = self.kvc.begin_chunk(slot, st["layout"],
-                                               start, end)
+                rows, _ = self.kvc.begin_chunk(
+                    slot, st["layout"], start, end,
+                    locality=self._chunk_locality(slot, st))
                 break
             except PageExhausted:
                 if len(self.active) <= 1:
@@ -1341,19 +1335,25 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         st["pos"] = end
         st["prefill_s"] += time.perf_counter() - t0
         if end == st["real"]:
-            # final chunk: the prompt is resident — sample the first
-            # token and hand the slot to the decode batch
-            now = time.perf_counter()
-            st["phase"] = "decode"
-            st["t0"] = now
-            first = self._sample(logits[0], st["req"], st["n_gen0"])
-            st["tokens"].append(int(first))
-            self._first_token(st, now)
-            if self._stopped(st["req"], st["tokens"]):
-                self._finish(self.active.pop(slot))
-                self.kvc.release(slot)
-                self.free_slots.append(slot)
+            self._finish_prefill(slot, st, logits)
         return True
+
+    def _finish_prefill(self, slot: int, st: dict, logits) -> None:
+        """Final chunk landed: the prompt is resident — sample the
+        first token and hand the slot to the decode batch.  The
+        disaggregated engine overrides this seam to stage the
+        prefill->decode KV handoff instead of flipping the phase in
+        place (DESIGN.md §4f)."""
+        now = time.perf_counter()
+        st["phase"] = "decode"
+        st["t0"] = now
+        first = self._sample(logits[0], st["req"], st["n_gen0"])
+        st["tokens"].append(int(first))
+        self._first_token(st, now)
+        if self._stopped(st["req"], st["tokens"]):
+            self._finish(self.active.pop(slot))
+            self.kvc.release(slot)
+            self.free_slots.append(slot)
 
     # -- the token-budget step ----------------------------------------
     def _step(self) -> int:
@@ -1375,44 +1375,14 @@ class ChunkedPagedServingEngine(PagedServingEngine):
             self.free_slots.append(slot)
         if not self.active:
             return 0
-        # the decode reservation is taken at step start; a slot whose
-        # prefill completes THIS step joins the decode batch NEXT step,
-        # so prefill chunks + decode tokens never exceed step_tokens
-        decoding = self._decode_slots()
-        budget = self.step_tokens - len(decoding)
-        prefill_tok = 0
-        n_chunks = 0
-        ps = self.kvc.pool.page_size
-        for slot in sorted((s for s in self.active
-                            if self.active[s]["phase"] == "prefill"),
-                           key=lambda s: self.active[s]["seq"]):
-            if slot not in self.active:      # preempted by an earlier
-                continue                     # chunk's page pressure
-            st = self.active[slot]
-            take = min(self.chunk_size, st["real"] - st["pos"])
-            if take > budget:
-                # trim to the page-aligned piece the budget covers
-                take = (budget // ps) * ps
-            if take <= 0:
-                break                        # FCFS: no overtaking
-            if self._run_chunk(slot, take):
-                budget -= take
-                prefill_tok += take
-                n_chunks += 1
-        # the decode batch: prefilling slots ride along masked (their
-        # write row is the null page; their logits are discarded)
-        done: List[int] = []
-        decoding = [s for s in decoding if s in self.active]
-        if decoding:
-            with self.trace.span("engine", "prepare_writes",
-                                 kind="pages"):
-                self._prepare_writes(decoding)
-            decoding = [s for s in decoding if s in self.active]
-        # timer starts after write preparation, matching the
-        # whole-prompt engine so mean_decode_ms stays comparable
-        t0 = time.perf_counter()
-        if decoding:
-            done = self._decode_batch(decoding)
+        # the token-budget loop and the decode batch are the role-
+        # agnostic scheduler's job (serving/workers.py): decode
+        # reservation first, FCFS prefill chunks in the remainder —
+        # this engine plugs in the single-locality roles, the
+        # disaggregated engine the parcel-dispatched ones
+        done, decoding, n_chunks, prefill_tok, t0 = \
+            self._sched.run_step(self, self._prefill_role,
+                                 self._decode_role)
         pool = self.kvc.pool
         self.counters.append({
             "t": time.perf_counter(),
@@ -1433,28 +1403,279 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         return len(self.active) + len(done)
 
 
+class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
+    """Disaggregated prefill/decode over the chunked scheduler
+    (DESIGN.md §4f).
+
+    The step scheduler and its budget policy are inherited untouched;
+    only the ROLES change.  Prefill chunks become `PrefillParcel`s
+    dispatched through a `ParcelPort` to a prefill-worker locality —
+    the locality owning the prompt's radix-matched prefix pages when
+    the prompt is warm (move the work to the data: the shared pages
+    never cross localities), least-loaded among the prefill workers
+    when cold.  A finished prefill does not flip its slot to decode in
+    place: its KV detaches into a snapshot, a `CopyParcel` is staged
+    on the handoff percolation queue while the step's decode batch
+    runs (the §4d double buffer), and the decode role commits the
+    restore at the top of the next step — so the handoff copy
+    overlaps decode compute instead of serializing before it.
+
+    Because detach/restore round-trips the slot byte-identically
+    (block table, position clock, chunk hash chain) and the scheduler
+    is shared, this engine stays greedy token-identical to
+    `ChunkedPagedServingEngine` — the differential fuzzer and
+    serve_bench assert it.
+    """
+
+    def __init__(self, params: Any, cfg: ArchConfig, *,
+                 prefill_workers: Optional[int] = None,
+                 decode_workers: int = 1, **kwargs):
+        super().__init__(params, cfg, **kwargs)
+        n_loc = self.kvc.pool.n_shards
+        self.prefill_workers = max(
+            1, min(int(prefill_workers or n_loc), n_loc))
+        self.decode_workers = max(1, min(int(decode_workers), n_loc))
+        self._port = ParcelPort(self.kvc.pool.agas, PREFILL_ACTIONS)
+        self._prefill_role = ParcelPrefillWorker(self.prefill_workers)
+        self._decode_role = HandoffDecodeWorker()
+        #: staged prefill->decode KV handoffs in flight (§4d machinery
+        #: reused at the §4f role boundary; push/pop only — the
+        #: demote/promote traffic counters belong to tiering)
+        self.handoff_queue = PercolationQueue()
+        self.handoffs = 0
+        self.handoff_bytes = 0
+        self.handoff_overlapped = 0
+        self._last_chunk_ok = False
+
+    # -- dispatch policy ----------------------------------------------
+    def _dispatch_target(self, slot: int, st: dict):
+        """(anchor, destination locality, warm) for a chunk parcel.
+
+        A slot whose pages already live somewhere follows them (the
+        anchor is its last page — sticky, so one prompt's chunks never
+        scatter).  An unattached prompt's first chunk walks the radix
+        prefix index stat-free (`lookup_prefix`, NOT `match` — match
+        stamps hit stats and auto-pins, which would diverge from the
+        single-locality engine) and dispatches to the deepest hit's
+        owner; no hit places it on the least-loaded prefill worker.
+        """
+        pool = self.kvc.pool
+        agas = pool.agas
+        addrs = self.kvc._state[slot].addrs
+        if addrs:
+            anchor = addrs[-1]
+            dst = agas.locality_of(anchor)
+            if dst >= self.prefill_workers:   # host-tier resident
+                dst = st.get("ploc", 0)
+            st.setdefault("pwarm", True)      # attached covered pages
+            st["ploc"] = dst
+            st["panchor"] = anchor
+            return anchor, dst, st["pwarm"]
+        if "ploc" in st:
+            return st.get("panchor"), st["ploc"], st["pwarm"]
+        anchor = None
+        for key in page_keys(st["layout"], pool.page_size):
+            hit = pool.lookup_prefix(key)
+            if hit is None:
+                break
+            anchor = hit
+        warm = anchor is not None \
+            and agas.locality_of(anchor) < self.prefill_workers
+        if warm:
+            dst = agas.locality_of(anchor)
+        else:
+            # least-loaded prefill worker, lowest locality on ties
+            dst = max(range(self.prefill_workers),
+                      key=lambda l: (agas.free_count(l), -l))
+        st["ploc"] = dst
+        st["panchor"] = anchor if warm else None
+        st["pwarm"] = warm
+        return st["panchor"], dst, warm
+
+    def _home_locality(self, slot: int) -> int:
+        """The decode locality a slot's handoff lands on (round-robin
+        over the decode workers) — parcels dispatched elsewhere count
+        as inter-locality sends."""
+        return slot % self.decode_workers
+
+    def _chunk_locality(self, slot: int, st: dict) -> Optional[int]:
+        return st.get("ploc")
+
+    # -- the prefill->decode handoff ----------------------------------
+    def _finish_prefill(self, slot: int, st: dict, logits) -> None:
+        """Final chunk landed at the prefill worker: sample the first
+        token THERE (the logits die with the chunk), then stage the
+        KV handoff to the decode role instead of flipping the phase in
+        place."""
+        now = time.perf_counter()
+        st["t0"] = now
+        first = self._sample(logits[0], st["req"], st["n_gen0"])
+        st["tokens"].append(int(first))
+        self._first_token(st, now)
+        if self._stopped(st["req"], st["tokens"]):
+            self._finish(self.active.pop(slot))
+            self.kvc.release(slot)
+            self.free_slots.append(slot)
+            return
+        self._stage_handoff(slot, st, next_phase="decode")
+
+    def _stage_handoff(self, slot: int, st: dict,
+                       next_phase: str) -> None:
+        """Detach the slot's KV into a snapshot and stage its copy
+        parcel.  The pages keep this slot's refcounts (they can never
+        be evicted while staged), so the commit's restore is
+        guaranteed to find them device-resident — the copy itself
+        runs under whatever decode batch this step schedules."""
+        pool = self.kvc.pool
+        rid = st["req"].rid
+        with self.trace.span("percolation", "handoff_stage",
+                             kind="copy", rid=rid, slot=slot):
+            snap = self.kvc.detach_slot(slot)
+            if snap is None:                  # empty slot: nothing to move
+                st["phase"] = next_phase
+                return
+            st["snap"] = snap
+            st["next_phase"] = next_phase
+            st["phase"] = "handoff"
+            st["handoff_step"] = len(self.counters)
+            nbytes = len(snap.addrs) * pool.page_bytes() \
+                + pool.hidden_nbytes(snap.addrs)
+            self.handoff_queue.push(CopyParcel(
+                ("handoff", rid), tuple(a.gid for a in snap.addrs),
+                "handoff", nbytes))
+
+    def _commit_handoff(self, slot: int) -> None:
+        """Land a staged handoff: restore the snapshot into the slot
+        (on one locality, a table rebuild — the pages never moved; a
+        multi-host port would commit its staged copy here) and hand
+        the slot to its next phase."""
+        st = self.active[slot]
+        snap = st.pop("snap")
+        parcel = self.handoff_queue.pop(("handoff", st["req"].rid))
+        staged = st.pop("handoff_step", len(self.counters))
+        # overlapped iff the staging step ran a decode batch under the
+        # staged copy before this commit (the §4d double buffer)
+        overlapped = len(self.counters) > staged \
+            and self.counters[staged].get("decode_tokens", 0) > 0
+        with self.trace.span("percolation", "handoff_commit",
+                             kind="copy", rid=st["req"].rid, slot=slot,
+                             gids=[a.gid for a in snap.addrs]):
+            self.kvc.restore_slot(slot, snap)
+        st["phase"] = st.pop("next_phase")
+        self.handoffs += 1
+        if parcel is not None:
+            self.handoff_bytes += parcel.nbytes
+        self.handoff_overlapped += int(overlapped)
+
+    def force_handoff(self) -> int:
+        """Drill: stage a MID-PREFILL handoff for every prefilling
+        slot with resident pages (next phase: resume chunking where it
+        left off).  Chunk boundaries are page-aligned, so the restored
+        chain/position always satisfy `begin_chunk`'s resume contract.
+        Returns the number of handoffs staged."""
+        n = 0
+        for slot, st in list(self.active.items()):
+            if st.get("phase") == "prefill" \
+                    and self.kvc._state[slot].addrs:
+                self._stage_handoff(slot, st, next_phase="prefill")
+                n += st.get("phase") == "handoff"
+        return n
+
+    # -- lifecycle seams the handoff phase must survive ---------------
+    def _step(self) -> int:
+        # commit staged handoffs FIRST: a prefill that finished in
+        # step N decodes in step N+1, the same cadence the single-
+        # locality engine has — with the copy already run under step
+        # N's decode batch
+        self._decode_role.commit_handoffs(self)
+        return super()._step()
+
+    def _preempt(self, slot: int) -> None:
+        st = self.active.get(slot)
+        if st is not None and st.get("phase") == "handoff":
+            # land the handoff before evicting: the snapshot holds
+            # page refcounts the offload/release path must see on the
+            # slot, not dangling from the queue
+            self._commit_handoff(slot)
+        super()._preempt(slot)
+
+    def _fail_pending(self, err: Exception) -> None:
+        for slot, st in list(self.active.items()):
+            if st.get("phase") == "handoff":
+                snap = st.pop("snap", None)
+                if snap is not None:
+                    self.kvc.drop_snapshot(snap)
+                self.handoff_queue.pop(("handoff", st["req"].rid))
+                st["phase"] = st.pop("next_phase", "decode")
+        super()._fail_pending(err)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        role = self._prefill_role
+        total = role.parcels
+        out.update({
+            "disagg": True,
+            "prefill_workers": self.prefill_workers,
+            "decode_workers": self.decode_workers,
+            # dispatch affinity: fraction of prefill parcels that ran
+            # at the locality owning their prompt's prefix pages
+            "prefill_parcels": total,
+            "prefill_parcels_owner": role.owner_parcels,
+            "prefill_parcels_cold": role.cold_parcels,
+            "prefill_parcel_affinity":
+                role.owner_parcels / total if total else 0.0,
+            "prefill_parcels_inter_locality": role.inter_locality,
+            "parcels_sent": self._port.sent,
+            "parcels_local": self._port.local_applied,
+            "dispatch_sizes": sorted(role.dispatch_sizes),
+            # prefill->decode KV handoffs and their §4d overlap
+            "handoffs": self.handoffs,
+            "handoff_bytes": self.handoff_bytes,
+            "handoff_overlap":
+                self.handoff_overlapped / self.handoffs
+                if self.handoffs else 0.0,
+        })
+        m = self.metrics
+        m.counter("engine.prefill_parcels").value = total
+        m.counter("engine.handoffs").value = self.handoffs
+        m.counter("engine.handoff_bytes").value = self.handoff_bytes
+        return out
+
+
 #: The serving engine: chunked prefill over AGAS pages.
 ServingEngine = ChunkedPagedServingEngine
 
 
 def make_engine(params: Any, cfg: ArchConfig, *,
-                engine: str = "chunked", **kwargs) -> _EngineBase:
+                engine: str = "chunked", disagg: bool = False,
+                **kwargs) -> _EngineBase:
     """Engine factory.  `engine` selects the scheduler for
     attention-cache families: "chunked" (default — chunked prefill
     under a token budget), "paged" (whole-prompt prefill over AGAS
-    pages), or "dense" (static slot-pool baseline).  Families whose
-    recurrent state has no paged layout (ssm/hybrid/vlm) always fall
-    back to the dense engine."""
+    pages), or "dense" (static slot-pool baseline).  ``disagg=True``
+    upgrades the chunked engine to the disaggregated prefill/decode
+    composition (DESIGN.md §4f; `prefill_workers`/`decode_workers`
+    kwargs pick the role counts).  Families whose recurrent state has
+    no paged layout (ssm/hybrid/vlm) always fall back to the dense
+    engine."""
     if engine not in ("chunked", "paged", "dense"):
         raise ValueError(f"unknown engine {engine!r}")
+    if disagg and engine != "chunked":
+        raise ValueError(
+            "disaggregated prefill/decode requires the chunked engine")
     if cfg.family in PAGED_FAMILIES and engine != "dense":
         if engine == "chunked":
+            if disagg:
+                return DisaggChunkedServingEngine(params, cfg, **kwargs)
+            kwargs.pop("prefill_workers", None)
+            kwargs.pop("decode_workers", None)
             return ChunkedPagedServingEngine(params, cfg, **kwargs)
         kwargs.pop("chunk_size", None)
         kwargs.pop("step_tokens", None)
         return PagedServingEngine(params, cfg, **kwargs)
     for k in ("page_size", "n_pages", "chunk_size", "step_tokens",
               "kv_shards", "mesh", "rebalance_tolerance", "tiering",
-              "host_pages", "prefix_cache_compute", "pin_threshold"):
+              "host_pages", "prefix_cache_compute", "pin_threshold",
+              "prefill_workers", "decode_workers"):
         kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

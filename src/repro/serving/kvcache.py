@@ -369,6 +369,14 @@ class PagePool:
         loc, slot = self.agas.lookup(addr)
         return loc * self.rows_per_shard + slot
 
+    def page_bytes(self) -> int:
+        """Bytes one page occupies (k + v, all layers) — the payload
+        unit of percolation copy parcels and §4f handoffs."""
+        k = self.pages["k"]
+        per_row = int(np.prod(k.shape[-3:])) * k.shape[0] \
+            * k.dtype.itemsize
+        return 2 * per_row
+
     def _split_rows(self, rows) -> Tuple[np.ndarray, np.ndarray]:
         r = np.asarray(rows, np.int32)
         return r // self.rows_per_shard, r % self.rows_per_shard
@@ -896,14 +904,17 @@ class PagedKVCache:
 
     # -- chunked prefill (DESIGN.md §4b) ------------------------------
     def begin_chunk(self, slot: int, tokens: np.ndarray,
-                    start: int, end: int, pad: int = 0
+                    start: int, end: int, pad: int = 0,
+                    locality: Optional[int] = None
                     ) -> Tuple[List[int], int]:
         if not self.trace.enabled:
-            return self._begin_chunk(slot, tokens, start, end, pad)
+            return self._begin_chunk(slot, tokens, start, end, pad,
+                                     locality)
         with self.trace.span("kvcache", "chunk_attach", kind="pages",
                              slot=slot, start=start, end=end) as sp:
             rows, covered = self._begin_chunk(slot, tokens,
-                                              start, end, pad)
+                                              start, end, pad,
+                                              locality)
             ps = self.pool.page_size
             base = start // ps
             sp.args["gids"] = [a.gid for a in
@@ -911,7 +922,8 @@ class PagedKVCache:
             return rows, covered
 
     def _begin_chunk(self, slot: int, tokens: np.ndarray,
-                     start: int, end: int, pad: int = 0
+                     start: int, end: int, pad: int = 0,
+                     locality: Optional[int] = None
                      ) -> Tuple[List[int], int]:
         """Acquire the pages covering chunk [start, end) of a chunked
         prefill and install them in `slot`'s block table.
@@ -971,7 +983,18 @@ class PagedKVCache:
                         covered += key[1]
                 else:
                     leading = False
-                    addr = self.pool.alloc()
+                    # placement preference (§4f): a dispatched chunk
+                    # allocates at its prefill worker's locality, so
+                    # the prefix pages it registers make that worker
+                    # the owner the NEXT matching prompt dispatches
+                    # to.  Soft: an exhausted preferred shard falls
+                    # back to the default least-loaded policy rather
+                    # than preempting while other shards have room.
+                    loc = locality
+                    if loc is not None and \
+                            self.pool.agas.free_count(loc) == 0:
+                        loc = None
+                    addr = self.pool.alloc(loc)
                     self.pool.register_prefix(key, addr, parent=prev)
                     acquired.append(addr)
                     fresh_gids.add(addr.gid)
@@ -1059,6 +1082,40 @@ class PagedKVCache:
         self.write_rows[slot] = null
         self.write_offs[slot] = 0
 
+    # -- prefill->decode handoff (DESIGN.md §4f) ----------------------
+    def detach_slot(self, slot: int) -> Optional[KVSnapshot]:
+        """Detach a slot's KV into a snapshot WITHOUT moving a page —
+        the §4f handoff unit between a prefill worker and a decode
+        worker.
+
+        The snapshot keeps the slot's refcount on every page: the
+        pages' global names are the handoff currency, and because
+        both roles address the same AGAS directory no byte needs to
+        move when the pages are already device-resident (a multi-host
+        transport would stage the copy here; the tiered restore path
+        commits it).  `restore_slot` rebuilds the receiving slot —
+        block table, position clock, chunked-prefill hash chain —
+        exactly as detach left it, mid-prefill chunk boundaries
+        included.  Returns None for an empty slot."""
+        st = self._state[slot]
+        if not st.addrs:
+            return None
+        if self.trace.enabled:
+            self.trace.instant("kvcache", "detach", slot=slot,
+                               gids=[a.gid for a in st.addrs])
+        snap = KVSnapshot(list(st.addrs), st.length,
+                          st.chain.copy() if st.chain is not None
+                          else None)
+        st.addrs = []
+        st.length = 0
+        st.chain = None
+        null = self.pool.null_row
+        self.tables[slot, :] = null
+        self.lengths[slot] = 0
+        self.write_rows[slot] = null
+        self.write_offs[slot] = 0
+        return snap
+
     # -- percolation: offload / restore (DESIGN.md §4d) ---------------
     def offload_slot(self, slot: int) -> Optional[KVSnapshot]:
         st = self._state[slot]
@@ -1132,7 +1189,10 @@ class PagedKVCache:
         valid, retry later) when the device tier cannot hold it."""
         st = self._state[slot]
         assert not st.addrs, f"slot {slot} already attached"
-        self.pool.promote_pages(snap.addrs, staged_key=staged_key)
+        # untiered pools never have an off-device page (handoff
+        # snapshots restore through this path too, DESIGN.md §4f)
+        if getattr(self.pool, "tiered", False):
+            self.pool.promote_pages(snap.addrs, staged_key=staged_key)
         st.addrs = list(snap.addrs)
         st.length = snap.length
         st.chain = snap.chain.copy() if snap.chain is not None else None

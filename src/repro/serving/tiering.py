@@ -181,11 +181,7 @@ class TieredPagePool(PagePool):
         # target (plan_rebalance/plan_rotation iterate this)
         return [int(n) for n in self.agas.load()[:self.n_shards]]
 
-    def page_bytes(self) -> int:
-        """Bytes one page occupies (k + v, all layers)."""
-        k = self.pages["k"]
-        per_row = int(np.prod(k.shape[-3:])) * k.shape[0] * k.dtype.itemsize
-        return 2 * per_row
+    # page_bytes comes from PagePool (handoffs need it untiered too)
 
     # -- refcount lifecycle: retention + revival ----------------------
     def refcount(self, addr: GlobalAddress) -> int:

@@ -3,11 +3,11 @@
 A trace machine drives random request traces — mixed prompt lengths
 sharing real-token heads (the mixed-length prefix sharing the radix
 index exists for), staggered arrivals, forced preemptions /
-migrations / demotions — through the chunked engine under a randomly
-chosen
-``(kv_shards, tiering, prefix_cache_compute)`` configuration, and
-asserts greedy token-identity against an ample-pool single-locality
-reference after EVERY completion.  Hand-written parity tests cover
+migrations / demotions / mid-prefill KV handoffs — through the
+chunked engine under a randomly chosen
+``(kv_shards, tiering, prefix_cache_compute, disagg)`` configuration,
+and asserts greedy token-identity against an ample-pool
+single-locality reference after EVERY completion.  Hand-written parity tests cover
 each mechanism alone; with four engines x sharding x tiering x
 compute skip interacting, only model-based traces cover the product
 of their state spaces.
@@ -60,8 +60,10 @@ PREFIX_LENS = (0, 16, 24, 32)
 N_VARIANTS = 3
 
 CONFIGS = [
-    {"kv_shards": s, "tiering": t, "prefix_cache_compute": p}
+    {"kv_shards": s, "tiering": t, "prefix_cache_compute": p,
+     "disagg": d}
     for s in (1, 2) for t in (False, True) for p in (False, True)
+    for d in (False, True)
 ]
 
 _rids = itertools.count(1000)
@@ -170,6 +172,13 @@ class EngineTrace:
         if getattr(self.eng.kvc.pool, "tiered", False):
             self.eng.force_demote()
 
+    def handoff(self):
+        """Force mid-prefill KV handoffs (disagg engines only): every
+        prefilling slot detaches into a snapshot and resumes chunking
+        after the commit at the next step's top."""
+        if hasattr(self.eng, "force_handoff"):
+            self.eng.force_handoff()
+
     def _check(self):
         for c in self.eng.completions[self.checked:]:
             if c.rid not in self.expected:
@@ -200,7 +209,8 @@ def test_trace_machine_deterministic(config_idx):
     t = EngineTrace(config_idx)
     for _ in range(14):
         op = rng.choice(["submit", "submit", "submit", "step",
-                         "step", "preempt", "migrate", "demote"])
+                         "step", "preempt", "migrate", "demote",
+                         "handoff"])
         if op == "submit":
             t.submit(int(rng.integers(len(PREFIX_LENS))),
                      int(rng.choice(TAIL_LENS)),
@@ -212,6 +222,8 @@ def test_trace_machine_deterministic(config_idx):
             t.preempt()
         elif op == "migrate":
             t.migrate()
+        elif op == "handoff":
+            t.handoff()
         else:
             t.demote()
     t.drain()
@@ -267,6 +279,11 @@ if HAVE_HYPOTHESIS:
         @rule()
         def force_demote(self):
             self.t.demote()
+
+        @precondition(lambda self: self.t is not None)
+        @rule()
+        def force_handoff(self):
+            self.t.handoff()
 
         def teardown(self):
             if self.t is not None:

@@ -84,6 +84,93 @@ def test_offload_restore_roundtrip_bytes_and_state():
     kvc.release(0)
 
 
+def test_handoff_detach_restore_cross_slot_bytes_and_state():
+    """The §4f prefill->decode handoff unit: detach a finished slot's
+    KV into a snapshot and restore it into a DIFFERENT slot (the
+    decode worker's), asserting no page moves, no refcount changes,
+    and byte-identity across the worker roles.  Works untiered —
+    unlike offload, a handoff never crosses tiers."""
+    cfg = _cfg()
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=6,
+                       page_size=16)
+    padded = RNG.integers(0, 100, size=40).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    k = jnp.asarray(RNG.normal(size=(L, 40, kvh, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(L, 40, kvh, hd)), jnp.float32)
+    kvc.attach(0, padded, k, v)
+    rows_before = [kvc.pool.row(a) for a in kvc._state[0].addrs]
+    content = np.asarray(kvc.pool.pages["k"])[:, rows_before].copy()
+    used_before = kvc.pool.used_pages
+
+    snap = kvc.detach_slot(0)
+    assert snap is not None and len(snap.addrs) == 3
+    assert snap.length == 40
+    # the prefill slot is empty and reusable; the pages NEVER moved —
+    # the snapshot holds their refcounts, so nothing could evict them
+    assert kvc.lengths[0] == 0
+    assert kvc.pool.used_pages == used_before
+    assert all(kvc.pool.refcount(a) == 1 for a in snap.addrs)
+
+    kvc.restore_slot(1, snap)            # the decode worker's slot
+    assert kvc.lengths[1] == 40
+    rows_after = [kvc.pool.row(a) for a in kvc._state[1].addrs]
+    got = np.asarray(kvc.pool.pages["k"])[:, rows_after]
+    np.testing.assert_array_equal(got, content)   # byte-identical
+    # global names survived the handoff; the receiving slot's block
+    # table re-resolves them to the same physical rows
+    assert [a.gid for a in snap.addrs] == \
+        [a.gid for a in kvc._state[1].addrs]
+    assert rows_after == rows_before
+    np.testing.assert_array_equal(
+        kvc.tables[1][:3], [kvc.pool.row(a) for a in snap.addrs])
+    kvc.release(1)
+    assert kvc.pool.used_pages == 0
+
+
+def test_handoff_mid_prefill_chunk_boundary_roundtrip():
+    """A handoff staged at a chunk boundary mid-prefill: detach after
+    two chunks, restore into another slot, and RESUME chunking there —
+    the snapshot's hash chain and position clock must satisfy
+    `begin_chunk`'s resume contract exactly, and the pre-handoff pages
+    must stay byte-identical under the new slot."""
+    cfg = _cfg()
+    ps = 16
+    kvc = PagedKVCache(cfg, slots=2, max_len=64, n_pages=8,
+                       page_size=ps)
+    layout = RNG.integers(0, cfg.vocab_size, size=48).astype(np.int32)
+    L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+
+    def spans(n_rows, seed):
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.normal(size=(L, n_rows, ps, kvh, hd)),
+                            jnp.float32),
+                jnp.asarray(r.normal(size=(L, n_rows, ps, kvh, hd)),
+                            jnp.float32))
+
+    rows1, _ = kvc.begin_chunk(0, layout, 0, 32)     # chunks 1+2
+    assert len(rows1) == 2
+    kvc.pool.write_pages(rows1, *spans(2, 7))
+    content = np.asarray(kvc.pool.pages["k"])[:, rows1].copy()
+    gids = [a.gid for a in kvc._state[0].addrs]
+
+    snap = kvc.detach_slot(0)                        # chunk boundary
+    assert snap.length == 32 and snap.chain is not None
+    kvc.restore_slot(1, snap)
+    # resume the remaining chunk IN THE RECEIVING SLOT: begin_chunk
+    # validates start == resident length and extends the restored
+    # chain (a wrong round-trip raises or breaks prefix keys)
+    rows2, _ = kvc.begin_chunk(1, layout, 32, 48)
+    assert len(rows2) == 1
+    kvc.pool.write_pages(rows2, *spans(1, 11))
+    assert kvc.lengths[1] == 48
+    assert [a.gid for a in kvc._state[1].addrs[:2]] == gids
+    got = np.asarray(kvc.pool.pages["k"])[
+        :, [kvc.pool.row(a) for a in kvc._state[1].addrs[:2]]]
+    np.testing.assert_array_equal(got, content)
+    kvc.release(1)
+    assert kvc.pool.used_pages == 0
+
+
 def test_offload_keeps_shared_pages_on_device():
     """A preempted request's prefix-shared pages stay put (pinned by
     the other holder); only exclusive pages are written back."""
