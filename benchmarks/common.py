@@ -2,10 +2,16 @@
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, List, Tuple
 
 import numpy as np
+
+#: Schema id stamped into every machine-readable bench trajectory
+#: file (BENCH_<n>.json) so tools/bench_compare.py can refuse files
+#: it does not understand instead of mis-diffing them.
+BENCH_SCHEMA = "repro.serve_bench.v1"
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
@@ -30,3 +36,35 @@ def emit_registry(registry, derived: str = "registry") -> None:
     as hand-picked numbers (DESIGN.md §10)."""
     for name, value in sorted(registry.snapshot().items()):
         emit(name, float(value), derived)
+
+
+def write_bench(path: str, bench_id: int, scenarios: dict,
+                floors: dict | None = None,
+                meta: dict | None = None) -> dict:
+    """Write one machine-readable bench trajectory (BENCH_<n>.json):
+    a schema'd, diffable snapshot of per-scenario bench metrics.
+    ``floors`` maps dotted ``scenario.metric`` keys to minimum
+    acceptable values; tools/bench_compare.py checks them and diffs
+    the scenario map against the previous BENCH_*.json."""
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "bench_id": int(bench_id),
+        "scenarios": scenarios,
+        "floors": dict(floors or {}),
+        "meta": dict(meta or {}),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def read_bench(path: str) -> dict:
+    """Load + schema-check one BENCH_<n>.json trajectory."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(
+            f"{path}: schema {doc.get('schema')!r} is not "
+            f"{BENCH_SCHEMA!r}")
+    return doc

@@ -20,9 +20,20 @@ Usage:
                              # activation checkpoints
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
       --tiering --trace /tmp/serve.trace.json \
-      --metrics-interval 8   # causal trace (perfetto-viewable) +
-                             # periodic metrics-registry snapshots
-                             # (DESIGN.md §10)
+      --metrics-interval 8 --metrics-out /tmp/serve.metrics.jsonl
+                             # causal trace (perfetto-viewable) +
+                             # exporter-backed metrics snapshots:
+                             # one {t, step, metrics, delta} JSON
+                             # line per interval (DESIGN.md §10)
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --ttft-slo-ms 200 --itl-slo-ms 50 \
+      --slo-report /tmp/serve.slo.json \
+      --metrics-prom /tmp/serve.prom
+                             # SLO/goodput tracking (DESIGN.md §10):
+                             # deadline-tracked requests, per-request
+                             # lifecycle flight recorder, end-of-run
+                             # goodput report with per-phase blame,
+                             # Prometheus text exposition
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
       --kv-shards 2 --disagg --prefill-workers 2 --decode-workers 1
                              # disaggregated prefill/decode
@@ -102,8 +113,36 @@ def main():
                          "overhead attribution line")
     ap.add_argument("--metrics-interval", type=int, default=0,
                     metavar="N",
-                    help="print the unified metrics-registry snapshot "
-                         "every N engine steps (0 = off)")
+                    help="metrics-registry snapshot every N engine "
+                         "steps: a one-line console summary, plus a "
+                         "JSONL record when --metrics-out is set "
+                         "(0 = off; --metrics-out implies 8)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write interval snapshots of the unified "
+                         "metrics registry as JSON lines — one "
+                         "{t, step, metrics, delta} object per "
+                         "interval, deltas against the previous "
+                         "snapshot (obs/export.py)")
+    ap.add_argument("--metrics-prom", default=None, metavar="PATH",
+                    help="write the final metrics registry as "
+                         "Prometheus text exposition (counters as "
+                         "_total, histograms as summaries)")
+    ap.add_argument("--slo-report", default=None, metavar="PATH",
+                    help="end-of-run SLO/goodput report JSON: "
+                         "met/missed per deadline-tracked request, "
+                         "per-phase blame, lifecycle phase totals "
+                         "(enables the flight recorder)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=0.0,
+                    help="TTFT deadline attached to every request "
+                         "(ms; 0 = untracked)")
+    ap.add_argument("--itl-slo-ms", type=float, default=0.0,
+                    help="inter-token p95 deadline attached to every "
+                         "request (ms; 0 = untracked)")
+    ap.add_argument("--flight-recorder", action="store_true",
+                    help="record per-request lifecycle timelines "
+                         "(submit/bind/chunks/handoff/first-token/"
+                         "preempt/finish) queryable via "
+                         "engine.recorder (implied by --slo-report)")
     args = ap.parse_args()
 
     import repro.configs as configs
@@ -129,6 +168,8 @@ def main():
                       disagg=args.disagg,
                       prefill_workers=args.prefill_workers or None,
                       decode_workers=args.decode_workers,
+                      flight_recorder=(args.flight_recorder
+                                       or bool(args.slo_report)),
                       **kw)
     if args.disagg and hasattr(eng, "prefill_workers"):
         print(f"[serve] disaggregated roles: {eng.prefill_workers} "
@@ -151,21 +192,35 @@ def main():
         eng.set_tracer(tracer)
         set_global(tracer)
 
+    # interval snapshots go through the exporter (obs/export.py) —
+    # the full registry lands in the JSONL file; the console keeps a
+    # one-line summary instead of the old hardcoded key list
+    interval = args.metrics_interval
+    if args.metrics_out and interval <= 0:
+        interval = 8
+    exporter = None
+    if args.metrics_out:
+        from repro.obs.export import JsonlExporter
+        exporter = JsonlExporter(eng.metrics, args.metrics_out)
     on_step = None
-    if args.metrics_interval > 0:
-        def on_step(e, _every=args.metrics_interval):
+    if interval > 0:
+        def on_step(e, _every=interval):
             steps = e.metrics.counter("engine.steps").value
             if steps % _every:
                 return
-            snap = e.metrics.snapshot()
-            keys = ("engine.peak_active", "engine.peak_resident",
-                    "engine.decode_ms.count", "engine.ttft_ms.count",
-                    "pool.page_allocs", "pool.page_shares",
-                    "percolation.demote_bytes",
-                    "percolation.promote_bytes")
-            shown = " ".join(f"{k}={snap[k]:g}" for k in keys
-                             if k in snap)
-            print(f"[metrics] step={steps} {shown}")
+            if exporter is not None:
+                rec = exporter.snap(step=steps)
+                snap, delta = rec["metrics"], rec["delta"]
+                sink = f" -> {args.metrics_out} " \
+                       f"({len(snap)} series, {len(delta)} changed)"
+            else:
+                snap = e.metrics.snapshot()
+                sink = ""
+            print(f"[metrics] step={steps} "
+                  f"resident={snap.get('engine.peak_resident', 0):g} "
+                  f"decoded={snap.get('engine.decode_ms.count', 0):g} "
+                  f"ttft_n={snap.get('engine.ttft_ms.count', 0):g}"
+                  f"{sink}")
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -175,7 +230,9 @@ def main():
             n = int(rng.integers(8, 48))
             futs.append(eng.submit(Request(rid, rng.integers(
                 0, cfg.vocab_size, size=n).astype(np.int32),
-                max_new_tokens=args.max_new)))
+                max_new_tokens=args.max_new,
+                ttft_deadline_ms=args.ttft_slo_ms or None,
+                itl_deadline_ms=args.itl_slo_ms or None)))
         eng.run_to_completion(on_step=on_step)
     finally:
         if tracer is not None:
@@ -239,6 +296,33 @@ def main():
               f"ttft_p95={s['ttft_p95_ms']:.0f}ms "
               f"itl_p50={s['itl_p50_ms']:.1f}ms "
               f"itl_p95={s['itl_p95_ms']:.1f}ms")
+        if s.get("slo"):
+            slo = s["slo"]
+            blame = " ".join(f"{k}={v}" for k, v in
+                             slo["blame"].items() if v)
+            print(f"[serve] slo: goodput={slo['goodput']:.0%} "
+                  f"({slo['met']}/{slo['requests']} met, "
+                  f"ttft_misses={slo['ttft_misses']} "
+                  f"itl_misses={slo['itl_misses']})"
+                  + (f" blame: {blame}" if blame else ""))
+    if exporter is not None:
+        exporter.snap(step=None)          # final state closes the file
+        exporter.close()
+        print(f"[metrics] {exporter.records} snapshots "
+              f"-> {args.metrics_out}")
+    if args.metrics_prom:
+        from repro.obs.export import to_prometheus
+        with open(args.metrics_prom, "w") as f:
+            f.write(to_prometheus(eng.metrics))
+        print(f"[metrics] Prometheus exposition -> {args.metrics_prom}")
+    if args.slo_report:
+        import json
+        from repro.obs.slo import build_report
+        rep = build_report(eng)
+        with open(args.slo_report, "w") as f:
+            json.dump(rep, f, indent=2)
+        print(f"[slo] report ({rep['requests']} tracked, "
+              f"goodput={rep['goodput']:.0%}) -> {args.slo_report}")
     if tracer is not None:
         from repro.obs.attribution import attribute, subsystems
         tracer.export_chrome(args.trace)

@@ -1,6 +1,6 @@
 """Runtime observability: causal tracing, metrics, overhead attribution.
 
-Three layers (ISSUE 6):
+Five layers (ISSUE 6 + ISSUE 9):
 
 - ``trace``       ring-buffer tracer emitting typed spans/instants with
                   monotonic timestamps and causal ids (request -> slot ->
@@ -9,7 +9,12 @@ Three layers (ISSUE 6):
                   histograms under a ``subsystem.metric`` namespace.
 - ``attribution`` per-step wall-clock decomposition into kernel compute
                   vs runtime overhead (the paper's Fig. 9 analysis applied
-                  online to serving).
+                  online to serving), plus the per-role / per-locality
+                  split for disaggregated serving.
+- ``slo``         request-level lifecycle flight recorder and TTFT/ITL
+                  deadline classification with per-phase blame.
+- ``export``      Prometheus text exposition and JSONL interval
+                  snapshots over the metrics registry.
 """
 
 from repro.obs.trace import (  # noqa: F401
@@ -23,4 +28,19 @@ from repro.obs.metrics import (  # noqa: F401
     Gauge,
     MetricsRegistry,
     StreamingHistogram,
+)
+from repro.obs.slo import (  # noqa: F401
+    NULL_RECORDER,
+    FlightRecorder,
+    build_report,
+    classify,
+    derive_phases,
+    record_verdict,
+)
+from repro.obs.export import (  # noqa: F401
+    JsonlExporter,
+    parse_prometheus,
+    read_jsonl,
+    to_prometheus,
+    verify_roundtrip,
 )

@@ -27,10 +27,11 @@ complete trace: check ``tracer.dropped == 0`` before trusting it.
 """
 
 CATEGORIES = ("compute", "sched", "pages", "parcel", "copy", "other")
+ROLES = ("prefill", "decode", "handoff", "other")
 _EPS = 1e-9
 
-__all__ = ["CATEGORIES", "attribute", "check_nesting", "check_causal",
-           "subsystems"]
+__all__ = ["CATEGORIES", "ROLES", "attribute", "attribute_roles",
+           "check_nesting", "check_causal", "subsystems"]
 
 
 def subsystems(records):
@@ -71,6 +72,81 @@ def attribute(records, root_subsystem="engine", root_name="step"):
         "compute_fraction": compute / wall if wall else 0.0,
         "overhead_fraction": overhead / wall if wall else 0.0,
         "categories_ms": {c: v * 1e3 for c, v in cat.items()},
+        "sum_residual": abs(total - wall) / wall if wall else 0.0,
+    }
+
+
+_ROLE_BY_NAME = {
+    "prefill": "prefill",
+    "prefill_chunk": "prefill",
+    "resume": "prefill",
+    "decode_batch": "decode",
+    "handoff_stage": "handoff",
+    "handoff_commit": "handoff",
+}
+
+
+def span_role(span):
+    """Disagg role a span's self time belongs to.
+
+    Prefill execution (whole-prompt, chunked, compute-skip resume)
+    is prefill-worker work; the decode batch is decode-worker work;
+    percolation handoff stage/commit is the copy seam between them.
+    Everything else (admit bookkeeping, page accounting, tier
+    traffic, step glue) is role-neutral runtime -> ``other``.
+    """
+    return _ROLE_BY_NAME.get(span.name, "other")
+
+
+def span_locality(span):
+    """AGAS locality a span executed against, or None."""
+    loc = span.args.get("loc")
+    return loc
+
+
+def attribute_roles(records, root_subsystem="engine", root_name="step"):
+    """Fig. 9 buckets split by disagg role and AGAS locality.
+
+    Same self-time tree walk as ``attribute`` — self times sum to
+    step wall by construction — but each span's self time lands in
+    (a) the role bucket named by the span (prefill worker vs decode
+    worker vs handoff copy vs role-neutral runtime) and (b) the
+    locality bucket from the span's ``loc`` arg (spans without one
+    aggregate under ``"engine"``).  Under ``--disagg --kv-shards N``
+    this proves *where* overhead lives: which role pays it, and on
+    which locality's pool it runs.
+    """
+    spans = [r for r in records if r.dur is not None]
+    children = {}
+    for s in spans:
+        if s.parent is not None:
+            children.setdefault(s.parent, []).append(s)
+    steps = [s for s in spans
+             if s.subsystem == root_subsystem and s.name == root_name]
+    roles = {r: 0.0 for r in ROLES}
+    locs = {}
+    wall = 0.0
+    for step in steps:
+        wall += step.dur
+        stack = [step]
+        while stack:
+            s = stack.pop()
+            kids = children.get(s.sid, ())
+            self_t = s.dur - sum(k.dur for k in kids)
+            if self_t < 0.0:
+                self_t = 0.0
+            roles[span_role(s)] += self_t
+            lkey = span_locality(s)
+            lkey = "engine" if lkey is None else f"loc{lkey}"
+            locs[lkey] = locs.get(lkey, 0.0) + self_t
+            stack.extend(kids)
+    total = sum(roles.values())
+    return {
+        "steps": len(steps),
+        "wall_ms": wall * 1e3,
+        "roles_ms": {r: v * 1e3 for r, v in roles.items()},
+        "localities_ms": {k: v * 1e3
+                          for k, v in sorted(locs.items())},
         "sum_residual": abs(total - wall) / wall if wall else 0.0,
     }
 

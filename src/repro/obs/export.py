@@ -1,0 +1,193 @@
+"""Metrics exporters: Prometheus text exposition + JSONL snapshots.
+
+Two consumers of one ``MetricsRegistry``:
+
+- ``to_prometheus`` renders the registry in the Prometheus text
+  exposition format (version 0.0.4): counters as ``<name>_total``,
+  gauges as-is, histograms as summaries (quantile-labelled samples
+  plus ``_sum``/``_count``).  Dotted registry names are sanitized to
+  the metric-name charset (dots → underscores) and prefixed, e.g.
+  ``engine.ttft_ms`` → ``repro_engine_ttft_ms``.  ``parse_prometheus``
+  inverts the rendering into a flat sample dict so tests (and the
+  serve_bench round-trip assert) can verify the exposition against
+  ``MetricsRegistry.snapshot()`` without a scrape stack;
+  ``verify_roundtrip`` packages that comparison.
+
+- ``JsonlExporter`` appends one JSON object per interval with the full
+  ``snapshot()`` plus a ``delta`` against the previous interval, so a
+  consumer can tail rates without keeping state.  The first record's
+  delta is the full snapshot (everything is new); summing deltas over
+  a file reconstructs the final snapshot exactly — the invariant
+  ``read_jsonl`` consumers and tests lean on.
+
+Both exporters are pull-style over ``snapshot()``: zero cost on the
+serving hot path, wholly decoupled from how metrics are recorded.
+"""
+
+import json
+import re
+import time
+
+from .metrics import Counter, Gauge, StreamingHistogram
+
+__all__ = ["to_prometheus", "parse_prometheus", "verify_roundtrip",
+           "prom_name", "JsonlExporter", "read_jsonl"]
+
+_PROM_QUANTILES = ((50.0, "0.5"), (95.0, "0.95"), (99.0, "0.99"))
+_BAD_CHARS = re.compile(r"[^a-zA-Z0-9_:]")
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{([^}]*)\})?\s+(\S+)$")
+
+
+def prom_name(name, prefix="repro_"):
+    """Registry name -> Prometheus metric name."""
+    return prefix + _BAD_CHARS.sub("_", name)
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return repr(v)
+    return str(v)
+
+
+def to_prometheus(registry, prefix="repro_"):
+    """Render the registry as Prometheus text exposition format."""
+    lines = []
+    for name in registry.names():
+        m = registry.get(name)
+        pname = prom_name(name, prefix)
+        if isinstance(m, Counter):
+            lines.append(f"# HELP {pname}_total {name}")
+            lines.append(f"# TYPE {pname}_total counter")
+            lines.append(f"{pname}_total {_fmt(m.value)}")
+        elif isinstance(m, Gauge):
+            lines.append(f"# HELP {pname} {name}")
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {_fmt(m.value)}")
+        elif isinstance(m, StreamingHistogram):
+            snap = m.snapshot()
+            lines.append(f"# HELP {pname} {name}")
+            lines.append(f"# TYPE {pname} summary")
+            for q, label in _PROM_QUANTILES:
+                key = f"p{int(q)}"
+                lines.append(
+                    f'{pname}{{quantile="{label}"}} '
+                    f"{_fmt(snap[key])}")
+            lines.append(f"{pname}_sum {_fmt(m.sum)}")
+            lines.append(f"{pname}_count {_fmt(m.count)}")
+            lines.append(f"{pname}_min {_fmt(snap['min'])}")
+            lines.append(f"{pname}_max {_fmt(snap['max'])}")
+    return "\n".join(lines) + "\n"
+
+
+def parse_prometheus(text):
+    """Exposition text -> {sample key: float}.
+
+    Sample keys are the literal sample names, with the label set kept
+    verbatim when present: ``repro_engine_ttft_ms{quantile="0.5"}``.
+    """
+    out = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"unparseable sample line: {line!r}")
+        name, labels, value = m.groups()
+        key = f"{name}{{{labels}}}" if labels else name
+        out[key] = float(value)
+    return out
+
+
+def verify_roundtrip(registry, text=None, prefix="repro_"):
+    """Check the exposition against ``registry.snapshot()``.
+
+    Returns a list of problem strings (empty = faithful export).
+    """
+    if text is None:
+        text = to_prometheus(registry, prefix)
+    parsed = parse_prometheus(text)
+    problems = []
+
+    def expect(key, want):
+        got = parsed.get(key)
+        if got is None:
+            problems.append(f"missing sample {key!r}")
+        elif abs(got - float(want)) > 1e-9 * max(1.0, abs(want)):
+            problems.append(f"{key}: exported {got!r} != {want!r}")
+
+    snap = registry.snapshot()
+    for name in registry.names():
+        m = registry.get(name)
+        pname = prom_name(name, prefix)
+        if isinstance(m, Counter):
+            expect(f"{pname}_total", snap[name])
+        elif isinstance(m, Gauge):
+            expect(pname, snap[name])
+        elif isinstance(m, StreamingHistogram):
+            for q, label in _PROM_QUANTILES:
+                expect(f'{pname}{{quantile="{label}"}}',
+                       snap[f"{name}.p{int(q)}"])
+            expect(f"{pname}_count", snap[f"{name}.count"])
+            expect(f"{pname}_min", snap[f"{name}.min"])
+            expect(f"{pname}_max", snap[f"{name}.max"])
+            expect(f"{pname}_sum", m.sum)
+    return problems
+
+
+class JsonlExporter:
+    """Interval snapshots of a registry as JSON lines with deltas.
+
+    Each ``snap()`` appends ``{"t", "step", "metrics", "delta"}``:
+    ``metrics`` is the full ``registry.snapshot()``; ``delta`` holds
+    every key whose value changed since the previous snap (first snap:
+    everything).  Keys that disappear (registry reset between runs
+    never removes names, so only via a fresh registry) are not
+    tracked — the snapshot itself is always authoritative.
+    """
+
+    def __init__(self, registry, path, clock=None):
+        self.registry = registry
+        self.path = path
+        self.clock = clock if clock is not None else time.time
+        self._f = open(path, "w")
+        self._prev = {}
+        self.records = 0
+
+    def snap(self, step=None):
+        """Write one interval record; returns it as a dict."""
+        metrics = self.registry.snapshot()
+        delta = {k: v - self._prev[k] if k in self._prev else v
+                 for k, v in metrics.items()
+                 if k not in self._prev or v != self._prev[k]}
+        rec = {"t": self.clock(), "step": step,
+               "metrics": metrics, "delta": delta}
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+        self._prev = metrics
+        self.records += 1
+        return rec
+
+    def close(self):
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def read_jsonl(path):
+    """Read back a JSONL snapshot file as a list of records."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -64,6 +64,8 @@ from repro.core.percolation import CopyParcel, PercolationQueue
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import FlightRecorder, NULL_RECORDER, classify, \
+    record_verdict
 from repro.obs.trace import NULL_TRACER
 from repro.serving.kvcache import (PagedKVCache, PageExhausted,
                                    PAGED_FAMILIES, page_keys)
@@ -80,7 +82,7 @@ class _EngineBase:
 
     def __init__(self, params: Any, cfg: ArchConfig, *, slots: int,
                  max_len: int, prefill_buckets=(64, 128, 256),
-                 tracer=None):
+                 tracer=None, flight_recorder=False):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -88,6 +90,11 @@ class _EngineBase:
         self.buckets = tuple(sorted(prefill_buckets))
         self.trace = tracer if tracer is not None else NULL_TRACER
         self.metrics = MetricsRegistry()
+        # per-request lifecycle timelines (obs/slo.py); disabled is a
+        # constant-time no-op singleton, mirroring NULL_TRACER
+        self.recorder = FlightRecorder() if flight_recorder \
+            else NULL_RECORDER
+        self.slo_verdicts: Dict[int, dict] = {}   # rid -> classify()
         # queue items: {"req", "gen" (tokens carried over a
         # preemption), "preempts"}
         self.queue: List[dict] = []
@@ -116,8 +123,18 @@ class _EngineBase:
     def reset_metrics(self) -> None:
         """Zero the metrics registry (a serve_bench warmup boundary:
         callers that clear `completions`/`counters` clear this too so
-        `stats()` stays consistent with the per-step telemetry)."""
+        `stats()` stays consistent with the per-step telemetry).  The
+        flight recorder and SLO verdicts reset with it — they are the
+        same telemetry epoch."""
         self.metrics.reset()
+        self.recorder.clear()
+        self.slo_verdicts.clear()
+
+    def set_recorder(self, recorder) -> None:
+        """Swap the flight recorder on a warmed engine (serve_bench's
+        recorder-cost A/B: same engine, recorder on vs off)."""
+        self.recorder = recorder if recorder is not None \
+            else NULL_RECORDER
 
     def _record_step_metrics(self, c: dict) -> None:
         """Fold one per-step counter dict into the registry."""
@@ -137,12 +154,23 @@ class _EngineBase:
         """Enqueue; returns the completion LCO (set exactly once)."""
         fut = Future()
         self._futures[req.rid] = fut
+        t_submit = time.perf_counter()
         self.queue.append({"req": req, "gen": [], "preempts": 0,
-                           "t_submit": time.perf_counter(),
+                           "t_submit": t_submit,
                            "ttft_s": None, "tok_t": []})
         self.trace.instant("engine", "submit", rid=req.rid,
                            prompt_len=len(req.prompt))
+        if self.recorder.enabled:
+            self.recorder.event(req.rid, "submit", t=t_submit,
+                                prompt_len=len(req.prompt))
         return fut
+
+    def _slot_bind(self, rid: int, slot: int) -> None:
+        """Admission boundary: trace instant + flight-recorder bind
+        event, one helper so every admit path records both."""
+        self.trace.instant("engine", "slot_bind", rid=rid, slot=slot)
+        if self.recorder.enabled:
+            self.recorder.event(rid, "bind", slot=slot)
 
     @staticmethod
     def _queue_prompt(item: dict) -> np.ndarray:
@@ -245,8 +273,9 @@ class _EngineBase:
 
     def _finish(self, st: dict) -> None:
         tok_t = st.get("tok_t", [])
+        now = time.perf_counter()
         comp = Completion(st["req"].rid, st["tokens"], st["prefill_s"],
-                          time.perf_counter() - st["t0"],
+                          now - st["t0"],
                           st.get("preempts", 0),
                           ttft_s=st.get("ttft_s") or 0.0,
                           itl_s=[b - a for a, b in zip(tok_t, tok_t[1:])])
@@ -262,6 +291,16 @@ class _EngineBase:
             itl_hist.record(d * 1e3)
         self.trace.instant("engine", "finish", rid=comp.rid,
                            n_tokens=len(comp.tokens))
+        if self.recorder.enabled:
+            self.recorder.event(comp.rid, "finish", t=now,
+                                n_tokens=len(comp.tokens))
+        req = st["req"]
+        if req.ttft_deadline_ms is not None or \
+                req.itl_deadline_ms is not None:
+            v = classify(req, comp,
+                         timeline=self.recorder.timeline(comp.rid))
+            record_verdict(m, v)
+            self.slo_verdicts[comp.rid] = v
         fut = self._futures.pop(comp.rid, None)
         if fut is not None:
             fut.set(comp)
@@ -274,10 +313,12 @@ class _EngineBase:
                 "ttft_s": item.get("ttft_s"),
                 "tok_t": list(item.get("tok_t", []))}
 
-    @staticmethod
-    def _first_token(st: dict, now: float) -> None:
+    def _first_token(self, st: dict, now: float) -> None:
         if st["ttft_s"] is None:
             st["ttft_s"] = now - st["t_submit"]
+            if self.recorder.enabled:
+                self.recorder.event(st["req"].rid, "first_token",
+                                    t=now)
         st["tok_t"].append(now)
 
     @staticmethod
@@ -352,9 +393,10 @@ class DenseServingEngine(_EngineBase):
 
     def __init__(self, params: Any, cfg: ArchConfig, *, slots: int = 4,
                  max_len: int = 512, prefill_buckets=(64, 128, 256),
-                 tracer=None):
+                 tracer=None, flight_recorder=False):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
-                         prefill_buckets=prefill_buckets, tracer=tracer)
+                         prefill_buckets=prefill_buckets, tracer=tracer,
+                         flight_recorder=flight_recorder)
         # one shared batched cache across slots
         self.cache = T.init_cache(cfg, slots, max_len)
         self._decode = jax.jit(
@@ -372,14 +414,16 @@ class DenseServingEngine(_EngineBase):
                     f"exceeds max_len {self.max_len}"))
                 continue
             slot = self.free_slots.pop(0)
-            self.trace.instant("engine", "slot_bind", rid=req.rid,
-                               slot=slot)
+            self._slot_bind(req.rid, slot)
             t0 = time.perf_counter()
             with self.trace.span("engine", "prefill", kind="compute",
                                  rid=req.rid, bucket=bucket):
                 logits, pcache = self._prefill_fn(bucket)(
                     self.params, jnp.asarray(toks[None]),
                     jnp.int32(bucket - 1))
+            if self.recorder.enabled:
+                self.recorder.event(req.rid, "prefill", bucket=bucket,
+                                    dur=time.perf_counter() - t0)
             # splice this request's prefill cache into the slot pool
             self._splice_cache(slot, pcache, bucket)
             first = self._sample(logits[0], req, len(item["gen"]))
@@ -508,9 +552,11 @@ class PagedServingEngine(_EngineBase):
                  rebalance_tolerance: Optional[int] = None,
                  tiering: bool = False, host_pages: int = 0,
                  prefix_cache_compute: bool = False,
-                 pin_threshold: int = 4, tracer=None):
+                 pin_threshold: int = 4, tracer=None,
+                 flight_recorder=False):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
-                         prefill_buckets=prefill_buckets, tracer=tracer)
+                         prefill_buckets=prefill_buckets, tracer=tracer,
+                         flight_recorder=flight_recorder)
         if n_pages is None:
             # default: the dense engine's worst-case footprint — callers
             # shrink it to oversubscribe (kvcache preempts under
@@ -587,8 +633,7 @@ class PagedServingEngine(_EngineBase):
             return False
         self.queue.pop(0)
         slot = self.free_slots.pop(0)
-        self.trace.instant("engine", "slot_bind", rid=item["req"].rid,
-                           slot=slot)
+        self._slot_bind(item["req"].rid, slot)
         t0 = time.perf_counter()
         try:
             kvc.attach_covered(slot, layout, cov.keys)
@@ -599,10 +644,14 @@ class PagedServingEngine(_EngineBase):
             self.queue.insert(0, item)
             return False
         req = item["req"]
+        tr = time.perf_counter() if self.recorder.enabled else 0.0
         with self.trace.span("engine", "resume", kind="compute",
                              rid=req.rid, slot=slot):
             logits = self._resume_logits(self.params,
                                          jnp.asarray(cov.hidden)[None])
+        if self.recorder.enabled:
+            self.recorder.event(req.rid, "resume",
+                                dur=time.perf_counter() - tr)
         first = self._sample(logits[0], req, len(item["gen"]))
         now = time.perf_counter()
         self.prefix_skips += 1
@@ -704,8 +753,7 @@ class PagedServingEngine(_EngineBase):
                 break                          # head-of-line blocking
             self.queue.pop(0)
             slot = self.free_slots.pop(0)
-            self.trace.instant("engine", "slot_bind", rid=req.rid,
-                               slot=slot)
+            self._slot_bind(req.rid, slot)
             t0 = time.perf_counter()
             # all prefills run at the bucket ladder: pad RIGHT (junk
             # tokens after the real end never enter the cache and,
@@ -715,11 +763,15 @@ class PagedServingEngine(_EngineBase):
             bucket = self._bucket(real)
             toks = np.zeros(bucket, np.int32)
             toks[:real] = layout
+            tr = time.perf_counter() if self.recorder.enabled else 0.0
             with self.trace.span("engine", "prefill", kind="compute",
                                  rid=req.rid, bucket=bucket):
                 logits, pcache, bh, hlast = self._prefill_fn(bucket)(
                     self.params, jnp.asarray(toks[None]),
                     jnp.int32(real - 1))
+            if self.recorder.enabled:
+                self.recorder.event(req.rid, "prefill", bucket=bucket,
+                                    dur=time.perf_counter() - tr)
             self.kvc.attach(slot, layout,
                             pcache["k"][:, 0, :real],
                             pcache["v"][:, 0, :real])
@@ -775,8 +827,8 @@ class PagedServingEngine(_EngineBase):
             return False
         self.queue.pop(0)
         slot = self.free_slots.pop(0)
-        self.trace.instant("engine", "slot_bind", rid=req.rid,
-                           slot=slot)
+        self._slot_bind(req.rid, slot)
+        tr = time.perf_counter() if self.recorder.enabled else 0.0
         try:
             with self.trace.span("engine", "restore", kind="sched",
                                  rid=req.rid, slot=slot):
@@ -784,12 +836,20 @@ class PagedServingEngine(_EngineBase):
                                       staged_key=("restore", req.rid))
         except PageExhausted:
             # the free-page estimate raced a pinned page; the snapshot
-            # is still consistent — put everything back and wait
+            # is still consistent — put everything back and wait.  The
+            # failed attempt still burned TTFT-window time (and left a
+            # restore span), so the flight timeline keeps it too
+            if self.recorder.enabled:
+                self.recorder.event(req.rid, "restore", ran=False,
+                                    dur=time.perf_counter() - tr)
             self.free_slots.append(slot)
             self.queue.insert(0, item)
             return False
         self.restores += 1
         now = time.perf_counter()
+        if self.recorder.enabled:
+            self.recorder.event(req.rid, "restore", t=now,
+                                dur=now - tr)
         st = {
             "req": req, "tokens": list(item["gen"]),
             "phase": "decode",      # overridden for mid-prefill below
@@ -860,6 +920,9 @@ class PagedServingEngine(_EngineBase):
         self.preemptions += 1
         self.trace.instant("engine", "preempt", rid=st["req"].rid,
                            slot=slot, offloaded=snap is not None)
+        if self.recorder.enabled:
+            self.recorder.event(st["req"].rid, "preempt", slot=slot,
+                                offloaded=snap is not None)
         item = {"req": st["req"], "gen": st["tokens"],
                 "preempts": st["preempts"] + 1,
                 "snap": snap,
@@ -1057,9 +1120,11 @@ class PagedServingEngine(_EngineBase):
             "mean_ttft_ms": ttft.mean,
             "ttft_p50_ms": ttft.quantile(50.0),
             "ttft_p95_ms": ttft.quantile(95.0),
+            "ttft_p99_ms": ttft.quantile(99.0),
             "mean_itl_ms": itl.mean,
             "itl_p50_ms": itl.quantile(50.0),
             "itl_p95_ms": itl.quantile(95.0),
+            "itl_p99_ms": itl.quantile(99.0),
             # prefix-cache compute skip (DESIGN.md §4e): covered
             # admissions (full skips vs partial radix hits) and the
             # prompt tokens never recomputed
@@ -1075,6 +1140,21 @@ class PagedServingEngine(_EngineBase):
             out["offloads"] = self.offloads
             out["restores"] = self.restores
             out.update(pool.tier_stats())
+        # SLO/goodput (obs/slo.py): only when any request carried a
+        # deadline — the registry counters exist iff classify() ran
+        tracked = m.get("slo.requests")
+        if tracked is not None and tracked.value:
+            from repro.obs.slo import BLAME_PHASES
+            snap = m.snapshot()
+            out["slo"] = {
+                "requests": int(tracked.value),
+                "met": int(snap.get("slo.met", 0)),
+                "goodput": float(snap.get("slo.goodput", 0.0)),
+                "ttft_misses": int(snap.get("slo.ttft_misses", 0)),
+                "itl_misses": int(snap.get("slo.itl_misses", 0)),
+                "blame": {p: int(snap.get(f"slo.blame.{p}", 0))
+                          for p in BLAME_PHASES + ("unattributed",)},
+            }
         return out
 
 
@@ -1113,7 +1193,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  rebalance_tolerance: Optional[int] = None,
                  tiering: bool = False, host_pages: int = 0,
                  prefix_cache_compute: bool = False,
-                 pin_threshold: int = 4, tracer=None):
+                 pin_threshold: int = 4, tracer=None,
+                 flight_recorder=False):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
                          page_size=page_size, n_pages=n_pages,
@@ -1122,7 +1203,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                          tiering=tiering, host_pages=host_pages,
                          prefix_cache_compute=prefix_cache_compute,
                          pin_threshold=pin_threshold,
-                         tracer=tracer)
+                         tracer=tracer,
+                         flight_recorder=flight_recorder)
         if chunk_size is None:
             chunk_size = 2 * page_size
         if chunk_size <= 0 or chunk_size % page_size:
@@ -1220,8 +1302,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                 break                          # head-of-line blocking
             self.queue.pop(0)
             slot = self.free_slots.pop(0)
-            self.trace.instant("engine", "slot_bind", rid=req.rid,
-                               slot=slot)
+            self._slot_bind(req.rid, slot)
             if start:
                 try:
                     self.kvc.attach_covered(slot, layout, cov.keys)
@@ -1275,14 +1356,27 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         """Acquire pages for and run one chunk of `slot`'s prompt.
         Returns False if the slot was preempted (or rejected) by page
         exhaustion instead of advanced."""
-        if not self.trace.enabled:
+        rec = self.recorder.enabled
+        if not self.trace.enabled and not rec:
             return self._run_chunk_impl(slot, take)
         st = self.active[slot]
-        with self.trace.span("engine", "prefill_chunk", kind="compute",
-                             rid=st["req"].rid, slot=slot,
-                             start=st["pos"], take=take) as sp:
+        rid = st["req"].rid
+        start = st["pos"]
+        tr = time.perf_counter() if rec else 0.0
+        if not self.trace.enabled:
             ok = self._run_chunk_impl(slot, take)
-            sp.args["ran"] = ok
+        else:
+            with self.trace.span("engine", "prefill_chunk",
+                                 kind="compute", rid=rid, slot=slot,
+                                 start=start, take=take,
+                                 loc=self._chunk_locality(slot, st)) \
+                    as sp:
+                ok = self._run_chunk_impl(slot, take)
+                sp.args["ran"] = ok
+        if rec:
+            self.recorder.event(rid, "prefill_chunk", start=start,
+                                take=take, ran=ok,
+                                dur=time.perf_counter() - tr)
         return ok
 
     def _run_chunk_impl(self, slot: int, take: int) -> bool:
@@ -1528,8 +1622,10 @@ class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
         runs under whatever decode batch this step schedules."""
         pool = self.kvc.pool
         rid = st["req"].rid
+        tr = time.perf_counter() if self.recorder.enabled else 0.0
         with self.trace.span("percolation", "handoff_stage",
-                             kind="copy", rid=rid, slot=slot):
+                             kind="copy", rid=rid, slot=slot,
+                             loc=self._home_locality(slot)):
             snap = self.kvc.detach_slot(slot)
             if snap is None:                  # empty slot: nothing to move
                 st["phase"] = next_phase
@@ -1543,6 +1639,10 @@ class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
             self.handoff_queue.push(CopyParcel(
                 ("handoff", rid), tuple(a.gid for a in snap.addrs),
                 "handoff", nbytes))
+        if self.recorder.enabled:
+            self.recorder.event(rid, "handoff_stage", slot=slot,
+                                nbytes=nbytes,
+                                dur=time.perf_counter() - tr)
 
     def _commit_handoff(self, slot: int) -> None:
         """Land a staged handoff: restore the snapshot into the slot
@@ -1557,10 +1657,16 @@ class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
         # staged copy before this commit (the §4d double buffer)
         overlapped = len(self.counters) > staged \
             and self.counters[staged].get("decode_tokens", 0) > 0
+        tr = time.perf_counter() if self.recorder.enabled else 0.0
         with self.trace.span("percolation", "handoff_commit",
                              kind="copy", rid=st["req"].rid, slot=slot,
-                             gids=[a.gid for a in snap.addrs]):
+                             gids=[a.gid for a in snap.addrs],
+                             loc=self._home_locality(slot)):
             self.kvc.restore_slot(slot, snap)
+        if self.recorder.enabled:
+            self.recorder.event(st["req"].rid, "handoff_commit",
+                                slot=slot, overlapped=overlapped,
+                                dur=time.perf_counter() - tr)
         st["phase"] = st.pop("next_phase")
         self.handoffs += 1
         if parcel is not None:

@@ -21,6 +21,11 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     eos_id: Optional[int] = None
+    # optional SLO deadlines (obs/slo.py): a request carrying either
+    # is goodput-tracked; TTFT is checked against ttft_s, ITL against
+    # the p95 of itl_s.  None = untracked.
+    ttft_deadline_ms: Optional[float] = None
+    itl_deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass

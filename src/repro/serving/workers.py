@@ -102,6 +102,11 @@ class ParcelPrefillWorker(PrefillWorker):
         self._step_parcels.append(PrefillParcel(
             rid=st["req"].rid, slot=slot, start=st["pos"], take=take,
             anchor=anchor, locality=dst))
+        if eng.recorder.enabled:
+            # the flight timeline keeps the dispatch decision next to
+            # the chunk it placed: which locality, owner-affine or not
+            eng.recorder.event(st["req"].rid, "dispatch", slot=slot,
+                               loc=dst, warm=warm)
         self.parcels += 1
         if warm:
             self.owner_parcels += 1

@@ -1,0 +1,151 @@
+"""Diff a bench trajectory (BENCH_<n>.json) against the previous one.
+
+serve_bench ``--bench-out`` writes a schema'd snapshot of
+per-scenario bench metrics (latency percentiles, throughput, goodput,
+skip/handoff rates) plus the floors the committed numbers were
+calibrated against.  This tool:
+
+* finds the previous trajectory — the highest ``BENCH_<m>.json`` with
+  ``m`` below the current file's bench id, searched next to the
+  current file (override with ``--dir``) — and prints a per-metric
+  diff over the scenario intersection;
+* checks the CURRENT file's values against its own embedded floors
+  (dotted ``scenario.metric`` keys).
+
+Exit status: 1 if any floor is violated, 0 otherwise.
+``--report-only`` always exits 0 (CI smoke runs produce smaller
+numbers than the committed full-run floors by construction — the
+diff is the signal there, not the gate).
+
+Usage::
+
+    python tools/bench_compare.py BENCH_9.json
+    python tools/bench_compare.py BENCH_9.json --report-only
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from benchmarks.common import read_bench  # noqa: E402
+
+_BENCH_RE = re.compile(r"BENCH_(\d+)\.json$")
+
+
+def find_previous(current_path: str, current_id: int,
+                  search_dir: str | None = None) -> str | None:
+    """Highest-id BENCH_<m>.json with m < current_id, or None."""
+    d = search_dir or os.path.dirname(os.path.abspath(current_path))
+    best_id, best = -1, None
+    for p in glob.glob(os.path.join(d, "BENCH_*.json")):
+        m = _BENCH_RE.search(os.path.basename(p))
+        if not m:
+            continue
+        bid = int(m.group(1))
+        if best_id < bid < current_id:
+            best_id, best = bid, p
+    return best
+
+
+def _flat(scenarios: dict) -> dict:
+    """scenario.metric -> value, numeric leaves only."""
+    out = {}
+    for sc, metrics in scenarios.items():
+        for k, v in metrics.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f"{sc}.{k}"] = float(v)
+    return out
+
+
+def diff(prev: dict, cur: dict) -> list[str]:
+    """Human-readable per-metric delta lines over the intersection."""
+    pf, cf = _flat(prev["scenarios"]), _flat(cur["scenarios"])
+    lines = []
+    for key in sorted(set(pf) & set(cf)):
+        a, b = pf[key], cf[key]
+        if a == b:
+            lines.append(f"  {key:44s} {b:12.4g}  (unchanged)")
+        else:
+            rel = (b - a) / abs(a) * 100 if a else float("inf")
+            lines.append(f"  {key:44s} {a:12.4g} -> {b:12.4g}"
+                         f"  ({rel:+.1f}%)")
+    only_prev = sorted(set(pf) - set(cf))
+    only_cur = sorted(set(cf) - set(pf))
+    for key in only_prev:
+        lines.append(f"  {key:44s} {pf[key]:12.4g} -> (gone)")
+    for key in only_cur:
+        lines.append(f"  {key:44s} (new) {cf[key]:12.4g}")
+    return lines
+
+
+def check_floors(doc: dict) -> list[str]:
+    """Violation messages for the doc's own embedded floors."""
+    flat = _flat(doc["scenarios"])
+    bad = []
+    for key, floor in sorted(doc.get("floors", {}).items()):
+        got = flat.get(key)
+        if got is None:
+            # the scenario was not exercised this run (flag subset):
+            # absence is not a regression
+            continue
+        if got < float(floor):
+            bad.append(f"{key} = {got:.4g} is below its floor "
+                       f"{float(floor):.4g}")
+    return bad
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff a BENCH_<n>.json bench trajectory against "
+                    "the previous one and check its embedded floors")
+    ap.add_argument("current", help="current BENCH_<n>.json")
+    ap.add_argument("--dir", default=None,
+                    help="directory to search for previous "
+                         "BENCH_*.json (default: next to CURRENT)")
+    ap.add_argument("--against", default=None, metavar="PATH",
+                    help="diff against this trajectory instead of "
+                         "auto-discovering the previous bench id "
+                         "(CI: smoke run vs the committed "
+                         "trajectory)")
+    ap.add_argument("--report-only", action="store_true",
+                    help="report floors/diff but always exit 0 "
+                         "(CI smoke runs)")
+    args = ap.parse_args(argv)
+
+    cur = read_bench(args.current)
+    prev_path = args.against or find_previous(
+        args.current, cur["bench_id"], args.dir)
+    if prev_path is None:
+        print(f"bench_compare: no BENCH_*.json before id "
+              f"{cur['bench_id']} — nothing to diff")
+    else:
+        prev = read_bench(prev_path)
+        print(f"bench_compare: {os.path.basename(prev_path)} "
+              f"(id {prev['bench_id']}) -> "
+              f"{os.path.basename(args.current)} "
+              f"(id {cur['bench_id']})")
+        for line in diff(prev, cur):
+            print(line)
+
+    bad = check_floors(cur)
+    for msg in bad:
+        print(f"bench_compare: FLOOR VIOLATION: {msg}")
+    if bad and not args.report_only:
+        return 1
+    if bad:
+        print("bench_compare: --report-only: violations reported, "
+              "not enforced")
+    else:
+        print(f"bench_compare: {len(cur.get('floors', {}))} floors "
+              "ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
