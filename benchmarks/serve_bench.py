@@ -73,6 +73,15 @@ host load can hit either side) — the floor sits ~25% under the WORST
 observed sample, per the PR 7 lesson that floors set near the quiet
 median trip on scheduler noise and guard nothing.
 
+``--chaos`` runs the locality-loss drill (DESIGN.md §4g): the
+pressure trace on the disagg 2-shard tiered stack, once failure-free
+and once with KV shard 1 killed mid-wave by a ``FailurePlan``.  Every
+in-flight future must resolve with tokens identical to the
+failure-free run — per rid over the whole wave, not sampled — via
+host-tier page rebuild where a percolation copy exists and
+drain + re-prefill where it does not; the dead shard then re-joins
+and a second wave must be identical on the healed pool.
+
 ``--seed`` reseeds every trace generator, so mixed-trace runs are
 reproducible (and comparable) across machines.
 
@@ -838,6 +847,108 @@ def _slo_run(params, cfg, smoke, seed, verbose, report_path=None):
     return report
 
 
+def _chaos_run(params, cfg, smoke, seed, verbose):
+    """Chaos drill (DESIGN.md §4g): serve the pressure trace on the
+    full stack — disaggregated prefill/decode over a 2-shard tiered
+    pool — twice from identically warmed engines: once failure-free
+    (the token ground truth), and once with a failure plan that kills
+    KV shard 1 mid-wave.  EVERY future must resolve, and every
+    request's greedy tokens must be identical to the failure-free run
+    — asserted per rid over the full wave, not sampled.  Pages with a
+    host-tier percolation copy rebuild on the survivor; the rest
+    drain their slots and re-prefill from the retained prompt +
+    position clock.  The dead shard then re-joins elastically and a
+    second wave must come back token-identical on the healed pool."""
+    import dataclasses
+
+    from repro.ft.failures import FailurePlan
+    from repro.serving.engine import make_engine
+
+    kw = dict(slots=SLOTS_PAGED, max_len=MIXED_MAX_LEN,
+              prefill_buckets=(32,), page_size=PAGE_SIZE,
+              n_pages=TIER_DEVICE_PAGES, chunk_size=CHUNK,
+              step_tokens=STEP_TOKENS, kv_shards=2, tiering=True,
+              host_pages=48, disagg=True)
+    reqs = _pressure_requests(cfg, n=6, max_new=8 if smoke else 24,
+                              seed=seed)
+    warm = (97, 90, 33, 12)
+
+    ref_eng = make_engine(params, cfg, engine="chunked", **kw)
+    _warmup(ref_eng, cfg, warm)
+    ref_futs = [ref_eng.submit(r) for r in reqs]
+    ref_eng.run_to_completion()
+    truth = {f.get().rid: f.get().tokens for f in ref_futs}
+
+    eng = make_engine(params, cfg, engine="chunked", **kw)
+    _warmup(eng, cfg, warm)
+    # armed AFTER warmup: the plan counts engine steps, and warmup
+    # wipes the counters it counts against
+    eng.failure_plan = FailurePlan.kill_locality(1, at_step=CHAOS_AT)
+    futs = [eng.submit(dataclasses.replace(r)) for r in reqs]
+    t0 = time.perf_counter()
+    eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    tok = sum(len(c.tokens) for c in eng.completions)
+
+    unresolved = [f for f in futs if not f.done()]
+    assert not unresolved, (
+        f"{len(unresolved)} futures never resolved after the kill — "
+        "recovery must re-admit, not error")
+    got = {f.get().rid: f.get().tokens for f in futs}
+    assert got == truth, (
+        "chaos outputs diverge from the failure-free run — rebuild "
+        "and re-prefill must not change a token")
+    st = eng.stats()
+    rec = st["recovery"]
+    assert rec["localities_killed"] == 1, "the failure plan never fired"
+    assert rec["drained_slots"] + rec["pages_rebuilt"] > 0, (
+        "the kill landed on an idle pool — the drill proves nothing")
+    assert eng.kvc.pool.used_pages == 0
+
+    # elastic re-join, then a second wave on the healed 2-shard pool
+    moved = eng.join_locality(1)
+    assert eng.kvc.pool.agas.is_active(1)
+    futs2 = [eng.submit(dataclasses.replace(r, rid=r.rid + 100))
+             for r in reqs]
+    eng.run_to_completion()
+    got2 = {f.get().rid - 100: f.get().tokens for f in futs2}
+    assert got2 == truth, (
+        "post-rejoin outputs diverge — the healed pool must serve "
+        "identically")
+    assert eng.kvc.pool.used_pages == 0
+
+    out = dict(_eng_stats(st, eng.slots, tok, dt),
+               kill_shard=1, kill_step=CHAOS_AT,
+               n_requests=len(reqs),
+               localities_killed=rec["localities_killed"],
+               pages_rebuilt=rec["pages_rebuilt"],
+               pages_lost=rec["pages_lost"],
+               drained_slots=rec["drained_slots"],
+               re_prefills=rec["re_prefills"],
+               recovery_restarts=rec["recovery_restarts"],
+               rejoin_moves=moved)
+    if verbose:
+        print(f"# serve_bench chaos   {tok / dt:8.1f} tok/s "
+              f"(pressure, shard 1 killed at step {CHAOS_AT}) "
+              f"rebuilt={rec['pages_rebuilt']} "
+              f"lost={rec['pages_lost']} "
+              f"drained={rec['drained_slots']} "
+              f"re_prefills={rec['re_prefills']} "
+              "token-identical to failure-free run "
+              "(and again after re-join)")
+    emit("serve_chaos_tok_s", tok / dt, "tok_per_s")
+    emit("serve_chaos_pages_rebuilt", rec["pages_rebuilt"], "pages")
+    emit("serve_chaos_pages_lost", rec["pages_lost"], "pages")
+    emit("serve_chaos_drained_slots", rec["drained_slots"], "slots")
+    emit("serve_chaos_re_prefills", rec["re_prefills"], "requests")
+    return out
+
+
+#: Step the --chaos failure plan fires at: far enough in that the
+#: wave is mid-flight (slots bound, handoffs staged), early enough
+#: that nothing has finished.
+CHAOS_AT = 4
+
 #: Bench-trajectory identity: BENCH_<n>.json files carry this id so
 #: tools/bench_compare.py can order them and diff against the
 #: previous one.
@@ -904,6 +1015,13 @@ def _bench_scenarios(result):
                     lat(w["skip_on"]),
                     skip_fraction=w["skip_on"]["skip_fraction"],
                     ttft_p50_reduction_x=w["ttft_p50_reduction_x"])
+    ch = result.get("chaos_trace")
+    if ch:
+        sc["chaos_pressure"] = dict(
+            lat(ch), pages_rebuilt=ch["pages_rebuilt"],
+            pages_lost=ch["pages_lost"],
+            drained_slots=ch["drained_slots"],
+            re_prefills=ch["re_prefills"])
     sl = result.get("slo")
     if sl:
         sc["slo"] = {
@@ -924,7 +1042,7 @@ def _bench_scenarios(result):
 def run(verbose=True, out_path=None, smoke=False, kv_shards=0,
         tiering=False, host_pages=0, prefix_heavy=False, seed=0,
         trace_path=None, disagg=False, slo=False, slo_report=None,
-        bench_out=None):
+        chaos=False, bench_out=None):
     import jax
 
     import repro.configs as configs
@@ -1262,6 +1380,11 @@ def run(verbose=True, out_path=None, smoke=False, kv_shards=0,
     if slo or slo_report:
         result["slo"] = _slo_run(params, cfg, smoke, seed, verbose,
                                  report_path=slo_report)
+
+    # -- locality-loss chaos drill (DESIGN.md §4g) --------------------
+    if chaos:
+        result["chaos_trace"] = _chaos_run(params, cfg, smoke, seed,
+                                           verbose)
     if verbose:
         print(f"# serve_bench dense   {dense_tok / dense_s:8.1f} tok/s "
               f"(short trace, peak_active={SLOTS_DENSE})")
@@ -1365,6 +1488,17 @@ if __name__ == "__main__":
                          "aggregates, per-request verdicts + phase "
                          "decompositions, recorder overhead) to PATH "
                          "as JSON; implies --slo")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the locality-loss chaos drill "
+                         "(DESIGN.md §4g): the pressure trace on the "
+                         "disagg 2-shard tiered stack with KV shard 1 "
+                         f"killed at step {CHAOS_AT}; asserts every "
+                         "future resolves token-identically to the "
+                         "failure-free run (per rid, not sampled), "
+                         "reports pages rebuilt from the host tier vs "
+                         "lost, slots drained, and re-prefills, then "
+                         "re-joins the shard and asserts a second "
+                         "wave is identical too")
     ap.add_argument("--bench-out", default=None, metavar="PATH",
                     help=f"write the schema'd bench trajectory "
                          f"(BENCH_{BENCH_ID}.json: per-scenario "
@@ -1382,4 +1516,5 @@ if __name__ == "__main__":
         tiering=args.tiering, host_pages=args.host_pages,
         prefix_heavy=args.prefix_heavy, seed=args.seed,
         trace_path=args.trace, disagg=args.disagg, slo=args.slo,
-        slo_report=args.slo_report, bench_out=args.bench_out)
+        slo_report=args.slo_report, chaos=args.chaos,
+        bench_out=args.bench_out)

@@ -85,6 +85,7 @@ class AGAS:
             list(range(c)) for c in self.capacities
         ]
         self._residents: List[set] = [set() for _ in range(len(domain))]
+        self._inactive: set = set()
         self.migrations = 0  # counter surfaced as a performance counter
 
     # -- tiers -------------------------------------------------------------
@@ -94,8 +95,30 @@ class AGAS:
     def localities_in_tier(self, tier: int) -> List[int]:
         return [l for l, t in enumerate(self.tiers) if t == tier]
 
+    # -- locality lifecycle ------------------------------------------------
+    def deactivate(self, locality: int) -> None:
+        """Retire a locality from placement (failure or planned drain).
+
+        Allocation, migration targets and `least_loaded` refuse it
+        until `activate`.  Residents are NOT touched — the caller
+        decides their fate (kill sweep, evacuation); `free` keeps
+        working on a retired locality so a sweep can return slots,
+        and a later `activate` finds the free list intact (elastic
+        re-join without rebuilding the directory).
+        """
+        self._inactive.add(int(locality))
+
+    def activate(self, locality: int) -> None:
+        """Re-admit a retired locality to placement (elastic join)."""
+        self._inactive.discard(int(locality))
+
+    def is_active(self, locality: int) -> bool:
+        return locality not in self._inactive
+
     # -- allocation --------------------------------------------------------
     def allocate(self, locality: int) -> GlobalAddress:
+        if locality in self._inactive:
+            raise AGASError(f"locality {locality} is retired")
         if not self._free[locality]:
             raise AGASError(
                 f"locality {locality} pool exhausted "
@@ -136,6 +159,13 @@ class AGAS:
     def residents(self, locality: int) -> set:
         return set(self._residents[locality])
 
+    def resident_on(self, gid: int, locality: int) -> bool:
+        """Is `gid` currently homed on `locality`?  False for freed
+        (dangling) gids — a sweep-safe residency probe: a kill sweep's
+        own evictions may move or drop pages it has not reached yet."""
+        loc_slot = self._where.get(gid)
+        return loc_slot is not None and loc_slot[0] == locality
+
     def free_count(self, locality: int) -> int:
         """Free pool slots on one locality (the allocator's load signal)."""
         return len(self._free[locality])
@@ -152,8 +182,9 @@ class AGAS:
         """
         cands = range(len(self.domain)) if tier is None \
             else self.localities_in_tier(tier)
+        cands = [l for l in cands if l not in self._inactive]
         if not cands:
-            raise AGASError(f"no locality in tier {tier}")
+            raise AGASError(f"no active locality in tier {tier}")
         return max(cands, key=lambda l: (self.free_count(l), -l))
 
     # -- migration -----------------------------------------------------------
@@ -166,6 +197,9 @@ class AGAS:
         old_loc, old_slot = self.lookup(addr)
         if old_loc == new_locality:
             return old_loc, old_slot
+        if new_locality in self._inactive:
+            raise AGASError(
+                f"migration target {new_locality} is retired")
         if not self._free[new_locality]:
             raise AGASError(f"migration target {new_locality} pool full")
         new_slot = self._free[new_locality].pop()

@@ -29,6 +29,25 @@ class SupervisorConfig:
 
 
 @dataclasses.dataclass
+class RecoveryBudget:
+    """The supervisor's restart budget, factored out so the serving
+    engine's locality-loss recovery (DESIGN.md §4g) spends from the
+    same ledger: each recovered failure costs one restart; exceeding
+    the budget re-raises, exactly like `run_supervised` — a fleet that
+    keeps losing localities should crash loudly, not thrash forever."""
+
+    max_restarts: int = SupervisorConfig.max_restarts
+    restarts: int = 0
+
+    def spend(self, what: str = "failure") -> None:
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise InjectedFailure(
+                f"recovery budget exhausted: {self.restarts} restarts "
+                f"(max {self.max_restarts}) after {what}")
+
+
+@dataclasses.dataclass
 class RunTrace:
     losses: List[float]
     restarts: int

@@ -41,6 +41,13 @@ Usage:
                              # parcel-dispatched to prefix-owner
                              # localities, finished KV handed to the
                              # decode role via percolation snapshots
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
+      --kv-shards 2 --tiering --chaos-kill-shard 1 --chaos-at-step 4
+                             # failure injection (DESIGN.md §4g):
+                             # shard 1 dies at step 4; pages with a
+                             # host-tier percolation copy rebuild on
+                             # shard 0, the rest drain and re-prefill
+                             # — every request still completes
 """
 
 from __future__ import annotations
@@ -138,6 +145,17 @@ def main():
     ap.add_argument("--itl-slo-ms", type=float, default=0.0,
                     help="inter-token p95 deadline attached to every "
                          "request (ms; 0 = untracked)")
+    ap.add_argument("--chaos-kill-shard", type=int, default=-1,
+                    metavar="SHARD",
+                    help="failure injection (DESIGN.md §4g): kill KV "
+                         "shard SHARD mid-run — pages with host-tier "
+                         "copies rebuild on survivors, the rest drain "
+                         "and re-prefill; every request still "
+                         "finishes (-1 = off; requires --kv-shards>1)")
+    ap.add_argument("--chaos-at-step", type=int, default=4,
+                    metavar="N",
+                    help="engine step at which --chaos-kill-shard "
+                         "fires")
     ap.add_argument("--flight-recorder", action="store_true",
                     help="record per-request lifecycle timelines "
                          "(submit/bind/chunks/handoff/first-token/"
@@ -152,6 +170,14 @@ def main():
 
     cfg = configs.get_reduced(args.arch)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
+    failure_plan = None
+    if args.chaos_kill_shard >= 0:
+        if args.kv_shards < 2:
+            ap.error("--chaos-kill-shard requires --kv-shards > 1 "
+                     "(a surviving shard must exist)")
+        from repro.ft.failures import FailurePlan
+        failure_plan = FailurePlan.kill_locality(
+            args.chaos_kill_shard, at_step=args.chaos_at_step)
     kw = dict(slots=args.slots, max_len=args.max_len)
     engine = "chunked" if args.engine == "auto" else args.engine
     mesh = kv_pool_mesh(args.kv_shards)
@@ -170,7 +196,11 @@ def main():
                       decode_workers=args.decode_workers,
                       flight_recorder=(args.flight_recorder
                                        or bool(args.slo_report)),
+                      failure_plan=failure_plan,
                       **kw)
+    if failure_plan is not None:
+        print(f"[serve] chaos: shard {args.chaos_kill_shard} dies at "
+              f"step {args.chaos_at_step} (§4g recovery on)")
     if args.disagg and hasattr(eng, "prefill_workers"):
         print(f"[serve] disaggregated roles: {eng.prefill_workers} "
               f"prefill worker(s) / {eng.decode_workers} decode "
@@ -262,6 +292,15 @@ def main():
             print(f"[serve] shards={s['kv_shards']} "
                   f"occupancy=[{occ}] "
                   f"page_migrations={s['page_migrations']}")
+        rec = s.get("recovery")
+        if rec and rec.get("localities_killed"):
+            print(f"[serve] recovery: "
+                  f"killed={rec['localities_killed']} "
+                  f"rebuilt={rec['pages_rebuilt']} "
+                  f"lost={rec['pages_lost']} "
+                  f"drained={rec['drained_slots']} "
+                  f"re_prefills={rec['re_prefills']} "
+                  f"(budget {rec['recovery_restarts']} restart(s))")
         if s.get("tiering"):
             print(f"[serve] tiering: resident={s['peak_resident']} "
                   f"offloads={s['offloads']} restores={s['restores']} "

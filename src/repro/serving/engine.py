@@ -61,6 +61,8 @@ import numpy as np
 from repro.core.lco import Future
 from repro.core.parcels import ParcelPort
 from repro.core.percolation import CopyParcel, PercolationQueue
+from repro.ft.failures import FailurePlan
+from repro.ft.supervisor import RecoveryBudget
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.obs.metrics import MetricsRegistry
@@ -553,7 +555,8 @@ class PagedServingEngine(_EngineBase):
                  tiering: bool = False, host_pages: int = 0,
                  prefix_cache_compute: bool = False,
                  pin_threshold: int = 4, tracer=None,
-                 flight_recorder=False):
+                 flight_recorder=False,
+                 failure_plan: Optional[FailurePlan] = None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets, tracer=tracer,
                          flight_recorder=flight_recorder)
@@ -586,6 +589,13 @@ class PagedServingEngine(_EngineBase):
         self.preemptions = 0
         self.offloads = 0       # preemptions that wrote KV back to host
         self.restores = 0       # re-admissions that skipped prefill
+        # locality-loss recovery (DESIGN.md §4g): the plan fires at the
+        # top of a step; drained requests re-admit with futures pending
+        self.failure_plan = failure_plan
+        self._killed: set = set()     # (step, shard) pairs already fired
+        self.recovery_budget = RecoveryBudget()
+        self.re_prefills = 0     # requests that lost KV and re-prefilled
+        self.drained_slots = 0   # active slots drained by a kill
         self.counters: List[dict] = []         # per-step telemetry
         # prefix-cache compute skip (DESIGN.md §4e)
         self._prefix_skip = bool(prefix_cache_compute)
@@ -814,6 +824,138 @@ class PagedServingEngine(_EngineBase):
         moves = self.kvc.pool.plan_rotation()
         return self.kvc.migrate(moves) if moves else 0
 
+    # -- locality failure and elastic membership (DESIGN.md §4g) ------
+    def _check_failure_plan(self) -> None:
+        """Poll the failure plan at the top of the step: a scheduled
+        locality death fires here, through the same recovery path an
+        operator drill (`kill_locality`) takes.  Idempotent per
+        (step, shard) pair, so an engine that polls twice in one step
+        (the disagg override) fires each kill exactly once."""
+        if self.failure_plan is None:
+            return
+        shard = self.failure_plan.shard_to_kill(len(self.counters),
+                                                self._killed)
+        if shard is not None:
+            self.kill_locality(shard)
+
+    def kill_locality(self, locality: int) -> dict:
+        """Lose one KV shard with requests in flight and keep every
+        one of them alive (DESIGN.md §4g).
+
+        The pool sweep retires the locality, rebuilds every page a
+        host-tier copy covers, and returns the rest as LOST.  The
+        drain pass here then walks every holder of a lost page —
+        active slots, staged handoff snapshots, offloaded queue
+        items — and re-admits the affected requests at the queue
+        FRONT with their generated tokens retained: their completion
+        futures stay pending and resolve with token-identical output
+        after re-prefill (position-normalized layouts make the replay
+        exact).  Spends one restart from the recovery budget — a
+        fleet that keeps losing shards crashes loudly instead of
+        thrashing forever."""
+        self.recovery_budget.spend(f"locality {locality} loss")
+        kvc = self.kvc
+        lost = kvc.pool.kill_locality(locality)
+        handoff_queue = getattr(self, "handoff_queue", None)
+        drained: List[int] = []
+        for slot in sorted(self.active):
+            st = self.active[slot]
+            snap = st.get("snap")
+            if snap is not None:          # staged handoff (§4f)
+                if not any(a.gid in lost for a in snap.addrs):
+                    continue
+                st.pop("snap")
+                st.pop("next_phase", None)
+                st.pop("handoff_step", None)
+                if handoff_queue is not None:
+                    handoff_queue.pop(("handoff", st["req"].rid))
+                kvc.drop_snapshot(snap, lost)
+                # detach already emptied the slot's table; nothing to
+                # drain beyond the snapshot's refcounts
+            else:
+                if not any(a.gid in lost
+                           for a in kvc._state[slot].addrs):
+                    continue
+                kvc.drain_slot(slot, lost)
+            drained.append(slot)
+        items = []
+        for slot in sorted(drained,
+                           key=lambda s: self.active[s]["seq"]):
+            st = self.active.pop(slot)
+            self.free_slots.append(slot)
+            if self.recorder.enabled:
+                self.recorder.event(st["req"].rid, "drain", slot=slot,
+                                    locality=locality)
+            items.append({"req": st["req"], "gen": list(st["tokens"]),
+                          "preempts": st.get("preempts", 0),
+                          "snap": None,
+                          "prefill_s": st.get("prefill_s", 0.0),
+                          "t_submit": st["t_submit"],
+                          "ttft_s": st.get("ttft_s"),
+                          "tok_t": st.get("tok_t", [])})
+        self.queue[:0] = items            # FRONT, admission order kept
+        # offloaded queue items whose snapshot lost a device-resident
+        # shared page: drop the snapshot (and any staged restore) so
+        # re-admission takes the re-prefill path instead of restoring
+        # through a dangling name
+        broken_snaps = 0
+        xfer = getattr(kvc.pool, "xfer", None)
+        for item in self.queue:
+            snap = item.get("snap")
+            if snap is None or \
+                    not any(a.gid in lost for a in snap.addrs):
+                continue
+            if xfer is not None:
+                xfer.drop(("restore", item["req"].rid))
+            kvc.drop_snapshot(snap, lost)
+            item["snap"] = None
+            item.pop("resume", None)
+            broken_snaps += 1
+        # rebuilt pages moved shards: one directory walk re-resolves
+        # every surviving slot's block table
+        kvc.refresh_tables()
+        self.drained_slots += len(items)
+        self.re_prefills += len(items) + broken_snaps
+        self.trace.instant("engine", "kill_locality",
+                           locality=locality, lost=len(lost),
+                           drained=len(items),
+                           broken_snaps=broken_snaps)
+        return {"locality": locality, "lost": len(lost),
+                "drained": len(items), "broken_snaps": broken_snaps}
+
+    def retire_locality(self, locality: int) -> int:
+        """Planned elastic retire: evacuate every resident page to the
+        surviving active shards (one migration — global names
+        unchanged, so requests never notice) and remove the locality
+        from placement.  Returns pages moved; raises `PageExhausted`
+        (locality left active, nothing committed) when the survivors
+        cannot hold its residents."""
+        pool = self.kvc.pool
+        if not pool.agas.is_active(locality):
+            return 0
+        pool.agas.deactivate(locality)
+        try:
+            moves = pool.plan_evacuation(locality)
+        except PageExhausted:
+            pool.agas.activate(locality)
+            raise
+        moved = self.kvc.migrate(moves) if moves else 0
+        self.trace.instant("engine", "retire_locality",
+                           locality=locality, moved=moved)
+        return moved
+
+    def join_locality(self, locality: int) -> int:
+        """Elastic join (or re-join after a kill/retire): re-admit the
+        locality to placement and rebalance movable pages toward it.
+        Returns pages moved."""
+        pool = self.kvc.pool
+        pool.agas.activate(locality)
+        moves = pool.plan_rebalance(1)
+        moved = self.kvc.migrate(moves) if moves else 0
+        self.trace.instant("engine", "join_locality",
+                           locality=locality, moved=moved)
+        return moved
+
     # -- percolation: offload / restore / prefetch (DESIGN.md §4d) ----
     def _try_restore(self, item: dict) -> bool:
         """Re-admit an offloaded request by promoting its written-back
@@ -1030,6 +1172,7 @@ class PagedServingEngine(_EngineBase):
 
     def _step(self) -> int:
         """One batched decode step over all active slots."""
+        self._check_failure_plan()         # scheduled locality loss
         self._maybe_rebalance()            # between-steps migration
         with self.trace.span("engine", "admit", kind="sched"):
             self._admit()
@@ -1089,6 +1232,8 @@ class PagedServingEngine(_EngineBase):
             if isinstance(v, (int, float)):
                 m.gauge(name).set(v)
         m.counter("engine.preemptions").value = self.preemptions
+        m.counter("engine.re_prefills").value = self.re_prefills
+        m.counter("engine.drained_slots").value = self.drained_slots
         m.counter("engine.prefix_skips").value = self.prefix_skips
         m.counter("engine.prefix_partial_hits").value = \
             self.prefix_partial_hits
@@ -1132,6 +1277,16 @@ class PagedServingEngine(_EngineBase):
             "prefix_skips": self.prefix_skips,
             "prefix_partial_hits": self.prefix_partial_hits,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
+        }
+        # locality-loss recovery (DESIGN.md §4g): what a kill swept,
+        # what a host-tier copy rebuilt, what had to re-prefill
+        out["recovery"] = {
+            "localities_killed": pool.localities_killed,
+            "pages_rebuilt": pool.pages_rebuilt,
+            "pages_lost": pool.pages_lost,
+            "re_prefills": self.re_prefills,
+            "drained_slots": self.drained_slots,
+            "recovery_restarts": self.recovery_budget.restarts,
         }
         # two-tier percolation telemetry (DESIGN.md §4d): offload /
         # promote traffic, prefetch overlap, write-back effectiveness
@@ -1194,7 +1349,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                  tiering: bool = False, host_pages: int = 0,
                  prefix_cache_compute: bool = False,
                  pin_threshold: int = 4, tracer=None,
-                 flight_recorder=False):
+                 flight_recorder=False,
+                 failure_plan: Optional[FailurePlan] = None):
         super().__init__(params, cfg, slots=slots, max_len=max_len,
                          prefill_buckets=prefill_buckets,
                          page_size=page_size, n_pages=n_pages,
@@ -1204,7 +1360,8 @@ class ChunkedPagedServingEngine(PagedServingEngine):
                          prefix_cache_compute=prefix_cache_compute,
                          pin_threshold=pin_threshold,
                          tracer=tracer,
-                         flight_recorder=flight_recorder)
+                         flight_recorder=flight_recorder,
+                         failure_plan=failure_plan)
         if chunk_size is None:
             chunk_size = 2 * page_size
         if chunk_size <= 0 or chunk_size % page_size:
@@ -1456,6 +1613,7 @@ class ChunkedPagedServingEngine(PagedServingEngine):
         budget remains.  A prompt whose final chunk lands this step
         samples its first token now but starts decoding next step, so
         the step never exceeds its token budget."""
+        self._check_failure_plan()         # scheduled locality loss
         self._maybe_rebalance()            # between-steps migration
         with self.trace.span("engine", "admit", kind="sched"):
             self._admit()
@@ -1561,11 +1719,13 @@ class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
             dst = agas.locality_of(anchor)
             if dst >= self.prefill_workers:   # host-tier resident
                 dst = st.get("ploc", 0)
+            if not agas.is_active(dst):       # cached target died (§4g)
+                dst = self._cold_dispatch()
             st.setdefault("pwarm", True)      # attached covered pages
             st["ploc"] = dst
             st["panchor"] = anchor
             return anchor, dst, st["pwarm"]
-        if "ploc" in st:
+        if "ploc" in st and agas.is_active(st["ploc"]):
             return st.get("panchor"), st["ploc"], st["pwarm"]
         anchor = None
         for key in page_keys(st["layout"], pool.page_size):
@@ -1574,17 +1734,29 @@ class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
                 break
             anchor = hit
         warm = anchor is not None \
-            and agas.locality_of(anchor) < self.prefill_workers
+            and agas.locality_of(anchor) < self.prefill_workers \
+            and agas.is_active(agas.locality_of(anchor))
         if warm:
             dst = agas.locality_of(anchor)
         else:
-            # least-loaded prefill worker, lowest locality on ties
-            dst = max(range(self.prefill_workers),
-                      key=lambda l: (agas.free_count(l), -l))
+            dst = self._cold_dispatch()
         st["ploc"] = dst
         st["panchor"] = anchor if warm else None
         st["pwarm"] = warm
         return st["panchor"], dst, warm
+
+    def _cold_dispatch(self) -> int:
+        """Least-loaded ACTIVE prefill worker, lowest locality on
+        ties; when every worker shard is retired (§4g), any surviving
+        active shard — a dead locality must never be a dispatch
+        target, or its parcels' page allocations would raise."""
+        agas = self.kvc.pool.agas
+        cands = [l for l in range(self.prefill_workers)
+                 if agas.is_active(l)]
+        if not cands:
+            cands = [l for l in range(self.kvc.pool.n_shards)
+                     if agas.is_active(l)]
+        return max(cands, key=lambda l: (agas.free_count(l), -l))
 
     def _home_locality(self, slot: int) -> int:
         """The decode locality a slot's handoff lands on (round-robin
@@ -1689,12 +1861,28 @@ class DisaggChunkedServingEngine(ChunkedPagedServingEngine):
 
     # -- lifecycle seams the handoff phase must survive ---------------
     def _step(self) -> int:
+        # the failure plan fires BEFORE staged handoffs commit: a
+        # locality death takes in-flight handoff snapshots with it,
+        # which is exactly the seam the chaos drill must exercise
+        # (the second poll inside super()._step is idempotent)
+        self._check_failure_plan()
         # commit staged handoffs FIRST: a prefill that finished in
         # step N decodes in step N+1, the same cadence the single-
         # locality engine has — with the copy already run under step
         # N's decode batch
         self._decode_role.commit_handoffs(self)
         return super()._step()
+
+    def kill_locality(self, locality: int) -> dict:
+        out = super().kill_locality(locality)
+        # surviving prefill slots re-resolve their dispatch next
+        # chunk: a cached target locality or anchor page may have
+        # died with the shard
+        for st in self.active.values():
+            if st.get("phase") == "prefill":
+                for k in ("ploc", "panchor", "pwarm"):
+                    st.pop(k, None)
+        return out
 
     def _preempt(self, slot: int) -> None:
         st = self.active.get(slot)
@@ -1782,6 +1970,6 @@ def make_engine(params: Any, cfg: ArchConfig, *,
     for k in ("page_size", "n_pages", "chunk_size", "step_tokens",
               "kv_shards", "mesh", "rebalance_tolerance", "tiering",
               "host_pages", "prefix_cache_compute", "pin_threshold",
-              "prefill_workers", "decode_workers"):
+              "prefill_workers", "decode_workers", "failure_plan"):
         kwargs.pop(k, None)
     return DenseServingEngine(params, cfg, **kwargs)

@@ -246,6 +246,10 @@ class PagePool:
         self.shares = 0
         self.cow_copies = 0
         self.page_migrations = 0
+        # recovery counters (DESIGN.md §4g)
+        self.pages_rebuilt = 0       # dead-shard pages restored from a host copy
+        self.pages_lost = 0          # dead-shard pages with no surviving copy
+        self.localities_killed = 0
         self.trace = tracer if tracer is not None else NULL_TRACER
         # canonical migration programs (DESIGN.md §9.4): the flat path
         # pads move lists to power-of-two size classes; the mesh path
@@ -258,8 +262,11 @@ class PagePool:
     @property
     def free_pages(self) -> int:
         # global count: least-loaded-first allocation keeps every shard
-        # reachable, so n free pages really do admit n allocations
-        return self.capacity - len(self._refs)
+        # reachable, so n free pages really do admit n allocations —
+        # summed over ACTIVE shards only, so a retired/dead shard's
+        # empty pool never inflates the admission watermark (§4g)
+        return sum(self.agas.free_count(l)
+                   for l in self.active_shards())
 
     @property
     def used_pages(self) -> int:
@@ -290,6 +297,9 @@ class PagePool:
             "pool.shares": self.shares,
             "pool.cow_copies": self.cow_copies,
             "pool.page_migrations": self.page_migrations,
+            "pool.pages_rebuilt": self.pages_rebuilt,
+            "pool.pages_lost": self.pages_lost,
+            "pool.localities_killed": self.localities_killed,
             **self.prefix.metrics(),
         }
 
@@ -465,6 +475,109 @@ class PagePool:
         self.trace.instant("kvcache", "cow_copy", src_row=src_row,
                            dst_row=dst_row)
 
+    # -- locality failure / elastic membership (DESIGN.md §4g) --------
+    def active_shards(self) -> List[int]:
+        """Device shards currently accepting placement (not retired)."""
+        return [l for l in range(self.n_shards)
+                if self.agas.is_active(l)]
+
+    def note_page_write(self, addr: GlobalAddress) -> None:
+        """Hook: `addr` is about to receive an in-place decode write.
+
+        Decode appends are the ONLY mutation of an existing page
+        (attach/begin_chunk scatter into fresh pages; shared pages get
+        the null row), so this is the one place a retained host-tier
+        copy of a device page goes stale.  Single-tier pools retain no
+        copies — no-op; the tiered pool invalidates its shadow."""
+
+    def _rebuild_page(self, addr: GlobalAddress) -> bool:
+        """Try to rebuild a dead locality's page on a surviving shard.
+        The untiered pool holds no second copy of anything: False —
+        the page is lost and its request re-prefills."""
+        return False
+
+    def _forget_dead_page(self, gid: int) -> None:
+        """Hook: tier/staging bookkeeping for a page lost with its
+        locality (the tiered pool drops any staged copy)."""
+
+    def _drop_cold(self, gid: int) -> None:
+        # refcount-0 residents only exist under the tiered pool's
+        # cold-retention policy; the base pool frees at zero
+        raise AssertionError(
+            f"refcount-0 resident {gid} in an untiered pool")
+
+    def kill_locality(self, locality: int) -> set:
+        """Simulate the loss of one device shard (DESIGN.md §4g).
+
+        The AGAS directory retires the locality — allocation,
+        migration targets and least-loaded placement skip it until a
+        later `activate` re-joins it — and every page homed there is
+        swept: cold-retained prefix pages are dropped (nobody holds
+        them), referenced pages are rebuilt on a surviving shard when
+        a host-tier copy exists (`_rebuild_page`, tiered pools), and
+        the rest are LOST — purged from the prefix index through
+        `_purge_index` and freed.  Returns the lost gids: the serving
+        engine drains every slot/snapshot referencing one and
+        re-admits its request for re-prefill.  Block tables are NOT
+        touched here; callers must drain and then `refresh_tables`.
+        """
+        if not 0 <= locality < self.n_shards:
+            raise ValueError(f"no device shard {locality}")
+        if not self.agas.is_active(locality):
+            return set()
+        self.agas.deactivate(locality)
+        self.localities_killed += 1
+        lost: set = set()
+        rebuilt = 0
+        for gid in sorted(self.agas.residents(locality)):
+            if not self.agas.resident_on(gid, locality):
+                continue      # a rebuild's own eviction moved/dropped it
+            addr = GlobalAddress(gid, self.agas.space)
+            if self._refs.get(gid, 0) == 0:
+                self._drop_cold(gid)
+                continue
+            if self._rebuild_page(addr):
+                rebuilt += 1
+                continue
+            del self._refs[gid]
+            self._purge_index(gid)
+            self._forget_dead_page(gid)
+            self.agas.free(addr)
+            lost.add(gid)
+        self.pages_rebuilt += rebuilt
+        self.pages_lost += len(lost)
+        self.trace.instant("kvcache", "kill_locality",
+                           locality=locality, rebuilt=rebuilt,
+                           lost=len(lost))
+        return lost
+
+    def plan_evacuation(self, locality: int
+                        ) -> Dict[GlobalAddress, int]:
+        """Every resident page off `locality` (planned retire).
+
+        Unlike `plan_rebalance`, refcounts don't gate movability — a
+        retiring shard takes everything with it, so everything must
+        move (block tables are one `refresh_tables` away either way).
+        Raises `PageExhausted` when the surviving active shards cannot
+        hold the residents; nothing is committed in that case.
+        """
+        dsts = [l for l in self.active_shards() if l != locality]
+        if not dsts:
+            raise PageExhausted(
+                f"cannot retire locality {locality}: no surviving "
+                f"active shard")
+        free = {l: self.agas.free_count(l) for l in dsts}
+        moves: Dict[GlobalAddress, int] = {}
+        for gid in sorted(self.agas.residents(locality)):
+            dst = max(dsts, key=lambda l: (free[l], -l))
+            if free[dst] <= 0:
+                raise PageExhausted(
+                    f"cannot retire locality {locality}: surviving "
+                    f"shards have no free rows")
+            moves[GlobalAddress(gid, self.agas.space)] = dst
+            free[dst] -= 1
+        return moves
+
     # -- inter-shard page migration (DESIGN.md §4c) -------------------
     def plan_rebalance(self, tolerance: int
                        ) -> Dict[GlobalAddress, int]:
@@ -474,17 +587,23 @@ class PagePool:
         page stays pinned to its owner, so every block table pointing
         at it stays one refresh away from consistency.  Moves are
         simulated in commit (gid) order against the per-shard free
-        lists, so the returned dict is always feasible.
+        lists, so the returned dict is always feasible.  Retired
+        shards (§4g) neither donate nor receive — a dead shard's empty
+        pool must not read as "the emptiest target".
         """
-        used = self.shard_used()
-        free = [self.pages_per_shard - u for u in used]
+        act = self.active_shards()
+        if len(act) < 2:
+            return {}
+        all_used = self.shard_used()
+        used = {l: all_used[l] for l in act}
+        free = {l: self.pages_per_shard - used[l] for l in act}
         movable = {l: sorted(g for g in self.agas.residents(l)
                              if self._refs.get(g, 0) == 1)
-                   for l in range(self.n_shards)}
+                   for l in act}
         moves: Dict[GlobalAddress, int] = {}
         while True:
-            hi = int(np.argmax(used))
-            lo = int(np.argmin(used))
+            hi = max(act, key=lambda l: (used[l], -l))
+            lo = min(act, key=lambda l: (used[l], l))
             if used[hi] - used[lo] <= max(int(tolerance), 1):
                 break
             if free[lo] <= 0 or not movable[hi]:
@@ -498,20 +617,24 @@ class PagePool:
         return moves
 
     def plan_rotation(self) -> Dict[GlobalAddress, int]:
-        """Every movable page to the next shard (round-robin): the
-        forced-migration drill that verifies a page's global name — and
-        therefore every request's output — survives relocation.
+        """Every movable page to the next ACTIVE shard (round-robin):
+        the forced-migration drill that verifies a page's global name —
+        and therefore every request's output — survives relocation.
         Feasibility is simulated in gid order, matching the order
         `migration_plan` commits moves in."""
-        free = [self.pages_per_shard - u for u in self.shard_used()]
+        act = self.active_shards()
+        if len(act) < 2:
+            return {}
+        nxt = {l: act[(i + 1) % len(act)] for i, l in enumerate(act)}
+        all_used = self.shard_used()
+        free = {l: self.pages_per_shard - all_used[l] for l in act}
         moves: Dict[GlobalAddress, int] = {}
-        where = {g: l for l in range(self.n_shards)
-                 for g in self.agas.residents(l)}
+        where = {g: l for l in act for g in self.agas.residents(l)}
         for gid in sorted(where):
             if self._refs.get(gid, 0) != 1:
                 continue
             src = where[gid]
-            dst = (src + 1) % self.n_shards
+            dst = nxt[src]
             if dst == src or free[dst] <= 0:
                 continue
             moves[GlobalAddress(gid, self.agas.space)] = dst
@@ -990,9 +1113,13 @@ class PagedKVCache:
                     # to.  Soft: an exhausted preferred shard falls
                     # back to the default least-loaded policy rather
                     # than preempting while other shards have room.
+                    # a retired hint (§4g) falls back too: allocating
+                    # on a dead shard would raise, and the resulting
+                    # PageExhausted would read as pool pressure
                     loc = locality
-                    if loc is not None and \
-                            self.pool.agas.free_count(loc) == 0:
+                    if loc is not None and (
+                            not self.pool.agas.is_active(loc)
+                            or self.pool.agas.free_count(loc) == 0):
                         loc = None
                     addr = self.pool.alloc(loc)
                     self.pool.register_prefix(key, addr, parent=prev)
@@ -1046,6 +1173,9 @@ class PagedKVCache:
                 self.pool.decref(addr)
                 st.addrs[page_idx] = fresh
                 addr = fresh
+        # the write target mutates in place: any retained host-tier
+        # copy of it is stale from here on (DESIGN.md §4g)
+        self.pool.note_page_write(addr)
         row = self.pool.row(addr)
         self.tables[slot, page_idx] = row
         self.write_rows[slot] = row
@@ -1073,6 +1203,30 @@ class PagedKVCache:
                                gids=[a.gid for a in st.addrs])
         for a in st.addrs:
             self.pool.decref(a)
+        st.addrs = []
+        st.length = 0
+        st.chain = None
+        null = self.pool.null_row
+        self.tables[slot, :] = null
+        self.lengths[slot] = 0
+        self.write_rows[slot] = null
+        self.write_offs[slot] = 0
+
+    def drain_slot(self, slot: int, lost: set) -> None:
+        """Release a slot some of whose pages died with their locality
+        (DESIGN.md §4g): surviving pages decref normally; lost gids
+        were already swept out of the pool by `kill_locality`, so the
+        refcount this slot held on them died with the page and must
+        NOT be returned again.  The slot is left empty for
+        re-admission (its request re-prefills from the retained
+        prompt + generated tokens)."""
+        st = self._state[slot]
+        if self.trace.enabled and st.addrs:
+            self.trace.instant("kvcache", "drain_slot", slot=slot,
+                               gids=[a.gid for a in st.addrs])
+        for a in st.addrs:
+            if a.gid not in lost:
+                self.pool.decref(a)
         st.addrs = []
         st.length = 0
         st.chain = None
@@ -1200,12 +1354,16 @@ class PagedKVCache:
         for i, a in enumerate(st.addrs):
             self.tables[slot, i] = self.pool.row(a)
 
-    def drop_snapshot(self, snap: KVSnapshot) -> None:
+    def drop_snapshot(self, snap: KVSnapshot,
+                      lost: Optional[set] = None) -> None:
         """Release a snapshot's refcounts (its request finished or
         failed while still queued) — host-resident pages free their
-        host rows; prefix-owned ones may be retained cold."""
+        host rows; prefix-owned ones may be retained cold.  `lost`
+        (a dead locality's swept gids, §4g) are skipped: the refcount
+        the snapshot held on them died with the page."""
         for a in snap.addrs:
-            self.pool.decref(a)
+            if lost is None or a.gid not in lost:
+                self.pool.decref(a)
         snap.addrs = []
 
     def prefetch_chunk(self, slot: int, tokens: np.ndarray,

@@ -125,6 +125,13 @@ class TieredPagePool(PagePool):
         # LRU of retained refcount-0 pages (gid -> None, oldest first);
         # residency (device vs host) is the directory's to answer
         self._cold: Dict[int, None] = {}
+        # gid -> {"k","v"} host copies of device-resident pages that
+        # percolated through the host tier (DESIGN.md §4g): captured at
+        # promotion commit, invalidated by the page's next in-place
+        # decode write (`note_page_write`) and dropped with the page
+        # (`_purge_index`) — so a surviving shadow always equals the
+        # device bytes, and a locality kill rebuilds from it
+        self._host_shadow: Dict[int, Dict[str, np.ndarray]] = {}
         self.evictions = 0       # cold pages demoted under pressure
         self.cold_drops = 0      # retained pages dropped entirely
         self.offloaded = 0       # pages written back at preemption
@@ -146,8 +153,10 @@ class TieredPagePool(PagePool):
     # -- accounting (per tier) ----------------------------------------
     @property
     def device_free_rows(self) -> int:
+        # active shards only: a dead shard's freed rows are not
+        # allocatable, so they must not inflate the admission signal
         return sum(self.agas.free_count(l)
-                   for l in range(self.n_shards))
+                   for l in self.active_shards())
 
     @property
     def host_free_rows(self) -> int:
@@ -184,6 +193,12 @@ class TieredPagePool(PagePool):
     # page_bytes comes from PagePool (handoffs need it untiered too)
 
     # -- refcount lifecycle: retention + revival ----------------------
+    def _purge_index(self, gid: int) -> None:
+        # a departing page's host shadow dies with its index entry —
+        # same funnel, same atomicity guarantee (§4g)
+        self._host_shadow.pop(gid, None)
+        super()._purge_index(gid)
+
     def refcount(self, addr: GlobalAddress) -> int:
         return self._refs.get(addr.gid, 0)      # cold pages answer 0
 
@@ -446,6 +461,14 @@ class TieredPagePool(PagePool):
         else:
             payload = {nm: jax.device_put(a) for nm, a in
                        self._host_payload(todo, pad).items()}
+        # §4g: retain each promoted page's host bytes as its shadow —
+        # the copy a later locality kill rebuilds from.  Captured from
+        # the host rows (byte-identical to any staged payload) BEFORE
+        # the directory migrates the pages off the host tier.
+        for a in todo:
+            hs = self.host_slot(a)
+            self._host_shadow[a.gid] = {
+                nm: self.host[nm][:, hs].copy() for nm in ("k", "v")}
         for a in todo:
             self._device_row_for(a)
         rows = [self.row(a) for a in todo]
@@ -491,6 +514,65 @@ class TieredPagePool(PagePool):
             self.promote_pages([addr], staged_key=("page", addr.gid))
         else:
             self.xfer.drop(("page", addr.gid))
+
+    # -- locality failure: host shadows + rebuild (DESIGN.md §4g) -----
+    def note_page_write(self, addr: GlobalAddress) -> None:
+        """An in-place decode write is landing on `addr`: its host
+        shadow (if any) is stale from here on.  The page can only be
+        re-shadowed by percolating through the host tier again (the
+        next demote writes fresh host bytes; the next promote
+        recaptures them)."""
+        self._host_shadow.pop(addr.gid, None)
+
+    def _forget_dead_page(self, gid: int) -> None:
+        # gids never recycle, but a stale per-page staging entry would
+        # clog the transfer double buffer forever
+        self.xfer.drop(("page", gid))
+
+    def _rebuild_page(self, addr: GlobalAddress) -> bool:
+        """Rebuild a dead shard's page from its host-tier shadow.
+
+        The AGAS name migrates to a surviving device shard (evicting
+        cold pages if needed) and the shadow bytes are scattered into
+        the new row — every block table referencing the page is one
+        `refresh_tables` away from consistency, and the content is
+        byte-identical because shadows are invalidated on in-place
+        writes.  False when no shadow exists (the content died with
+        the shard) or no surviving device row can be made.
+        """
+        shadow = self._host_shadow.get(addr.gid)
+        if shadow is None:
+            return False
+        try:
+            self._device_row_for(addr)
+        except PageExhausted:
+            return False
+        pad = canon_batch(1)
+        rows = [self.row(addr)] + [self.null_row] * (pad - 1)
+        payload = {}
+        for nm in ("k", "v"):
+            span = shadow[nm][:, None]
+            if pad > 1:
+                w = [(0, 0)] * span.ndim
+                w[1] = (0, pad - 1)
+                span = np.pad(span, w)
+            payload[nm] = jax.device_put(span)
+        if self.sharded:
+            loc, slot = self._split_rows(rows)
+            loc, slot = jnp.asarray(loc), jnp.asarray(slot)
+            self.pages["k"] = _scatter_rows_sharded(
+                self.pages["k"], loc, slot, payload["k"])
+            self.pages["v"] = _scatter_rows_sharded(
+                self.pages["v"], loc, slot, payload["v"])
+        else:
+            idx = jnp.asarray(rows, jnp.int32)
+            self.pages["k"] = _scatter_rows(self.pages["k"], idx,
+                                            payload["k"])
+            self.pages["v"] = _scatter_rows(self.pages["v"], idx,
+                                            payload["v"])
+        self.trace.instant("kvcache", "page_rebuilt", gid=addr.gid,
+                           dst=self.agas.locality_of(addr))
+        return True
 
     # -- cost model for admission -------------------------------------
     def page_cost(self, key: Tuple[bytes, int]) -> int:
@@ -548,6 +630,7 @@ class TieredPagePool(PagePool):
             "tier.cold_drops": self.cold_drops,
             "tier.offloaded_pages": self.offloaded,
             "tier.promoted_pages": self.promoted,
+            "tier.host_shadows": len(self._host_shadow),
         })
         m.update(self.xfer.queue.metrics())
         return m

@@ -3,8 +3,9 @@
 A trace machine drives random request traces — mixed prompt lengths
 sharing real-token heads (the mixed-length prefix sharing the radix
 index exists for), staggered arrivals, forced preemptions /
-migrations / demotions / mid-prefill KV handoffs — through the
-chunked engine under a randomly chosen
+migrations / demotions / mid-prefill KV handoffs / locality kills
+and elastic re-joins (§4g chaos) — through the chunked engine under
+a randomly chosen
 ``(kv_shards, tiering, prefix_cache_compute, disagg)`` configuration,
 and asserts greedy token-identity against an ample-pool
 single-locality reference after EVERY completion.  Hand-written parity tests cover
@@ -138,6 +139,13 @@ class EngineTrace:
             # a previous failing trace left work behind; reclaim so
             # this trace starts clean (pages released, LCOs errored)
             self.eng._fail_pending(RuntimeError("fuzz trace reset"))
+        pool = self.eng.kvc.pool
+        for loc in range(pool.n_shards):
+            if not pool.agas.is_active(loc):
+                # a previous trace's kill left the shard retired;
+                # elastic re-join so every trace starts full-strength
+                self.eng.join_locality(loc)
+        self.eng.recovery_budget.restarts = 0
         self.eng.completions.clear()
         self.expected = {}           # rid -> (future, ref tokens)
         self.checked = 0
@@ -179,6 +187,25 @@ class EngineTrace:
         if hasattr(self.eng, "force_handoff"):
             self.eng.force_handoff()
 
+    def kill(self):
+        """Kill the highest active shard (§4g locality loss) with
+        whatever is in flight — staged handoffs, offloaded snapshots,
+        mid-prefill chunks included.  Every affected request must
+        still finish token-identically via rebuild or re-prefill."""
+        act = self.eng.kvc.pool.active_shards()
+        if len(act) > 1:
+            self.eng.kill_locality(act[-1])
+        self._check()
+
+    def join(self):
+        """Elastically re-join the lowest retired shard (§4g)."""
+        pool = self.eng.kvc.pool
+        dead = [loc for loc in range(pool.n_shards)
+                if not pool.agas.is_active(loc)]
+        if dead:
+            self.eng.join_locality(dead[0])
+        self._check()
+
     def _check(self):
         for c in self.eng.completions[self.checked:]:
             if c.rid not in self.expected:
@@ -210,7 +237,7 @@ def test_trace_machine_deterministic(config_idx):
     for _ in range(14):
         op = rng.choice(["submit", "submit", "submit", "step",
                          "step", "preempt", "migrate", "demote",
-                         "handoff"])
+                         "handoff", "kill", "join"])
         if op == "submit":
             t.submit(int(rng.integers(len(PREFIX_LENS))),
                      int(rng.choice(TAIL_LENS)),
@@ -224,6 +251,10 @@ def test_trace_machine_deterministic(config_idx):
             t.migrate()
         elif op == "handoff":
             t.handoff()
+        elif op == "kill":
+            t.kill()
+        elif op == "join":
+            t.join()
         else:
             t.demote()
     t.drain()
@@ -284,6 +315,16 @@ if HAVE_HYPOTHESIS:
         @rule()
         def force_handoff(self):
             self.t.handoff()
+
+        @precondition(lambda self: self.t is not None)
+        @rule()
+        def kill_locality(self):
+            self.t.kill()
+
+        @precondition(lambda self: self.t is not None)
+        @rule()
+        def join_locality(self):
+            self.t.join()
 
         def teardown(self):
             if self.t is not None:

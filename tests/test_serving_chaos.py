@@ -1,0 +1,310 @@
+"""Locality loss and recovery in the serving stack (DESIGN.md §4g).
+
+The resilience contract under test: killing a KV shard with requests
+in flight loses NO request and changes NO token.  Pages with a
+host-tier percolation copy are rebuilt on a surviving shard; pages
+without one are lost and their requests drained — re-admitted at the
+queue front with generated tokens retained, futures left pending —
+and re-prefilled (position-normalized layouts make the replay exact).
+Elastic membership rides the same machinery: a planned retire
+evacuates instead of losing, a join re-admits the shard and
+rebalances toward it.
+
+Also here: the failure-path regression tests this PR's chaos audit
+produced — a kill racing the covered-prefix window between
+`covered_prefix` and `attach_covered` (the purged-index walk must
+raise, never hand back freed pages), and a kill landing on a staged
+prefill->decode handoff snapshot (drain must skip the dead pages'
+refcounts, not double-return them).
+
+Hypothesis-free by design: `tools/assert_no_skips.py` lists this
+module, so every test here must run everywhere.
+"""
+
+from functools import lru_cache
+
+import numpy as np
+import pytest
+import jax
+
+import repro.configs as configs
+from repro.core.agas import AGAS, AGASError
+from repro.core.localities import LocalityDomain
+from repro.ft.failures import FailurePlan, InjectedFailure
+from repro.ft.supervisor import RecoveryBudget
+from repro.models import transformer as T
+from repro.serving.engine import Request, make_engine
+from repro.serving.kvcache import PageExhausted
+
+SLOTS = 3
+MAX_LEN = 96
+PAGE = 16
+CHUNK = 32
+MAX_NEW = 6
+
+
+@lru_cache(maxsize=1)
+def _setup():
+    cfg = configs.get_reduced("yi-6b")
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(**kw):
+    cfg, params = _setup()
+    base = dict(engine="chunked", slots=SLOTS, max_len=MAX_LEN,
+                prefill_buckets=(32,), page_size=PAGE,
+                chunk_size=CHUNK)
+    base.update(kw)
+    return make_engine(params, cfg, **base)
+
+
+@lru_cache(maxsize=1)
+def _prompts():
+    """Four mixed-length prompts behind one shared 16-token head (a
+    shared page, so prefix sharing is part of the chaos surface)."""
+    cfg, _ = _setup()
+    rng = np.random.default_rng(5)
+    head = rng.integers(0, cfg.vocab_size, size=16)
+    out = []
+    for i in range(4):
+        tail = rng.integers(0, cfg.vocab_size, size=8 + 4 * i)
+        out.append(np.concatenate([head, tail]).astype(np.int32))
+    return tuple(out)
+
+
+@lru_cache(maxsize=1)
+def _reference():
+    """Failure-free ample-pool single-shard greedy tokens per prompt
+    index — the ground truth every chaos schedule must reproduce."""
+    eng = _engine(n_pages=24)
+    futs = [eng.submit(Request(100 + i, p, max_new_tokens=MAX_NEW))
+            for i, p in enumerate(_prompts())]
+    eng.run_to_completion()
+    return {i: f.get().tokens for i, f in enumerate(futs)}
+
+
+# -- the trigger and the budget ----------------------------------------
+
+def test_failure_plan_kill_trigger_fires_once():
+    plan = FailurePlan.kill_locality(1, at_step=3)
+    killed = set()
+    assert plan.shard_to_kill(2, killed) is None
+    assert plan.shard_to_kill(3, killed) == 1
+    assert plan.shard_to_kill(3, killed) is None     # once per pair
+    # serving kills never raise: check() is the training-side trigger
+    plan.check(3, set())
+
+
+def test_recovery_budget_exhaustion():
+    budget = RecoveryBudget(max_restarts=2)
+    budget.spend("locality 1 loss")
+    budget.spend("locality 0 loss")
+    with pytest.raises(InjectedFailure, match="budget exhausted"):
+        budget.spend("locality 1 loss")
+
+
+# -- AGAS locality lifecycle -------------------------------------------
+
+def test_agas_locality_lifecycle():
+    agas = AGAS(LocalityDomain.simulated(2), 4)
+    held = agas.allocate(1)
+    agas.deactivate(1)
+    assert not agas.is_active(1)
+    with pytest.raises(AGASError, match="retired"):
+        agas.allocate(1)
+    assert agas.least_loaded() == 0          # placement skips retired
+    other = agas.allocate(0)
+    with pytest.raises(AGASError, match="retired"):
+        agas.migrate(other, 1)
+    # a kill sweep can still return slots to a retired pool, and a
+    # later join finds the free list intact — no directory rebuild
+    agas.free(held)
+    assert agas.resident_on(other.gid, 0)
+    assert not agas.resident_on(held.gid, 1)        # freed -> dangling
+    agas.activate(1)
+    assert agas.allocate(1).gid != held.gid
+
+
+def test_agas_least_loaded_raises_when_tier_is_dead():
+    agas = AGAS(LocalityDomain.simulated(2), 4)
+    agas.deactivate(0)
+    agas.deactivate(1)
+    with pytest.raises(AGASError, match="no active locality"):
+        agas.least_loaded(tier=0)
+
+
+# -- kill mid-wave: drain + re-prefill (no host tier) ------------------
+
+def test_kill_mid_wave_untiered_token_identity():
+    ref = _reference()
+    eng = _engine(kv_shards=2, n_pages=12)
+    futs = [eng.submit(Request(200 + i, p, max_new_tokens=MAX_NEW))
+            for i, p in enumerate(_prompts())]
+    for _ in range(3):
+        eng.step()
+    assert eng.active                    # the kill lands mid-wave
+    eng.kill_locality(1)
+    eng.run_to_completion()
+    for i, fut in enumerate(futs):
+        assert fut.get().tokens == ref[i]
+    rec = eng.stats()["recovery"]
+    assert rec["localities_killed"] == 1
+    assert rec["pages_lost"] > 0         # untiered: nothing to rebuild
+    assert rec["pages_rebuilt"] == 0
+    assert rec["drained_slots"] > 0
+    assert rec["re_prefills"] >= rec["drained_slots"]
+    assert rec["recovery_restarts"] == 1
+    assert eng.kvc.pool.used_pages == 0
+
+
+def test_failure_plan_fires_through_step_disagg_tiered():
+    """The full §4g stack: disagg + tiering + 2 shards, the kill
+    scheduled through the engine's failure plan instead of called by
+    hand — the serve_bench --chaos composition in miniature."""
+    ref = _reference()
+    eng = _engine(kv_shards=2, n_pages=12, tiering=True, host_pages=48,
+                  disagg=True,
+                  failure_plan=FailurePlan.kill_locality(1, at_step=2))
+    futs = [eng.submit(Request(250 + i, p, max_new_tokens=MAX_NEW))
+            for i, p in enumerate(_prompts())]
+    eng.run_to_completion()
+    for i, fut in enumerate(futs):
+        assert fut.get().tokens == ref[i]
+    rec = eng.stats()["recovery"]
+    assert rec["localities_killed"] == 1
+    assert rec["recovery_restarts"] == 1
+    assert eng.kvc.pool.used_pages == 0
+
+
+# -- host-tier rebuild: the percolation copy pays off -------------------
+
+def test_tiered_kill_rebuilds_from_host_shadow():
+    """A page that percolated through the host tier leaves a shadow
+    copy; killing its shard rebuilds it on a survivor byte-identically
+    instead of re-prefilling its request."""
+    ref = _reference()
+    eng = _engine(kv_shards=2, n_pages=12, tiering=True, host_pages=48)
+    fut = eng.submit(Request(300, _prompts()[0],
+                             max_new_tokens=MAX_NEW))
+    for _ in range(2):
+        eng.step()
+    assert eng.active
+    slot = next(iter(eng.active))
+    eng._preempt(slot)                   # KV written back to host
+    assert eng.offloads == 1
+    for _ in range(10):                  # restore promotes the pages
+        eng.step()                       # back (capturing shadows)
+        if eng.restores:
+            break
+    assert eng.restores == 1
+    slot = next(iter(eng.active))
+    addrs = eng.kvc._state[slot].addrs
+    victim = eng.kvc.pool.agas.locality_of(addrs[0])
+    eng.kill_locality(victim)
+    eng.run_to_completion()
+    assert fut.get().tokens == ref[0]
+    rec = eng.stats()["recovery"]
+    assert rec["pages_rebuilt"] > 0      # the shadow was used
+    assert eng.kvc.pool.used_pages == 0
+
+
+# -- staged-handoff drop path (this PR's chaos-audit repro) ------------
+
+def test_kill_during_staged_handoff_drains_cleanly():
+    """A locality dies while prefill->decode handoff snapshots are
+    staged on the percolation queue.  The drained snapshot's refcounts
+    on LOST pages died with the pages — returning them again would
+    corrupt the pool — while surviving pages must still be decref'd
+    exactly once.  Requests finish token-identically; the pool drains
+    to zero."""
+    ref = _reference()
+    # 16-token chunks: every prompt spans several chunks, so slots
+    # are reliably mid-prefill when the drill stages handoffs
+    eng = _engine(kv_shards=2, n_pages=12, disagg=True, chunk_size=16)
+    futs = [eng.submit(Request(400 + i, p, max_new_tokens=MAX_NEW))
+            for i, p in enumerate(_prompts()[:3])]
+    staged = None
+    for _ in range(20):
+        eng.step()
+        if eng.force_handoff():          # stage mid-prefill handoffs
+            staged = next(s for s, st in eng.active.items()
+                          if st.get("phase") == "handoff")
+            break
+    assert staged is not None, "no prefilling slot to stage"
+    snap = eng.active[staged]["snap"]
+    victim = eng.kvc.pool.agas.locality_of(snap.addrs[0])
+    eng.kill_locality(victim)
+    assert "snap" not in eng.active.get(staged, {})
+    eng.run_to_completion()
+    for i, fut in enumerate(futs):
+        assert fut.get().tokens == ref[i]
+    assert eng.kvc.pool.used_pages == 0
+
+
+# -- covered-prefix vs a dying owner (this PR's chaos-audit repro) -----
+
+def test_kill_between_cover_lookup_and_attach():
+    """`covered_prefix` computes a cover, the owner shard dies, and
+    only then does `attach_covered` run.  The kill purges every swept
+    page through `_purge_index`, so the attach's re-probe must miss
+    and raise `PageExhausted` — handing back a freed page would serve
+    another request's (or garbage) KV."""
+    eng = _engine(kv_shards=2, n_pages=12, tiering=True, host_pages=48,
+                  prefix_cache_compute=True)
+    prompt = _prompts()[0]
+    fut = eng.submit(Request(500, prompt, max_new_tokens=MAX_NEW))
+    eng.run_to_completion()
+    want = fut.get().tokens
+    kvc = eng.kvc
+    layout = np.asarray(prompt, np.int32)
+    cov = kvc.covered_prefix(layout)
+    assert cov.covered > 0               # retained-cold prefix pages
+    owner = kvc.pool.agas.locality_of(
+        kvc.pool.lookup_prefix(cov.keys[0]))
+    used = kvc.pool.used_pages
+    kvc.pool.kill_locality(owner)        # the race window closes here
+    slot = eng.free_slots[0]
+    with pytest.raises(PageExhausted):
+        kvc.attach_covered(slot, layout, cov.keys)
+    assert not kvc._state[slot].addrs    # rollback left nothing bound
+    assert kvc.pool.used_pages == used   # and leaked no refcount
+    # the engine still serves the same prompt identically afterwards
+    eng.join_locality(owner)
+    fut2 = eng.submit(Request(501, prompt, max_new_tokens=MAX_NEW))
+    eng.run_to_completion()
+    assert fut2.get().tokens == want
+    assert eng.kvc.pool.used_pages == 0
+
+
+# -- elastic membership: planned retire / join --------------------------
+
+def test_elastic_retire_and_join_token_identity():
+    ref = _reference()
+    eng = _engine(kv_shards=2, n_pages=24)
+    futs = [eng.submit(Request(600 + i, p, max_new_tokens=MAX_NEW))
+            for i, p in enumerate(_prompts())]
+    eng.step()
+    eng.step()
+    assert eng.active
+    eng.retire_locality(1)               # planned: evacuate, lose none
+    assert not eng.kvc.pool.agas.is_active(1)
+    assert eng.kvc.pool.shard_used()[1] == 0
+    eng.step()
+    moved_back = eng.join_locality(1)    # rebalance toward the joiner
+    assert eng.kvc.pool.agas.is_active(1)
+    assert moved_back > 0
+    eng.run_to_completion()
+    for i, fut in enumerate(futs):
+        assert fut.get().tokens == ref[i]
+    rec = eng.stats()["recovery"]
+    assert rec["pages_lost"] == 0        # elastic, not lossy
+    assert rec["drained_slots"] == 0
+    assert eng.kvc.pool.used_pages == 0
+
+
+def test_retire_sole_survivor_refuses():
+    eng = _engine(kv_shards=2, n_pages=12)
+    eng.retire_locality(1)
+    with pytest.raises(PageExhausted, match="no surviving"):
+        eng.retire_locality(0)
+    assert eng.kvc.pool.agas.is_active(0)    # nothing committed
